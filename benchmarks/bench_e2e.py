@@ -1,0 +1,171 @@
+"""Figures 11/12/13: end-to-end Mooncake vs coupled-vLLM throughput under
+TTFT/TBT SLOs.
+
+  * Fig 11 — public-dataset-shaped workloads (ArXiv-Summarization-like:
+    ~8k in/229 out, no reuse; L-Eval-like: ~19k in/72 out, >80% reuse),
+    Poisson arrivals, Mooncake-[3P+1D]/[2P+2D] vs vLLM-[4M].
+  * Fig 12 — simulated data (16k/32k/64k/128k inputs, 50% cache ratio):
+    max sustainable RPS under both SLOs.
+  * Fig 13 — real-trace replay at scale, Mooncake-[10P+10D] vs vLLM-[20M]:
+    TTFT/TBT CDF points + the +X% capacity headline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.simulator import CoupledCluster, MooncakeCluster
+from repro.core.trace import TraceSpec, generate_trace, simulated_requests
+
+CFG = get_config("llama2-70b")
+TTFT_SLO, TBT_SLO = 30.0, 0.1   # fixed SLOs for the real-trace replay
+
+
+def _slos_for(input_len: int, cache_ratio: float):
+    """§2/§8.1: thresholds = 10× / 5× the unloaded single-request values
+    (TTFT_P90 = 10×, TBT_P90 = 5×)."""
+    from repro.core.costmodel import CostModel, InstanceSpec
+    cm = CostModel(CFG, InstanceSpec())
+    ttft1 = cm.prefill_time(input_len, int(input_len * cache_ratio))
+    tbt1 = cm.decode_iter_time(1, input_len)
+    return 10.0 * ttft1, 5.0 * tbt1
+
+
+def _dataset_like(n, avg_in, avg_out, cache_ratio, rps, seed=0):
+    """Poisson arrivals with dataset-shaped lengths."""
+    reqs = simulated_requests(n, avg_in, avg_out,
+                              cache_ratio=cache_ratio, rps=rps, seed=seed)
+    return reqs
+
+
+def _max_rps(make_cluster, reqs_at, slos, lo=0.02, hi=8.0, iters=8):
+    """Binary-search the highest RPS with ≥90% of requests meeting BOTH
+    SLOs (the paper's 'throughput while satisfying SLOs')."""
+    ttft_slo, tbt_slo = slos
+    best = 0.0
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        res = make_cluster(ttft_slo, tbt_slo).run(reqs_at(mid))
+        t_ok, b_ok = res.slo_attainment(ttft_slo, tbt_slo)
+        frac_done = len(res.completed()) / len(res.records)
+        if min(t_ok, b_ok) >= 0.9 and frac_done >= 0.9:
+            best, lo = mid, mid
+        else:
+            hi = mid
+    return best
+
+
+def fig11(fast: bool) -> list[dict]:
+    n = 80 if fast else 200
+    rows = []
+    datasets = [("arxiv_sum", 8088, 229, 0.0), ("l_eval", 19019, 72, 0.8)]
+    clusters = [
+        ("mooncake_3P1D", lambda t, b: MooncakeCluster(
+            CFG, n_prefill=3, n_decode=1, ttft_slo=t, tbt_slo=b)),
+        ("mooncake_2P2D", lambda t, b: MooncakeCluster(
+            CFG, n_prefill=2, n_decode=2, ttft_slo=t, tbt_slo=b)),
+        ("vllm_4M", lambda t, b: CoupledCluster(CFG, n_instances=4)),
+    ]
+    for ds, avg_in, avg_out, cache in datasets:
+        slos = _slos_for(avg_in, cache)
+        base = None
+        for name, mk in clusters:
+            rps = _max_rps(mk, lambda r: _dataset_like(
+                n, avg_in, avg_out, cache, r), slos)
+            if name == "vllm_4M":
+                base = rps
+            rows.append(dict(dataset=ds, cluster=name,
+                             ttft_slo_s=round(slos[0], 2),
+                             max_rps_under_slo=round(rps, 3)))
+        for r in rows:
+            if r["dataset"] == ds and base:
+                r["vs_vllm_pct"] = round(
+                    100 * (r["max_rps_under_slo"] / base - 1), 1)
+    return rows
+
+
+def fig12(fast: bool) -> list[dict]:
+    """§8.1.2: 'the long-context requests in simulated data significantly
+    disrupt the decoding stage of vLLM. To counteract this, vLLM processes
+    requests individually, rather than in batches' — the baseline runs
+    max_batch=1 exactly as the paper configures it; Mooncake keeps full
+    continuous batching because disaggregation isolates decode from the
+    long prefills."""
+    n = 60 if fast else 150
+    rows = []
+    lengths = (16384, 32768) if fast else (16384, 32768, 65536, 131072)
+    for L in lengths:
+        slos = _slos_for(L, 0.5)
+        mk_mc = lambda t, b: MooncakeCluster(CFG, n_prefill=2, n_decode=2,
+                                             ttft_slo=t, tbt_slo=b)
+        mk_vl = lambda t, b: CoupledCluster(CFG, n_instances=4, max_batch=1)
+        reqs_at = lambda r, L=L: simulated_requests(
+            n, L, 512, cache_ratio=0.5, rps=r)
+        rps_mc = _max_rps(mk_mc, reqs_at, slos)
+        rps_vl = _max_rps(mk_vl, reqs_at, slos)
+        rows.append(dict(input_len=L,
+                         ttft_slo_s=round(slos[0], 2),
+                         tbt_slo_ms=round(slos[1] * 1e3, 1),
+                         mooncake_2P2D_rps=round(rps_mc, 3),
+                         vllm_4M_rps=round(rps_vl, 3),
+                         gain_pct=round(100 * (rps_mc / max(rps_vl, 1e-6) - 1),
+                                        1)))
+    return rows
+
+
+def fig13(fast: bool) -> list[dict]:
+    """Real-trace replay at increasing speed (10P+10D vs 20M): the paper's
+    +75% claim = the extra request volume Mooncake absorbs within SLOs.
+    Measured as GOODPUT (fully-completed requests meeting both SLOs per
+    second, §2) at each replay speed."""
+    n = 4000 if fast else 23_000
+    reqs = generate_trace(TraceSpec(n_requests=n, seed=0))
+    mk_mc = lambda: MooncakeCluster(CFG, n_prefill=10, n_decode=10,
+                                    ttft_slo=TTFT_SLO, tbt_slo=TBT_SLO)
+    mk_vl = lambda: CoupledCluster(CFG, n_instances=20,
+                                   admit_load=60)   # bounded queue, as prod
+    rows = []
+    best_mc = best_vl = 0.0
+    scale = 23_608 / n      # keep offered RPS comparable in --fast mode
+    for sp in (s * scale for s in (2.0, 4.0, 6.0, 8.0, 12.0)):
+        sp = round(sp, 1)
+        res_mc = mk_mc().run(reqs, speedup=sp)
+        res_vl = mk_vl().run(reqs, speedup=sp)
+        g_mc = res_mc.goodput(TTFT_SLO, TBT_SLO)
+        g_vl = res_vl.goodput(TTFT_SLO, TBT_SLO)
+        best_mc, best_vl = max(best_mc, g_mc), max(best_vl, g_vl)
+        rows.append(dict(
+            replay_speed=sp,
+            mc_goodput=round(g_mc, 2), vl_goodput=round(g_vl, 2),
+            mc_ttft_p90=round(res_mc.ttft_p90(), 2),
+            vl_ttft_p90=round(res_vl.ttft_p90(), 2),
+            mc_tbt_p90_ms=round(res_mc.tbt_p90() * 1e3, 1),
+            vl_tbt_p90_ms=round(res_vl.tbt_p90() * 1e3, 1),
+            mc_slo_ttft=round(res_mc.slo_attainment(TTFT_SLO, TBT_SLO)[0], 3),
+            vl_slo_ttft=round(res_vl.slo_attainment(TTFT_SLO, TBT_SLO)[0], 3),
+        ))
+    rows.append(dict(replay_speed="peak-goodput",
+                     mc_goodput=round(best_mc, 2),
+                     vl_goodput=round(best_vl, 2),
+                     mc_ttft_p90=None, vl_ttft_p90=None,
+                     mc_tbt_p90_ms=None, vl_tbt_p90_ms=None,
+                     mc_slo_ttft=round(100 * (best_mc / max(best_vl, 1e-9)
+                                              - 1), 1),
+                     vl_slo_ttft="<- capacity_gain_pct"))
+    return rows
+
+
+def main(fast: bool = False):
+    r11 = fig11(fast)
+    emit("fig11_public_datasets", r11)
+    r12 = fig12(fast)
+    emit("fig12_simulated_data", r12)
+    r13 = fig13(fast)
+    emit("fig13_real_workload", r13)
+    return r11 + r12 + r13
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

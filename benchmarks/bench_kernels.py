@@ -1,0 +1,97 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle — correctness
+deltas + CPU wall time (the TPU perf story lives in the roofline; here we
+verify the kernels at serving-realistic shapes and report call latency)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.flash_prefill.kernel import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def main(fast: bool = False):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # flash_prefill at a chunked-prefill shape (chunk 512 against 2k ctx)
+    B, Sq, Sk, H, KV, D = 1, 512, 2048, 8, 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), jnp.bfloat16)
+    out = flash_prefill(q, k, v, q_offset=Sk - Sq, interpret=True)
+    ref = flash_prefill_ref(q, k, v, q_offset=Sk - Sq)
+    err = float(jnp.abs(out.astype(jnp.float32) -
+                        ref.astype(jnp.float32)).max())
+    rows.append(dict(kernel="flash_prefill", shape=f"{B}x{Sq}q/{Sk}k h{H}",
+                     max_err=round(err, 4),
+                     us_ref=round(_time(lambda *a: flash_prefill_ref(
+                         *a, q_offset=Sk - Sq), q, k, v) * 1e6, 1),
+                     us_pallas_interp=round(_time(
+                         lambda *a: flash_prefill(
+                             *a, q_offset=Sk - Sq, interpret=True),
+                         q, k, v) * 1e6, 1)))
+
+    # paged_attention at a decode shape
+    B, H, KV, D, P, page, mp = 8, 8, 2, 128, 128, 64, 16
+    ks = jax.random.split(key, 3)
+    q2 = jax.random.normal(ks[0], (B, H, D), jnp.bfloat16)
+    kp = jax.random.normal(ks[1], (P, page, KV, D), jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (P, page, KV, D), jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.integers(1, P, (B, mp)), jnp.int32)
+    lens = jnp.asarray(rng.integers(page, mp * page, (B,)), jnp.int32)
+    out = paged_attention(q2, kp, vp, table, lens, interpret=True)
+    ref = paged_attention_ref(q2, kp, vp, table, lens)
+    err = float(jnp.abs(out.astype(jnp.float32) -
+                        ref.astype(jnp.float32)).max())
+    rows.append(dict(kernel="paged_attention", shape=f"b{B} {mp}x{page}tok",
+                     max_err=round(err, 4),
+                     us_ref=round(_time(paged_attention_ref, q2, kp, vp,
+                                        table, lens) * 1e6, 1),
+                     us_pallas_interp=round(_time(
+                         lambda *a: paged_attention(*a, interpret=True),
+                         q2, kp, vp, table, lens) * 1e6, 1)))
+
+    # ssd_scan at a mamba2-ish shape
+    b, s, h, p, n, chunk = 1, 1024, 8, 64, 128, 256
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n), jnp.bfloat16)
+    Cm = jax.random.normal(ks[4], (b, s, n), jnp.bfloat16)
+    y_k, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_r, _ = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    err = float(jnp.abs(y_k - y_r).max())
+    rows.append(dict(kernel="ssd_scan", shape=f"s{s} h{h} p{p} n{n}",
+                     max_err=round(err, 4),
+                     us_ref=round(_time(lambda *a: ssd_scan_ref(
+                         *a, chunk=chunk), x, dt, A, Bm, Cm) * 1e6, 1),
+                     us_pallas_interp=round(_time(
+                         lambda *a: ssd_scan(*a, chunk=chunk,
+                                             interpret=True),
+                         x, dt, A, Bm, Cm) * 1e6, 1)))
+    emit("kernels_correctness_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Figure 7: latency of storing KVCache for different request lengths —
+layer-wise (overlapped) prefill vs store-after-compute, plus the exposed
+'layer-wise latency' overhead the paper plots."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.serving.layerwise import occupation_cost, schedule
+
+
+def main(fast: bool = False):
+    cfg = get_config("llama2-70b")
+    rows = []
+    for L in (2048, 4096, 8192, 16384, 32768, 65536, 131072):
+        tl = schedule(cfg, L)
+        no_store = tl.t_compute_layer * tl.n_layers
+        rows.append(dict(
+            input_tokens=L,
+            prefill_no_store_s=round(no_store, 3),
+            layerwise_s=round(tl.total_overlapped, 3),
+            serial_store_s=round(tl.total_serial, 3),
+            layerwise_overhead_ms=round(
+                (tl.total_overlapped - no_store) * 1e3, 2),
+            store_hidden=tl.store_hidden,
+        ))
+    emit("fig7_layerwise_prefill", rows)
+
+    oc_rows = []
+    for L in (8192, 32768, 131072):
+        oc = occupation_cost(cfg, L)
+        oc_rows.append(dict(input_tokens=L,
+                            kv_gb=round(oc["kv_bytes"] / 1e9, 2),
+                            layerwise_gb_s=round(oc["layerwise_cost"] / 1e9, 1),
+                            inline_gb_s=round(oc["inline_cost"] / 1e9, 1)))
+    emit("sec52_occupation_cost", oc_rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

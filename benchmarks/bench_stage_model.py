@@ -1,0 +1,36 @@
+"""Figure 2: normalized throughput/latency of prefill and decoding stages
+vs sequence length / batch size (dummy LLaMA2-70B cost model, cross-checked
+against the dry-run HLO in benchmarks/roofline.py)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.costmodel import CostModel, InstanceSpec
+
+
+def main(fast: bool = False):
+    cm = CostModel(get_config("llama2-70b"), InstanceSpec())
+    rows = []
+    base = None
+    for L in (1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072):
+        t = cm.prefill_time(L)
+        base = base or t / L
+        rows.append(dict(stage="prefill", x=L, latency_s=round(t, 4),
+                         tok_per_s=round(L / t, 1),
+                         norm_latency_per_tok=round(t / L / base, 3)))
+    emit("fig2_prefill_stage", rows)
+
+    rows2 = []
+    base_t = None
+    for b in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+        t = cm.decode_iter_time(b, avg_ctx=8192)
+        base_t = base_t or t
+        rows2.append(dict(stage="decode", x=b, iter_ms=round(t * 1e3, 3),
+                          tok_per_s=round(b / t, 1),
+                          norm_latency=round(t / base_t, 3)))
+    emit("fig2_decode_stage", rows2)
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: CSV emission + standard cluster builders."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "benchmarks/results")
+
+
+def emit(table: str, rows: list[dict]) -> None:
+    """Print a paper-table reproduction as CSV and save JSON."""
+    if not rows:
+        print(f"[{table}] no rows")
+        return
+    cols: list[str] = []
+    for r in rows:                      # union of keys, order-preserving
+        for c in r:
+            if c not in cols:
+                cols.append(c)
+    print(f"\n== {table} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c, "")) for c in cols))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, table + ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

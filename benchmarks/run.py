@@ -1,0 +1,71 @@
+"""Benchmark driver — one reproduction per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--with-roofline]
+
+Emits each table as CSV to stdout and JSON to benchmarks/results/.
+The roofline table (§Roofline) prints from cache if present (it is
+produced by ``python -m benchmarks.roofline``, ~40 compile jobs); pass
+--with-roofline to (re)compute missing combos inline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import RESULTS_DIR, emit
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced trace sizes (CI-speed)")
+    ap.add_argument("--with-roofline", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_cache_policy, bench_cpp, bench_e2e,
+                            bench_kernels, bench_layerwise, bench_overload,
+                            bench_scheduling, bench_stage_model)
+    benches = {
+        "cache_policy": bench_cache_policy.main,     # Table 1
+        "stage_model": bench_stage_model.main,       # Figure 2
+        "layerwise": bench_layerwise.main,           # Figure 7
+        "scheduling": bench_scheduling.main,         # Figure 8
+        "e2e": bench_e2e.main,                       # Figures 11/12/13
+        "overload": bench_overload.main,             # Table 3 + Fig 9/10
+        "cpp": bench_cpp.main,                       # §5.1 CPP vs SP/TP
+        "kernels": bench_kernels.main,
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+
+    t00 = time.time()
+    for name in selected:
+        t0 = time.time()
+        print(f"\n#### bench: {name}", flush=True)
+        try:
+            benches[name](fast=args.fast)
+        except Exception as e:  # noqa: BLE001
+            print(f"BENCH FAIL {name}: {e!r}", file=sys.stderr)
+            return 1
+        print(f"#### {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    # roofline table (from cache, or computed with --with-roofline)
+    cache_path = os.path.join(RESULTS_DIR, "roofline.json")
+    if args.with_roofline:
+        from benchmarks import roofline
+        roofline.main([])
+    elif os.path.exists(cache_path):
+        with open(cache_path) as f:
+            emit("roofline", json.load(f))
+    else:
+        print("\n[roofline] no cache — run `python -m benchmarks.roofline`")
+    print(f"\nall benches done in {time.time() - t00:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,239 @@
+"""Model configuration system.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG``; the registry below resolves ``--arch <id>`` strings.
+
+Key derived quantities:
+  * ``padded_heads`` — query heads padded up to a multiple of the model-axis
+    size (16) so attention can be tensor-parallel on the production mesh.
+    Extra heads have zero-initialised projections and are sliced off after
+    the output projection contraction is complete (they contribute nothing).
+  * ``padded_vocab`` — vocab padded to a multiple of 256 so embedding /
+    lm-head can shard on the model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+MODEL_AXIS = 16  # tensor-parallel degree of the production mesh
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # 'ep': experts sharded over the model axis (requires n_experts % 16 == 0)
+    # 'tp': expert hidden dim sharded over the model axis (few-expert models)
+    parallelism: str = "ep"
+    # apply MoE every k-th layer (1 = all layers); others use dense MLP
+    every: int = 1
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256  # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # --- attention flavour ---
+    qk_norm: bool = False
+    attn_bias: bool = False
+    sliding_window: int = 0  # 0 = full attention
+    rope_theta: float = 1e6
+    # --- hybrid (jamba) ---
+    attn_every: int = 0  # 1 attention layer per `attn_every` layers; rest SSM
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    # --- modality frontend stub ---
+    frontend: str = "none"  # none | patch | audio
+    frontend_tokens: int = 0  # patches / audio frames the stub supplies
+    # --- misc ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    max_decode_len: int = 0  # architectural cap on decoder length (whisper)
+    optimizer: str = "adamw"  # adamw | adafactor (huge archs)
+    remat: bool = True
+    source: str = ""  # citation for the config numbers
+
+    # ---------------- derived ----------------
+    @property
+    def padded_heads(self) -> int:
+        return _pad_to(self.n_heads, MODEL_AXIS)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _pad_to(self.vocab_size, 256)
+
+    @property
+    def kv_shardable(self) -> bool:
+        return self.n_kv_heads % MODEL_AXIS == 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.kind == "ssm"
+
+    @property
+    def attention_layers(self) -> int:
+        """Number of layers that carry a KV cache."""
+        if self.kind == "ssm":
+            return 0
+        if self.attn_every:
+            return self.n_layers // self.attn_every
+        return self.n_layers
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for roofline MODEL_FLOPS)."""
+        d, L = self.d_model, self.n_layers
+        n = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        per_attn = (d * self.padded_heads * self.head_dim) * 2 \
+            + (d * self.n_kv_heads * self.head_dim) * 2
+        per_mlp = 3 * d * self.d_ff
+        per_ssm = 0
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            per_ssm = d * (2 * di + 2 * s.n_groups * s.d_state + nh) \
+                + di * d + s.d_conv * (di + 2 * s.n_groups * s.d_state) \
+                + 3 * nh + di
+        # FFN stack (moe-every-k layers use experts, the rest dense MLP);
+        # pure-SSM archs have no FFN stack.
+        if self.kind == "ssm":
+            ffn = 0
+        elif self.moe is not None:
+            per_moe = 3 * d * self.moe.d_ff_expert * self.moe.n_experts \
+                + d * self.moe.n_experts
+            n_moe_layers = L // self.moe.every
+            ffn = per_moe * n_moe_layers + per_mlp * (L - n_moe_layers)
+        else:
+            ffn = per_mlp * L
+        # mixer stack
+        if self.kind == "ssm":
+            mixer = per_ssm * L
+        elif self.attn_every:
+            n_attn = L // self.attn_every
+            mixer = per_attn * n_attn + per_ssm * (L - n_attn)
+        else:
+            mixer = per_attn * L
+        n += mixer + ffn
+        # encoder (whisper): self-attn + MLP per encoder layer, plus the
+        # decoder's cross-attention K/V/Q/O projections.
+        if self.encoder_layers:
+            n += self.encoder_layers * (per_attn + per_mlp)
+            n += L * per_attn  # cross-attention projections
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        d, L = self.d_model, self.n_layers
+        n_moe_layers = L // self.moe.every
+        all_expert = 3 * d * self.moe.d_ff_expert * self.moe.n_experts * n_moe_layers
+        active_expert = 3 * d * self.moe.d_ff_expert * self.moe.top_k * n_moe_layers
+        return full - all_expert + active_expert
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: ≤2 layers (or one hybrid period), d_model ≤ 512,
+        ≤4 experts — runnable on a single CPU device."""
+        d = min(self.d_model, 256)
+        kw: dict = dict(
+            name=self.name + "-reduced",
+            n_layers=2 if not self.attn_every else self.attn_every,
+            d_model=d,
+            n_heads=4,
+            n_kv_heads=2 if self.n_kv_heads < self.n_heads else 4,
+            head_dim=32,
+            d_ff=max(128, d * 2),
+            vocab_size=512,
+            frontend_tokens=min(self.frontend_tokens, 16) if self.frontend_tokens else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            remat=False,
+            optimizer="adamw",
+        )
+        if self.moe is not None:
+            # capacity_factor E/k ⇒ cap == T: drop-free routing, so
+            # incremental decode ≡ full prefill exactly (production
+            # configs keep 1.25 — capacity drops are real MoE behaviour)
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=2, d_ff_expert=128,
+                capacity_factor=2.0)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=32)
+        if self.sliding_window:
+            kw["sliding_window"] = 64
+        if self.attn_every:
+            kw["attn_every"] = self.attn_every
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in [
+        "qwen3_moe_235b_a22b", "smollm_360m", "qwen2_5_3b", "mixtral_8x7b",
+        "phi3_mini_3_8b", "internvl2_26b", "mamba2_2_7b", "whisper_large_v3",
+        "jamba_1_5_large_398b", "qwen3_14b", "llama2_70b",
+    ]:
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True

@@ -1,0 +1,17 @@
+"""Mamba2-2.7B — attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-2.7b",
+    kind="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64),
+    tie_embeddings=True,
+    source="arXiv:2405.21060 (assignment: 64L d2560 attn-free state=128)",
+))

@@ -1,0 +1,13 @@
+"""Mooncake's primary contribution: KVCache-centric disaggregated
+scheduling — cache pool (Figure 3), Conductor (Algorithm 1), Messenger,
+overload admission (§7), and the discrete-event cluster simulator (§8)."""
+from repro.core.cache import (CachePool, StateCache, cache_hit_analysis,
+                              kv_block_bytes, ssm_state_bytes)
+from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
+from repro.core.costmodel import CostModel, Hardware, InstanceSpec, V5E
+from repro.core.messenger import Messenger
+from repro.core.overload import make_admission
+from repro.core.simulator import CoupledCluster, MooncakeCluster, SimResult
+from repro.core.trace import (BLOCK_TOKENS, Request, TraceSpec,
+                              generate_trace, load_trace, save_trace,
+                              simulated_requests, trace_stats)

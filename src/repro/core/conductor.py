@@ -1,0 +1,220 @@
+"""Conductor — Mooncake's KVCache-centric global scheduler (§6, Algorithm 1).
+
+For each request the Conductor selects a (prefill, decode) instance pair by
+minimising predicted TTFT over the prefill pool, where each candidate's TTFT
+is either
+
+  * cache-aware (local):      T_queue + T_prefill(len, local_prefix)
+  * cache-aware + balancing:  T_transfer + T_queue + T_prefill(len, best_prefix)
+
+depending on whether the best remote prefix beats the local one by more
+than ``kvcache_balancing_threshold`` (Algorithm 1 line 8). After selection,
+if the chosen instance's local prefix is much worse than the global best,
+the best holder's blocks are replicated to it (hot-spot migration, line 28)
+— hot blocks spread automatically because they keep winning matches.
+
+Admission (line 25) rejects when the achievable TTFT or the decode pool's
+predicted TBT violates the SLO; overload-oriented policies (§7) wrap this
+with earlier, load-based rejection — see ``overload.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.cache import CachePool, StateCache
+from repro.core.costmodel import CostModel
+from repro.core.messenger import Messenger
+from repro.core.trace import BLOCK_TOKENS, Request
+
+
+@dataclass
+class PrefillInstance:
+    """One prefill node (group): local cache pool + FIFO work queue."""
+    iid: int
+    pool: CachePool
+    cost: CostModel
+    queue_free_at: float = 0.0     # time the queue drains
+    total_busy: float = 0.0
+    n_scheduled: int = 0
+
+    def queue_time(self, now: float) -> float:
+        return max(self.queue_free_at - now, 0.0)
+
+    def utilization(self, now: float) -> float:
+        return self.total_busy / now if now > 0 else 0.0
+
+
+@dataclass
+class DecodeInstance:
+    """One decoding node: continuous batch of active requests."""
+    iid: int
+    cost: CostModel
+    active: int = 0                 # requests in the batch
+    kv_tokens: float = 0.0          # total context tokens held
+    pending: int = 0                # accepted, prefill not yet done
+    pending_tokens: float = 0.0
+    n_scheduled: int = 0
+
+    def avg_ctx(self) -> float:
+        return self.kv_tokens / self.active if self.active else 0.0
+
+    def predicted_tbt(self, extra_reqs: int = 0, extra_tokens: float = 0.0,
+                      include_pending: bool = True) -> float:
+        b = self.active + extra_reqs + (self.pending if include_pending else 0)
+        toks = self.kv_tokens + extra_tokens \
+            + (self.pending_tokens if include_pending else 0.0)
+        if b == 0:
+            return 0.0
+        return self.cost.decode_iter_time(b, toks / b)
+
+    def vram_ok(self, extra_tokens: float, include_pending: bool = True) -> bool:
+        cap = self.cost.decode_capacity_tokens()
+        held = self.kv_tokens + (self.pending_tokens if include_pending else 0.0)
+        return held + extra_tokens <= cap
+
+
+@dataclass
+class Decision:
+    accepted: bool
+    prefill: Optional[PrefillInstance] = None
+    decode: Optional[DecodeInstance] = None
+    expected_ttft: float = 0.0
+    expected_tbt: float = 0.0
+    prefix_blocks: int = 0              # blocks reused (local or migrated)
+    migrated_blocks: int = 0            # hot-spot replication volume
+    transfer_from: Optional[int] = None
+    reject_reason: str = ""
+
+
+class Conductor:
+    """Algorithm 1 + hot-spot migration. Scheduling strategies:
+
+    * ``kvcache`` — full Algorithm 1 (cache-aware + cache load balancing)
+    * ``cache_aware`` — §6.1 only: always use the local prefix, never
+      migrate (the Figure 8 "cache-aware" baseline)
+    * ``load_balance`` — pick the least-loaded prefill instance
+    * ``random`` — uniform random instance
+    """
+
+    def __init__(self, prefills: list[PrefillInstance],
+                 decodes: list[DecodeInstance], messenger: Messenger, *,
+                 ttft_slo: float, tbt_slo: float,
+                 balancing_threshold: float = 1.3,
+                 strategy: str = "kvcache", rng=None) -> None:
+        self.P = prefills
+        self.D = decodes
+        self.messenger = messenger
+        self.ttft_slo = ttft_slo
+        self.tbt_slo = tbt_slo
+        self.threshold = balancing_threshold
+        self.strategy = strategy
+        import random as _random
+        self.rng = rng or _random.Random(0)
+        self.account_pending = True   # baseline admission flips this (§7.2)
+        self.n_migrations = 0
+        self.migrated_bytes = 0.0
+
+    # ---- Algorithm 1, lines 4–23 -------------------------------------
+    def _find_best_prefix(self, block_keys: list[int]):
+        best_len, best_inst = 0, None
+        for inst in self.P:
+            n = inst.pool.prefix_len(block_keys)
+            if n > best_len:
+                best_len, best_inst = n, inst
+        return best_len, best_inst
+
+    def _select_prefill(self, req: Request, now: float):
+        block_keys = req.hash_ids
+        L = req.input_length
+        best_len, best_inst = self._find_best_prefix(block_keys)
+
+        if self.strategy == "random":
+            inst = self.rng.choice(self.P)
+            n = inst.pool.prefix_len(block_keys)
+            ttft = inst.queue_time(now) + inst.cost.prefill_time(
+                L, n * BLOCK_TOKENS)
+            return inst, ttft, n, 0, None
+        if self.strategy == "load_balance":
+            inst = min(self.P, key=lambda i: i.queue_free_at)
+            n = inst.pool.prefix_len(block_keys)
+            ttft = inst.queue_time(now) + inst.cost.prefill_time(
+                L, n * BLOCK_TOKENS)
+            return inst, ttft, n, 0, None
+
+        best = (float("inf"), None, 0, 0, None)  # ttft, inst, prefix, migrate, src
+        for inst in self.P:
+            prefix_len = inst.pool.prefix_len(block_keys)
+            t_queue = inst.queue_time(now)
+            ratio = (best_len / prefix_len) if prefix_len else (
+                float("inf") if best_len else 1.0)
+            local_only = self.strategy == "cache_aware"
+            if ratio < self.threshold or local_only or best_inst is None:
+                # cache-aware: compute on the local prefix
+                t_prefill = inst.cost.prefill_time(L, prefix_len * BLOCK_TOKENS)
+                cand = (t_queue + t_prefill, inst, prefix_len, 0, None)
+            else:
+                # cache-aware + balancing: fetch the best prefix here
+                transfer_blocks = best_len - prefix_len
+                nbytes = inst.cost.kv_bytes(transfer_blocks * BLOCK_TOKENS)
+                t_transfer = self.messenger.estimate(best_inst.iid, nbytes, now)
+                t_prefill = inst.cost.prefill_time(L, best_len * BLOCK_TOKENS)
+                cand = (t_transfer + t_queue + t_prefill, inst, best_len,
+                        transfer_blocks, best_inst)
+            if cand[0] < best[0]:
+                best = cand
+        ttft, inst, prefix, migrate, src = best
+        return inst, ttft, prefix, migrate, src
+
+    def _select_decode(self, req: Request):
+        """SelectDecodingInstance: least predicted TBT with VRAM headroom.
+
+        ``account_pending`` distinguishes the §7 policies: the naive
+        baseline pre-selects on the CURRENT decode state only (the time-lag
+        of §7.2 — accepted-but-still-prefilling requests are invisible),
+        while early/predictive policies count in-flight commitments."""
+        tokens = req.input_length + req.output_length
+        ok = [d for d in self.D if d.vram_ok(tokens, self.account_pending)]
+        if not ok:
+            return None, float("inf")
+        d = min(ok, key=lambda d: d.predicted_tbt(
+            1, tokens, include_pending=self.account_pending))
+        return d, d.predicted_tbt(1, tokens,
+                                  include_pending=self.account_pending)
+
+    # ---- the public entry point ---------------------------------------
+    def schedule(self, req: Request, now: float) -> Decision:
+        inst, ttft, prefix, migrate, src = self._select_prefill(req, now)
+        d, tbt = self._select_decode(req)
+        if d is None:
+            return Decision(False, reject_reason="no decode slot (VRAM)")
+        if ttft > self.ttft_slo or tbt > self.tbt_slo:
+            reason = "TTFT SLO" if ttft > self.ttft_slo else "TBT SLO"
+            return Decision(False, reject_reason=reason,
+                            expected_ttft=ttft, expected_tbt=tbt)
+
+        # ---- commit: hot-spot migration (Algorithm 1 line 28) ----
+        if migrate and src is not None:
+            nbytes = inst.cost.kv_bytes(migrate * BLOCK_TOKENS)
+            self.messenger.enqueue(src.iid, nbytes, now)
+            inst.pool.insert(req.hash_ids[:prefix], start_pos=0)
+            self.n_migrations += 1
+            self.migrated_bytes += nbytes
+
+        # queue the prefill work (cache inserts happen at completion in the
+        # simulator; here we update the pool optimistically so back-to-back
+        # requests in a session see the blocks)
+        t_prefill = inst.cost.prefill_time(
+            req.input_length, prefix * BLOCK_TOKENS)
+        inst.pool.lookup(req.hash_ids[:prefix])
+        inst.pool.insert(req.hash_ids[prefix:], start_pos=prefix)
+        inst.queue_free_at = max(inst.queue_free_at, now) + t_prefill
+        inst.total_busy += t_prefill
+        inst.n_scheduled += 1
+        d.pending += 1
+        d.pending_tokens += req.input_length + req.output_length
+        d.n_scheduled += 1
+        return Decision(True, prefill=inst, decode=d, expected_ttft=ttft,
+                        expected_tbt=tbt, prefix_blocks=prefix,
+                        migrated_blocks=migrate,
+                        transfer_from=src.iid if src else None)

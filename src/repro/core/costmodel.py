@@ -1,0 +1,125 @@
+"""Analytic instance cost model (Figure 2) calibrated from hardware specs.
+
+The paper fits a predictive model of prefill/decode time from offline data
+(§6.1: "Thanks to the regular computation pattern of Transformers, the error
+bound of this prediction is small"). Without GPUs we derive the same model
+analytically from the architecture config and the TPU v5e roofline terms —
+the derivation is checked against the dry-run's compiled ``cost_analysis()``
+in ``benchmarks/roofline.py``, closing the loop the paper closes with
+offline measurement.
+
+  * Prefill is compute-bound: quadratic attention + linear MLP FLOPs
+    (Figure 2 left: superlinear in input length).
+  * Decode is memory-bound: weights + KV bytes per iteration
+    (Figure 2 right: sublinear in batch size — weight reads amortize).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e chip + interconnect (DESIGN.md §3)."""
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per ICI link
+    dram_bw: float = 100e9            # host DRAM read bw (pool side)
+    net_bw: float = 100e9             # inter-node KVCache transfer (RDMA-class)
+    hbm_bytes: float = 16e9           # per chip
+    mfu_prefill: float = 0.55         # achievable fraction of peak, prefill
+    mbu_decode: float = 0.70          # achievable fraction of HBM bw, decode
+
+
+V5E = Hardware()
+
+
+@dataclass(frozen=True)
+class InstanceSpec:
+    """One serving instance = a slice of the pod (paper: one 8xA800 node =
+    640 GB VRAM; TPU-native equivalent: a 16-chip v5e slice = 256 GB HBM,
+    enough to hold the dummy-70B weights + a KV batch)."""
+    n_chips: int = 16
+    hw: Hardware = V5E
+
+
+class CostModel:
+    """Per-architecture timing estimates, all in SECONDS."""
+
+    def __init__(self, cfg: ModelConfig, inst: InstanceSpec = InstanceSpec()):
+        self.cfg = cfg
+        self.inst = inst
+        self.n_params_active = cfg.active_param_count()
+        self.kv_token_bytes = (2 * cfg.attention_layers * cfg.n_kv_heads
+                               * cfg.head_dim * 2)  # bf16 K+V per token
+        self.weight_bytes = self.n_params_active * 2  # bf16
+
+    # ---- prefill (compute-bound, Figure 2 left) ----
+    def prefill_flops(self, L: int, prefix: int = 0) -> float:
+        """FLOPs to prefill positions [prefix, L) given a cached prefix.
+        A full (or over-covering, block-rounded) prefix still recomputes
+        the last position to produce the first-token logits."""
+        prefix = min(max(prefix, 0), L - 1) if L > 0 else 0
+        new = L - prefix
+        lin = 2.0 * self.n_params_active * new
+        # attention scores+values: 2 * 2 * H * Dh * sum_{i=prefix}^{L} i
+        cfg = self.cfg
+        quad = 0.0
+        if cfg.attention_layers:
+            tri = 0.5 * (L * L - prefix * prefix)
+            win = cfg.sliding_window
+            if win and L > win:
+                tri = min(tri, float(new) * win)
+            quad = 4.0 * cfg.attention_layers * cfg.n_heads * cfg.head_dim * tri
+        return lin + quad
+
+    def prefill_time(self, L: int, prefix: int = 0) -> float:
+        hw, n = self.inst.hw, self.inst.n_chips
+        return self.prefill_flops(L, prefix) / (n * hw.peak_flops
+                                                * hw.mfu_prefill)
+
+    # ---- decode (memory-bound, Figure 2 right) ----
+    def decode_iter_time(self, batch: int, avg_ctx: float) -> float:
+        """One continuous-batching iteration: every active request emits one
+        token. Weights are read once (amortized over the batch); KV is read
+        per request."""
+        hw, n = self.inst.hw, self.inst.n_chips
+        cfg = self.cfg
+        ctx = avg_ctx
+        if cfg.sliding_window:
+            ctx = min(ctx, cfg.sliding_window)
+        kv = batch * ctx * self.kv_token_bytes
+        if cfg.kind == "ssm":
+            from repro.core.cache import ssm_state_bytes
+            kv = batch * ssm_state_bytes(cfg)
+        bytes_read = self.weight_bytes + kv
+        t_mem = bytes_read / (n * hw.hbm_bw * hw.mbu_decode)
+        t_cmp = 2.0 * self.n_params_active * batch / (n * hw.peak_flops * 0.3)
+        return max(t_mem, t_cmp)
+
+    def decode_capacity_tokens(self, kv_frac: float = 0.8) -> float:
+        """KV tokens that fit in the instance's free HBM after weights.
+
+        ``kv_frac`` is the fraction of free HBM budgeted for KV: a dedicated
+        decode node spends nearly all of it on KV (0.8); a coupled
+        prefill+decode node must reserve prefill activation space (≈0.5) —
+        exactly the VRAM asymmetry §5.2's layer-wise prefill exploits."""
+        hw, n = self.inst.hw, self.inst.n_chips
+        free = n * hw.hbm_bytes - self.weight_bytes
+        if self.kv_token_bytes == 0:
+            return float("inf")
+        return max(free * kv_frac, 0.0) / self.kv_token_bytes
+
+    # ---- transfers (Messenger) ----
+    def kv_bytes(self, tokens: int) -> float:
+        return tokens * self.kv_token_bytes
+
+    def transfer_time(self, tokens: int, bw: float | None = None) -> float:
+        bw = bw if bw is not None else self.inst.hw.net_bw
+        return self.kv_bytes(tokens) / bw
+
+    def dram_load_time(self, tokens: int) -> float:
+        """Local DRAM→HBM load of a cached prefix."""
+        return self.kv_bytes(tokens) / self.inst.hw.dram_bw

@@ -1,0 +1,55 @@
+"""Messenger — the cross-machine KVCache transfer service (§3 step 3).
+
+One Messenger per instance; transfers are point-to-point (sender-node
+egress is the contended resource, matching the paper's congestion concern
+in §6.1: "whether the sending node is under congestion"). We model each
+node's egress link as a FIFO pipe of bandwidth ``bw``; a transfer of B
+bytes enqueued at time t on a link whose backlog drains at time t' ≥ t
+completes at max(t, t') + B/bw.
+
+This same object answers Conductor's ``EstimateKVCacheTransferTime`` —
+the estimate includes the current backlog, which is how congestion feeds
+back into Algorithm 1's instance selection and drives hot-spot
+replication (§6.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Link:
+    bw: float                   # bytes/s
+    busy_until: float = 0.0     # time the current backlog drains
+    bytes_sent: float = 0.0
+    n_transfers: int = 0
+
+
+class Messenger:
+    """Transfer-time bookkeeping for a set of named nodes."""
+
+    def __init__(self, node_ids, bw: float) -> None:
+        self.links: dict = {i: Link(bw=bw) for i in node_ids}
+
+    def add_node(self, node_id, bw: float) -> None:
+        self.links[node_id] = Link(bw=bw)
+
+    def estimate(self, src, nbytes: float, now: float) -> float:
+        """Predicted transfer duration if enqueued now (queue + wire)."""
+        link = self.links[src]
+        wait = max(link.busy_until - now, 0.0)
+        return wait + nbytes / link.bw
+
+    def enqueue(self, src, nbytes: float, now: float) -> float:
+        """Commit a transfer; returns its completion TIME."""
+        link = self.links[src]
+        start = max(link.busy_until, now)
+        done = start + nbytes / link.bw
+        link.busy_until = done
+        link.bytes_sent += nbytes
+        link.n_transfers += 1
+        return done
+
+    def congestion(self, src, now: float) -> float:
+        """Seconds of backlog on a node's egress link."""
+        return max(self.links[src].busy_until - now, 0.0)

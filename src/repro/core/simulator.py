@@ -1,0 +1,410 @@
+"""Discrete-event cluster simulator — Mooncake's evaluation rig (§8).
+
+The paper's own results come from replaying traces against a dummy model;
+we do the same: the simulator replays a trace against per-instance cost
+models (prefill superlinear in input length, decode memory-bound — Figure
+2) whose terms are cross-checked against the dry-run's compiled FLOP/byte
+counts (benchmarks/roofline.py).
+
+Two cluster types:
+
+  * ``MooncakeCluster`` — disaggregated prefill/decode pools + Conductor
+    (Algorithm 1) + Messenger + overload admission (§7). Layer-wise prefill
+    (§5.2) makes the KVCache stream to the decode node DURING prefill, so
+    the decode-side arrival is max(prefill_done, transfer_done) with the
+    transfer enqueued layer-by-layer — effectively overlapped unless the
+    sender link is congested.
+  * ``CoupledCluster`` — the vLLM-style baseline: prefill inlined into the
+    decode engine; a long prefill blocks every active decode for its whole
+    duration (the TBT disruption of §8.1.2).
+
+Time unit: SECONDS. Request timestamps (ms) are converted on entry.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import CachePool
+from repro.core.conductor import (Conductor, DecodeInstance, PrefillInstance)
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.messenger import Messenger
+from repro.core.overload import AdmissionPolicy, make_admission
+from repro.core.trace import BLOCK_TOKENS, Request
+
+
+@dataclass
+class ReqRecord:
+    req: Request
+    arrival: float
+    accepted: bool = False
+    reject_stage: str = ""         # "admission" | "decode_doublecheck" | ""
+    prefill_start: float = -1.0
+    ttft: float = -1.0             # first token latency (s)
+    tbts: list = field(default_factory=list)  # per-token gaps (s)
+    done: float = -1.0
+    prefix_blocks: int = 0
+
+    @property
+    def completed(self) -> bool:
+        return self.done >= 0
+
+    def tbt_p(self, q: float) -> float:
+        return float(np.percentile(self.tbts, q)) if self.tbts else 0.0
+
+
+@dataclass
+class SimResult:
+    records: list
+    duration: float
+    load_samples: list              # (t, prefill_load, decode_load)
+    n_migrations: int = 0
+
+    # ---- aggregates ----
+    def completed(self):
+        return [r for r in self.records if r.completed]
+
+    def rejected(self):
+        return [r for r in self.records if not r.accepted]
+
+    def ttft_p90(self) -> float:
+        c = [r.ttft for r in self.completed()]
+        return float(np.percentile(c, 90)) if c else float("nan")
+
+    def tbt_p90(self) -> float:
+        """P90 over requests of each request's P90 token gap."""
+        c = [r.tbt_p(90) for r in self.completed() if r.tbts]
+        return float(np.percentile(c, 90)) if c else float("nan")
+
+    def goodput(self, ttft_slo: float, tbt_slo: float) -> float:
+        """Completed requests meeting both SLOs, per second (§2: only fully
+        completed requests count)."""
+        ok = [r for r in self.completed()
+              if r.ttft <= ttft_slo and r.tbt_p(90) <= tbt_slo]
+        return len(ok) / self.duration if self.duration else 0.0
+
+    def slo_attainment(self, ttft_slo: float, tbt_slo: float):
+        c = self.completed()
+        if not c:
+            return 0.0, 0.0
+        ttft_ok = np.mean([r.ttft <= ttft_slo for r in c])
+        tbt_ok = np.mean([r.tbt_p(90) <= tbt_slo for r in c])
+        return float(ttft_ok), float(tbt_ok)
+
+    def avg_ttft(self) -> float:
+        c = [r.ttft for r in self.completed()]
+        return float(np.mean(c)) if c else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# event engine
+# ---------------------------------------------------------------------------
+
+class _Events:
+    def __init__(self) -> None:
+        self._h: list = []
+        self._c = itertools.count()
+
+    def push(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._h, (t, next(self._c), fn))
+
+    def pop(self):
+        t, _, fn = heapq.heappop(self._h)
+        return t, fn
+
+    def __bool__(self) -> bool:
+        return bool(self._h)
+
+
+# ---------------------------------------------------------------------------
+# Mooncake (disaggregated) cluster
+# ---------------------------------------------------------------------------
+
+class _DecodeEngine:
+    """Continuous-batching decode loop for one DecodeInstance."""
+
+    def __init__(self, inst: DecodeInstance, events: _Events,
+                 sim: "MooncakeCluster") -> None:
+        self.inst = inst
+        self.events = events
+        self.sim = sim
+        self.batch: list[ReqRecord] = []
+        self.ticking = False
+
+    def join(self, rec: ReqRecord, now: float) -> None:
+        self.batch.append(rec)
+        self.inst.active += 1
+        self.inst.kv_tokens += rec.req.input_length
+        self.inst.pending -= 1
+        self.inst.pending_tokens -= rec.req.input_length + rec.req.output_length
+        rec._last_tok = now       # type: ignore[attr-defined]
+        rec._emitted = 1          # prefill produced the first token
+        if not self.ticking:
+            self.ticking = True
+            self.events.push(now, lambda: self.tick(now))
+
+    def tick(self, now: float) -> None:
+        if not self.batch:
+            self.ticking = False
+            return
+        dt = self.inst.cost.decode_iter_time(
+            len(self.batch), self.inst.kv_tokens / len(self.batch))
+        t2 = now + dt
+        done_recs = []
+        for rec in self.batch:
+            rec.tbts.append(t2 - rec._last_tok)   # type: ignore[attr-defined]
+            rec._last_tok = t2                    # type: ignore[attr-defined]
+            rec._emitted += 1                     # type: ignore[attr-defined]
+            self.inst.kv_tokens += 1
+            if rec._emitted >= rec.req.output_length:  # type: ignore
+                done_recs.append(rec)
+        for rec in done_recs:
+            self.batch.remove(rec)
+            self.inst.active -= 1
+            self.inst.kv_tokens -= rec.req.input_length + rec._emitted  # type: ignore
+            rec.done = t2
+        self.events.push(t2, lambda: self.tick(t2))
+
+
+class MooncakeCluster:
+    def __init__(self, cfg: ModelConfig, *, n_prefill: int, n_decode: int,
+                 inst_spec: InstanceSpec = InstanceSpec(),
+                 ttft_slo: float = 30.0, tbt_slo: float = 0.1,
+                 cache_capacity_blocks: Optional[int] = 20000,
+                 cache_policy: str = "lru",
+                 strategy: str = "kvcache",
+                 admission: str = "early",
+                 balancing_threshold: float = 1.3,
+                 layerwise_prefill: bool = True,
+                 t_d: float = 10.0, seed: int = 0) -> None:
+        self.cfg = cfg
+        cost = lambda: CostModel(cfg, inst_spec)
+        self.prefills = [PrefillInstance(
+            iid=i, pool=CachePool(cache_capacity_blocks, cache_policy),
+            cost=cost()) for i in range(n_prefill)]
+        self.decodes = [DecodeInstance(iid=1000 + i, cost=cost())
+                        for i in range(n_decode)]
+        node_ids = [p.iid for p in self.prefills] + [d.iid for d in self.decodes]
+        self.messenger = Messenger(node_ids, bw=inst_spec.hw.net_bw)
+        import random
+        self.conductor = Conductor(
+            self.prefills, self.decodes, self.messenger,
+            ttft_slo=ttft_slo, tbt_slo=tbt_slo,
+            balancing_threshold=balancing_threshold, strategy=strategy,
+            rng=random.Random(seed))
+        kw = {"t_d": t_d} if admission == "predictive" else {}
+        self.admission: AdmissionPolicy = make_admission(
+            admission, self.conductor, **kw)
+        self.ttft_slo = ttft_slo
+        self.tbt_slo = tbt_slo
+        self.layerwise = layerwise_prefill
+        self.admission_name = admission
+
+    def run(self, requests: list[Request], *, speedup: float = 1.0,
+            load_sample_dt: float = 10.0) -> SimResult:
+        events = _Events()
+        records = [ReqRecord(req=r, arrival=r.timestamp / 1000.0 / speedup)
+                   for r in requests]
+        engines = {d.iid: _DecodeEngine(d, events, self) for d in self.decodes}
+        load_samples: list = []
+
+        def arrive(rec: ReqRecord):
+            now = rec.arrival
+            dec = self.admission.schedule(rec.req, now)
+            if not dec.accepted:
+                rec.reject_stage = "admission"
+                return
+            rec.accepted = True
+            rec.prefix_blocks = dec.prefix_blocks
+            p, d = dec.prefill, dec.decode
+            # prefill completion (the conductor queued the work already)
+            t_done = p.queue_free_at
+            rec.prefill_start = t_done - p.cost.prefill_time(
+                rec.req.input_length, dec.prefix_blocks * BLOCK_TOKENS)
+
+            # KVCache transfer to the decode node (§5.2 layer-wise overlap):
+            # streaming starts when prefill starts, so completion is
+            # max(prefill_done, stream_done); without layer-wise it is
+            # prefill_done + full transfer.
+            nbytes = p.cost.kv_bytes(rec.req.input_length)
+            if self.layerwise:
+                t_stream = self.messenger.enqueue(p.iid, nbytes,
+                                                  rec.prefill_start)
+                t_ready = max(t_done, t_stream)
+            else:
+                t_ready = self.messenger.enqueue(p.iid, nbytes, t_done)
+
+            def finish_prefill():
+                rec.ttft = t_done - rec.arrival
+                self.admission.on_decode_join(d.iid, t_done)
+
+            events.push(t_done, finish_prefill)
+
+            def join_decode():
+                # §3 step 4: the local scheduler double-checks the SLO with
+                # the REAL (post-lag) state; under the baseline policy the
+                # pre-selection was stale, so this can reject a request
+                # whose prefill is already paid for — the §7.2 waste.
+                tokens = rec.req.input_length + rec.req.output_length
+                over_tbt = d.predicted_tbt(
+                    1, tokens, include_pending=False) > self.tbt_slo
+                over_vram = not d.vram_ok(tokens, include_pending=False)
+                if self.admission_name == "baseline" and (over_tbt or over_vram):
+                    rec.accepted = False
+                    rec.reject_stage = "decode_doublecheck"
+                    d.pending -= 1
+                    d.pending_tokens -= tokens
+                    return
+                engines[d.iid].join(rec, t_ready)
+
+            events.push(t_ready, join_decode)
+
+        for rec in records:
+            events.push(rec.arrival, lambda rec=rec: arrive(rec))
+
+        # periodic load sampling (Figure 9)
+        horizon = max(r.arrival for r in records) + 120.0
+
+        def sample(t: float):
+            load_samples.append((t, self.admission.prefill_load(t),
+                                 self.admission.decode_load(t)))
+            if t < horizon:
+                events.push(t + load_sample_dt,
+                            lambda: sample(t + load_sample_dt))
+
+        events.push(0.0, lambda: sample(0.0))
+
+        while events:
+            t, fn = events.pop()
+            fn()
+        t_end = max([r.done for r in records if r.completed]
+                    + [r.arrival for r in records])
+        return SimResult(records=records, duration=t_end,
+                         load_samples=load_samples,
+                         n_migrations=self.conductor.n_migrations)
+
+
+# ---------------------------------------------------------------------------
+# Coupled (vLLM-style) baseline cluster
+# ---------------------------------------------------------------------------
+
+class _CoupledInstance:
+    """Prefill inlined into the decode engine. Local prefix cache only."""
+
+    def __init__(self, iid: int, cfg: ModelConfig, inst_spec: InstanceSpec,
+                 cache_capacity, cache_policy: str) -> None:
+        self.iid = iid
+        self.cost = CostModel(cfg, inst_spec)
+        self.pool = CachePool(cache_capacity, cache_policy)
+        self.batch: list[ReqRecord] = []
+        self.waiting: list[ReqRecord] = []
+        self.kv_tokens = 0.0
+        self.ticking = False
+        self.queued_prefill_s = 0.0   # admission-visible backlog
+
+    def load(self) -> float:
+        return len(self.batch) + len(self.waiting)
+
+
+class CoupledCluster:
+    """vLLM-[N×M]: N instances, each coupling prefill + decode. Long-context
+    prefills block the whole batch (no chunked prefill), reproducing the
+    §8.1.2 TBT disruption. Requests go to the least-loaded instance."""
+
+    def __init__(self, cfg: ModelConfig, *, n_instances: int,
+                 inst_spec: InstanceSpec = InstanceSpec(),
+                 ttft_slo: float = 30.0, tbt_slo: float = 0.1,
+                 cache_capacity_blocks: Optional[int] = 20000,
+                 cache_policy: str = "lru",
+                 max_batch: int = 256, admit_load: float = 1e9) -> None:
+        self.cfg = cfg
+        self.insts = [_CoupledInstance(i, cfg, inst_spec,
+                                       cache_capacity_blocks, cache_policy)
+                      for i in range(n_instances)]
+        self.ttft_slo = ttft_slo
+        self.tbt_slo = tbt_slo
+        self.max_batch = max_batch
+        self.admit_load = admit_load
+
+    def run(self, requests: list[Request], *, speedup: float = 1.0,
+            load_sample_dt: float = 10.0) -> SimResult:
+        events = _Events()
+        records = [ReqRecord(req=r, arrival=r.timestamp / 1000.0 / speedup)
+                   for r in requests]
+
+        def tick(inst: _CoupledInstance, now: float):
+            if not inst.batch and not inst.waiting:
+                inst.ticking = False
+                return
+            # vLLM-v0 scheduling (the paper's baseline, §8.1.2): PREFILL
+            # PRIORITY — every waiting prefill runs (whole, unchunked)
+            # before decode resumes, VRAM permitting (coupled nodes
+            # reserve prefill activation space — kv_frac 0.5 vs 0.8 on a
+            # dedicated decode node). Long-context arrivals therefore
+            # stall the whole decode batch for their full prefill time.
+            cap = inst.cost.decode_capacity_tokens(kv_frac=0.5)
+            dt = 0.0
+            while inst.waiting and len(inst.batch) < self.max_batch and \
+                    inst.kv_tokens + inst.waiting[0].req.input_length \
+                    + inst.waiting[0].req.output_length <= cap:
+                rec = inst.waiting.pop(0)
+                n = inst.pool.lookup(rec.req.hash_ids)
+                inst.pool.insert(rec.req.hash_ids[n:], start_pos=n)
+                t_pf = inst.cost.prefill_time(rec.req.input_length,
+                                              n * BLOCK_TOKENS)
+                inst.queued_prefill_s -= t_pf
+                dt += t_pf
+                rec.ttft = now + dt - rec.arrival
+                rec.prefix_blocks = n
+                rec._last_tok = now + dt      # type: ignore
+                rec._emitted = 1              # type: ignore
+                inst.batch.append(rec)
+                inst.kv_tokens += rec.req.input_length
+            if inst.batch:
+                dt += inst.cost.decode_iter_time(
+                    len(inst.batch), inst.kv_tokens / len(inst.batch))
+            t2 = now + dt
+            done_recs = []
+            for rec in inst.batch:
+                if rec._emitted == 1 and rec.ttft + rec.arrival > now:
+                    pass  # this request's first token was in this gap
+                rec.tbts.append(t2 - rec._last_tok)  # type: ignore
+                rec._last_tok = t2                   # type: ignore
+                rec._emitted += 1                    # type: ignore
+                inst.kv_tokens += 1
+                if rec._emitted >= rec.req.output_length:  # type: ignore
+                    done_recs.append(rec)
+            for rec in done_recs:
+                inst.batch.remove(rec)
+                inst.kv_tokens -= rec.req.input_length + rec._emitted  # type: ignore
+                rec.done = t2
+            events.push(t2, lambda: tick(inst, t2))
+
+        def arrive(rec: ReqRecord):
+            now = rec.arrival
+            inst = min(self.insts, key=lambda i: i.load())
+            if inst.load() >= self.admit_load:
+                rec.reject_stage = "admission"
+                return
+            rec.accepted = True
+            inst.waiting.append(rec)
+            inst.queued_prefill_s += inst.cost.prefill_time(
+                rec.req.input_length, 0)
+            if not inst.ticking:
+                inst.ticking = True
+                events.push(now, lambda: tick(inst, now))
+
+        for rec in records:
+            events.push(rec.arrival, lambda rec=rec: arrive(rec))
+
+        while events:
+            t, fn = events.pop()
+            fn()
+        t_end = max([r.done for r in records if r.completed]
+                    + [r.arrival for r in records])
+        return SimResult(records=records, duration=t_end, load_samples=[])

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (BatchSpec, SyntheticLM, batch_spec_for,
+                                 realize_request_tokens)

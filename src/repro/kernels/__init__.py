@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving hot spots (DESIGN.md §4):
+flash_prefill (chunked-prefill attention), paged_attention (continuous-
+batching decode over block tables), ssd_scan (Mamba2 SSD mixer).
+Each ships kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatch) and
+ref.py (pure-jnp oracle); validated with interpret=True on CPU."""
+from repro.kernels.flash_prefill import flash_prefill_attention
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.ssd_scan import ssd_scan_op

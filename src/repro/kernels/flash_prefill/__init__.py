@@ -1,0 +1,2 @@
+from repro.kernels.flash_prefill.ops import flash_prefill_attention
+from repro.kernels.flash_prefill.ref import flash_prefill_ref

@@ -1,0 +1,119 @@
+"""Flash attention for chunked prefill — Pallas TPU kernel.
+
+The serving hot spot of §3 step 2 (incremental prefill): a query chunk of
+``Sq`` tokens starting at absolute offset ``q_offset`` attends a full
+``Sk``-token K/V (cached prefix + itself). Online-softmax accumulation
+over K blocks; GQA resolved in the BlockSpec index map (a q-head's grid
+step fetches its kv-head's block — no materialised head expansion).
+
+Tiling: grid (B, H, nq, nk) with the K loop as the innermost sequential
+dimension; VMEM scratch (acc, m, l) persists across the nk steps of one
+(b, h, iq) tile. Block sizes default to the MXU-native 128×128; the
+working set per step is q(BQ·D) + k,v(2·BK·D) + acc(BQ·D fp32) ≈ 160 KiB
+at D=128 — comfortably inside the ~16 MiB VMEM budget, leaving room for
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tpu_params(dimension_semantics):
+    try:
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except (AttributeError, TypeError):   # older/newer API spellings
+        return dict(dimension_semantics=dimension_semantics)
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, q_offset: int, window: int,
+                  bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)        # (BQ, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    qpos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                              # (BQ,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        den = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_offset", "window", "bq",
+                                             "bk", "interpret"))
+def flash_prefill(q, k, v, *, q_offset: int = 0, window: int = 0,
+                  bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                  interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D). Sq % bq == Sk % bk == 0."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    group = H // KV
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (D ** 0.5), q_offset=q_offset,
+        window=window, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+        ],
+        compiler_params=_tpu_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

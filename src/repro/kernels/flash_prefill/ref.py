@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the chunked-prefill flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, q_offset: int = 0, window: int = 0):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B, Sq, H, D) — queries at absolute positions q_offset + [0, Sq)
+    k, v: (B, Sk, KV, D) — keys/values at absolute positions [0, Sk)
+    window: 0 = full causal; else only attend within ``window`` positions.
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    kh = jnp.repeat(jnp.arange(KV), group)           # (H,) q-head → kv-head
+    k_exp = k[:, :, kh, :]                           # (B, Sk, H, D)
+    v_exp = v[:, :, kh, :]
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k_exp.astype(jnp.float32)) / (D ** 0.5)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = jnp.where(jnp.isfinite(logits), probs, 0.0)
+    den = probs.sum(-1, keepdims=True)
+    probs = probs / jnp.maximum(den, 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_exp.astype(jnp.float32))
+    return out.astype(q.dtype)

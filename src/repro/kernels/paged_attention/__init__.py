@@ -1,0 +1,2 @@
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref

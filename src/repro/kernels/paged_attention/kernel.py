@@ -1,0 +1,106 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+The continuous-batching hot spot (§3 step 4): each active sequence's
+single query token attends its paged KV through a block table. The page
+gather is fused into the attention: the BlockSpec index map reads the
+block table (scalar-prefetched into SMEM) and pulls exactly the pages the
+sequence owns from HBM into VMEM — no materialised contiguous copy.
+
+Grid (B, KV, n_pages): one kv-head's ``group`` query heads are processed
+together (GQA packing keeps the MXU matmul at (group × D) · (D × page)).
+Online softmax over the page loop; tokens past ``seq_lens[b]`` masked.
+VMEM per step: one (page, D) K tile + V tile + (group, D) accumulators —
+a few hundred KiB at page = 64, D = 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page: int, scale: float,
+                  n_pages: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (group, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    # token validity within this page
+    pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos < lens_ref[b]                        # (1, page)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)                 # (group, page)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        den = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    interpret: bool = False):
+    """q: (B, H, D); k/v_pages: (P, page, KV, D);
+    block_table: (B, max_pages) int32; seq_lens: (B,) int32."""
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    group = H // KV
+    qg = q.reshape(B, KV, group, D)
+
+    kernel = functools.partial(_paged_kernel, page=page,
+                               scale=1.0 / (D ** 0.5), n_pages=max_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D),
+                         lambda b, h, ip, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, ip, tbl, lens: (tbl[b, ip], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, ip, tbl, lens: (tbl[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D),
+                               lambda b, h, ip, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, D), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

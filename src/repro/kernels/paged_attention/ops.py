@@ -1,0 +1,19 @@
+"""Public op: paged decode attention (kernel or oracle dispatch)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref as _ref
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           use_pallas: bool = False,
+                           interpret: bool | None = None):
+    """q: (B, H, D) over one layer's paged KV → (B, H, D)."""
+    if not use_pallas:
+        return _ref(q, k_pages, v_pages, block_table, seq_lens)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _kernel(q, k_pages, v_pages, block_table, seq_lens,
+                   interpret=interpret)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
+    """One-token GQA attention over paged KV.
+
+    q:          (B, H, D) — the current token's queries
+    k_pages:    (P, page, KV, D) one layer's page store
+    v_pages:    (P, page, KV, D)
+    block_table:(B, max_pages) int32 page ids (0 = null page)
+    seq_lens:   (B,) int32 valid tokens per sequence
+    Returns (B, H, D) in q.dtype.
+    """
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    group = H // KV
+
+    k = k_pages[block_table]         # (B, max_pages, page, KV, D)
+    v = v_pages[block_table]
+    S = max_pages * page
+    k = k.transpose(0, 3, 1, 2, 4).reshape(B, KV, S, D)
+    v = v.transpose(0, 3, 1, 2, 4).reshape(B, KV, S, D)
+
+    qg = q.reshape(B, KV, group, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < seq_lens[:, None]       # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_scan_op
+from repro.kernels.ssd_scan.ref import ssd_naive_ref, ssd_scan_ref

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the chunked SSD scan — thin wrapper around the
+model's own `ssd_chunked` (which is itself validated against a naive
+per-token recurrence in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int, h0=None):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, n).
+    Returns (y (b, s, h, p) fp32, final_state (b, h, p, n) fp32)."""
+    y, state = ssd_chunked(x, dt, A, B, C, chunk, h0=h0)
+    return y.astype(jnp.float32), state
+
+
+def ssd_naive_ref(x, dt, A, B, C, h0=None):
+    """Per-token recurrence oracle (the ground truth for both the kernel
+    and `ssd_chunked`): h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    import jax
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), f32)
+
+    def step(hprev, t):
+        dA = jnp.exp(dt[:, t].astype(f32) * A[None, :])          # (b,h)
+        dBx = jnp.einsum("bn,bhp->bhpn", B[:, t].astype(f32),
+                         (x[:, t] * dt[:, t][..., None]).astype(f32))
+        hnew = hprev * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", hnew, C[:, t].astype(f32))
+        return hnew, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), hT                            # (b,s,h,p)

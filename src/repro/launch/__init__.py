@@ -1,0 +1,2 @@
+"""Distribution & launch: production meshes, sharding rules, step
+functions, the multi-pod dry-run driver, and train/serve CLIs."""

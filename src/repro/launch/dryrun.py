@@ -1,0 +1,192 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, WITHOUT allocating any real arrays.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod] [--hlo-out dir/]
+
+Proves the sharding config is coherent: jit(step).lower(ShapeDtypeStructs)
+.compile() must succeed on the 16×16 single-pod mesh and the 2×16×16
+multi-pod mesh; prints memory_analysis() (fits 16 GB/chip?) and
+cost_analysis() (FLOPs/bytes for the roofline).
+"""
+# The 512 placeholder devices MUST be claimed before jax initialises —
+# nothing above these two lines may import jax (directly or transitively).
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import check_divisibility, param_specs
+from repro.launch.steps import (INPUT_SHAPES, applicability, cache_specs,
+                                input_specs, make_dist, make_prefill_step,
+                                make_serve_step, make_train_step,
+                                opt_state_specs, opt_state_shapes)
+from repro.models.transformer import init_params
+
+
+from repro.launch.hlo_analysis import analyze as analyze_hlo
+from repro.launch.hlo_analysis import roofline_terms
+
+# §Perf iter 3 A/B switch: in-place buffer donation (default ON — the
+# shipped configuration; REPRO_DONATE=0 reproduces the baseline).
+DONATE = os.environ.get("REPRO_DONATE", "1") == "1"
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              compile_: bool = True, hlo_out: str | None = None,
+              verbose: bool = True) -> dict:
+    """Lower (and compile) one (arch, shape, mesh) combination.
+    Returns the roofline record."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    runs, note = applicability(cfg, shape)
+    if not runs:
+        return {"arch": arch, "shape": shape_name, "skipped": note}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dist = make_dist(mesh, shape)
+
+    # ---- parameter/optimizer shapes + shardings (no allocation) ----
+    p_shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    bad = check_divisibility(cfg, p_shapes, mesh)
+    assert not bad, f"sharding divisibility violations: {bad[:5]}"
+    p_specs = param_specs(cfg, p_shapes)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda s: isinstance(s, P))
+
+    args, a_specs = input_specs(cfg, shape, dist)
+    a_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), a_specs,
+                           is_leaf=lambda s: isinstance(s, P))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, dist)
+            o_shapes = opt_state_shapes(cfg, p_shapes)
+            o_specs = opt_state_specs(cfg, p_specs, p_shapes)
+            o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                                   is_leaf=lambda s: isinstance(s, P))
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, a_shard["batch"]),
+                out_shardings=(NamedSharding(mesh, P()), p_shard, o_shard),
+                # §Perf iter 3: donate params + optimizer state so the
+                # update aliases in place (no full-state copy per step)
+                donate_argnums=(0, 1) if DONATE else ())
+            lowered = jitted.lower(p_shapes, o_shapes, args["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, dist)
+            extra = {k: v for k, v in args.items() if k != "tokens"}
+            extra_shard = {k: a_shard[k] for k in extra}
+            c_specs = cache_specs(cfg, shape, dist)
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                                   is_leaf=lambda s: isinstance(s, P))
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, a_shard["tokens"], extra_shard),
+                out_shardings=(NamedSharding(mesh, P()), c_shard))
+            lowered = jitted.lower(p_shapes, args["tokens"], extra)
+        else:
+            step = make_serve_step(cfg, dist, shape)
+            c_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), a_specs["caches"],
+                is_leaf=lambda s: isinstance(s, P))
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, a_shard["tokens"], c_shard),
+                out_shardings=(NamedSharding(mesh, P()), c_shard),
+                # §Perf iter 3: donate the KV/state caches — the decode
+                # update writes in place instead of copying seq_len × L
+                # cache bytes every token
+                donate_argnums=(2,) if DONATE else ())
+            lowered = jitted.lower(p_shapes, args["tokens"], args["caches"])
+
+        t_lower = time.time() - t0
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "n_devices": mesh.size, "lower_s": round(t_lower, 1),
+               "note": note}
+
+        if compile_:
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 1)
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                                  getattr(mem, "temp_size_in_bytes", 0)),
+            }
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            rec["cost"] = {  # raw XLA numbers (while bodies counted ONCE)
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            }
+            # post-SPMD HLO walk with while-trip scaling → per-device totals
+            hlo = compiled.as_text()
+            rec["hlo_analysis"] = analyze_hlo(hlo)
+            rec["roofline"] = roofline_terms(rec["hlo_analysis"])
+            if hlo_out:
+                os.makedirs(hlo_out, exist_ok=True)
+                tag = f"{arch}__{shape_name}__{rec['mesh']}"
+                with open(os.path.join(hlo_out, tag + ".hlo.txt"), "w") as f:
+                    f.write(hlo)
+    if verbose:
+        print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="lower only (skip XLA compile)")
+    ap.add_argument("--hlo-out", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = list_configs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+                                compile_=not args.no_compile,
+                                hlo_out=args.hlo_out)
+                records.append(rec)
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures.append((arch, shape, repr(e)[:300]))
+                print(f"FAIL {arch} × {shape}: {e!r}"[:400], file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n{len(records)} lowered OK, {len(failures)} failed")
+    for a, s, e in failures:
+        print(f"  FAIL {a} × {s}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

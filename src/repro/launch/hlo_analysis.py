@@ -1,0 +1,298 @@
+"""Post-compile HLO analysis for the roofline (DESIGN.md §9).
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+but our layer stacks are ``lax.scan`` loops — a 94-layer model's compute
+would be undercounted 94×. This module parses ``compiled.as_text()``
+(post-SPMD-partitioning, per-device shapes) and walks the call graph with
+multipliers: fusions ×1, while bodies × trip count (extracted from the
+loop condition's comparison constant). It returns per-DEVICE totals of
+
+  * dot FLOPs        (2 · result_elems · contracted_dim per ``dot``)
+  * HBM byte proxy   (result + operand bytes of every scheduled op;
+                      fused subcomputations are covered by their callsite)
+  * collective bytes (result bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute,
+                      with all-reduce ×2 for the ring's reduce+broadcast)
+
+which feed the three roofline terms directly (per-device basis — no
+division by chip count needed).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?)\s([\w\-]+)\((.*)$")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    is_entry: bool = False
+    # local (unscaled) tallies
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll: dict = None
+    coll_counts: dict = None
+    calls: list = None          # (callee, kind) kind in {fusion, call}
+    whiles: list = None         # (cond_name, body_name)
+
+
+_ARITH = {"add", "subtract", "multiply", "divide", "dot", "convolution",
+          "exponential", "exponential-minus-one", "log", "log-plus-one",
+          "rsqrt", "sqrt", "power", "tanh", "logistic", "maximum",
+          "minimum", "negate", "abs", "sign", "floor", "ceil", "round",
+          "remainder", "reduce", "reduce-window", "cosine", "sine",
+          "atan2", "clamp"}
+
+
+def _is_conversion_artifact(comp: "_Computation") -> bool:
+    """True for fusions that only re-type/move data (XLA:CPU's hoisted
+    bf16↔f32 promotions of whole weight/cache stacks — ops that do not
+    exist on a native-bf16 TPU). A fusion with NO arithmetic and at least
+    one dtype convert is such an artifact; pure-bf16 data movement (real
+    KV-cache writes) has no converts and stays counted."""
+    has_convert = any(op.opcode == "convert" for op in comp.ops)
+    has_arith = any(op.opcode in _ARITH for op in comp.ops)
+    return has_convert and not has_arith
+
+
+def parse_hlo(text: str) -> dict:
+    """Parse a post-optimization HLO module into computations."""
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        s = re.sub(r"/\*.*?\*/", "", line).strip()   # tuple index comments
+        head = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.*{$", s)
+        if head:
+            cur = _Computation(name=head.group(2), calls=[], whiles=[],
+                               coll={c: 0.0 for c in COLLECTIVES},
+                               coll_counts={c: 0 for c in COLLECTIVES},
+                               is_entry=bool(head.group(1)))
+            comps[cur.name] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            # parameters: "%p = f32[...] parameter(0)" matches _OP_RE; other
+            # non-op lines (metadata continuation) are skipped
+            continue
+        name, type_str, opcode, rest = m.groups()
+        op = _Op(name=name, type_str=type_str, opcode=opcode, rest=rest)
+        # operand name list: ``rest`` starts right AFTER the opening paren
+        depth = 1
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        op.operands = re.findall(r"%([\w.\-]+)", args)
+        cur.ops.append(op)
+        cm = _CALLS_RE.search(s)
+        if cm:
+            cur.calls.append(cm.group(1))
+        elif opcode == "call":
+            am = re.search(r"to_apply=%([\w.\-]+)", s)
+            if am:
+                cur.calls.append(am.group(1))
+        wm = _WHILE_RE.search(s)
+        if wm and opcode == "while":
+            cur.whiles.append((wm.group(1), wm.group(2)))
+    return comps
+
+
+def _analyze_comp(comp: _Computation, comps: dict) -> None:
+    """Fill local tallies (flops incl. fused callees; bytes of scheduled
+    ops only; collectives)."""
+    symtab = {op.name: op.type_str for op in comp.ops}
+    for op in comp.ops:
+        if op.opcode == "fusion":
+            cm = _CALLS_RE.search(op.rest)
+            callee = comps.get(cm.group(1)) if cm else None
+            if callee is not None and _is_conversion_artifact(callee):
+                continue   # hoisted dtype-promotion fusion: not TPU bytes
+        if op.opcode in ("dot", "convolution"):
+            out_elems = _shape_elems(op.type_str)
+            lhs = symtab.get(op.operands[0]) if op.operands else None
+            lhs_elems = _shape_elems(lhs) if lhs else 0
+            # contracted size = lhs_elems / (out batch*row elems). For dot
+            # with single contraction this is exact; fall back to 1.
+            cd = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+            contracted = 1
+            if lhs and cd:
+                dims = _SHAPE_RE.search(lhs).group(2).split(",")
+                for i in cd.group(1).split(","):
+                    if i:
+                        contracted *= int(dims[int(i)])
+            comp.flops += 2.0 * out_elems * contracted
+        if op.opcode in ("parameter", "get-tuple-element", "bitcast",
+                         "tuple", "constant",
+                         # control flow: bodies are scaled separately and
+                         # the carried tuple is not re-read per call
+                         "while", "conditional", "call",
+                         # CPU-backend artifacts absent on TPU: XLA:CPU
+                         # promotes bf16 compute to f32 (convert/copy pairs)
+                         # and materialises layout changes; TPU runs bf16
+                         # natively with fused layouts (DESIGN.md §3).
+                         "convert", "copy", "transpose", "reshape",
+                         "broadcast", "iota"):
+            continue
+        # HBM byte proxy (TPU-fused pipeline semantics): every tensor is
+        # counted once where it is PRODUCED (result bytes); operand reads
+        # are added only for ops that stream large inputs through the
+        # memory system rather than consuming a just-produced tile —
+        # dots/convs (weights + activations), data movement (slice/
+        # gather/scatter/concat), reductions, and collectives.
+        b = _shape_bytes(op.type_str)
+        if op.opcode in ("dot", "convolution", "dynamic-slice",
+                         "dynamic-update-slice", "gather", "scatter",
+                         "reduce", "reduce-window", "select-and-scatter",
+                         "concatenate", "slice", "pad", "sort") \
+                or op.opcode.startswith(COLLECTIVES):
+            for o in op.operands:
+                if o in symtab:
+                    b += _shape_bytes(symtab[o])
+        comp.bytes_ += b
+        for c in COLLECTIVES:
+            if op.opcode == c or op.opcode == c + "-start":
+                nbytes = _shape_bytes(op.type_str)
+                if c == "all-reduce":
+                    nbytes *= 2          # ring: reduce-scatter + all-gather
+                comp.coll[c] += nbytes
+                comp.coll_counts[c] += 1
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Loop condition compares the induction variable against the trip
+    count: the largest scalar integer constant in the condition."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for m in _CONST_RE.finditer(op.rest):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(text: str) -> dict:
+    """Per-device totals with while-trip scaling."""
+    comps = parse_hlo(text)
+    for c in comps.values():
+        _analyze_comp(c, comps)
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def total(name: str) -> tuple:
+        c = comps[name]
+        flops, bytes_, coll = c.flops, c.bytes_, dict(c.coll)
+        counts = dict(c.coll_counts)
+        for callee in c.calls:
+            if callee in comps:
+                f2, b2, cl2, ct2 = total(callee)
+                flops += f2
+                # fused internals don't touch HBM: bytes NOT added
+                for k in coll:
+                    coll[k] += cl2[k]
+                    counts[k] += ct2[k]
+        for cond_name, body_name in c.whiles:
+            trips = _trip_count(comps[cond_name]) if cond_name in comps else 1
+            if body_name in comps:
+                f2, b2, cl2, ct2 = total(body_name)
+                flops += f2 * trips
+                bytes_ += b2 * trips
+                for k in coll:
+                    coll[k] += cl2[k] * trips
+                    counts[k] += ct2[k] * trips
+        return flops, bytes_, coll, counts
+
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:  # fall back: largest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+    flops, bytes_, coll, counts = total(entry.name)
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "collective_bytes": coll,
+        "collective_counts": counts,
+        "collective_total": sum(coll.values()),
+        "n_computations": len(comps),
+    }
+
+
+def roofline_terms(analysis: dict, *, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 50e9,
+                   ici_links: int = 4) -> dict:
+    """Three roofline terms in SECONDS (per device, hence per step)."""
+    t_compute = analysis["flops"] / peak_flops
+    t_memory = analysis["bytes"] / hbm_bw
+    t_coll = analysis["collective_total"] / (ici_bw * ici_links)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+        "t_bound_s": dom[0],
+    }

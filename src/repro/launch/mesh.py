@@ -1,0 +1,42 @@
+"""Production meshes (DESIGN.md §7).
+
+Single pod: a 16×16 TPU v5e slice (256 chips), axes (data, model).
+Multi-pod: 2 pods = 512 chips, axes (pod, data, model) — the ``pod`` axis
+carries only data/pipeline parallelism, never weight sharding (the paper's
+"don't extend TP across the slow fabric" mapped to ICI-vs-DCI).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init; the dry-run sets
+``xla_force_host_platform_device_count=512`` before importing jax).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU unit tests (requires forced host device count)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_stage_mesh(stages: int):
+    """CPP pipeline mesh (§5.1): one axis of prefill-group stages."""
+    return jax.make_mesh(
+        (stages,), ("stage",),
+        axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def batch_axes_of(mesh) -> tuple:
+    """Mesh axes that carry the batch dimension (everything except
+    'model' / 'stage')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

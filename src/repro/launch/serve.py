@@ -1,0 +1,89 @@
+"""Serving launcher: a single-host disaggregated Mooncake instance pair.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --requests 16 [--trace trace.jsonl]
+
+Runs the REAL engines (reduced model on CPU): a PrefillWorker with the
+host-DRAM KVCache pool (prefix reuse + chunked incremental prefill) feeds
+a continuous-batching DecodeWorker — the executable §3 workflow. With
+--trace, request arrival order/lengths/prefix structure come from a
+Mooncake-format trace (hash chains realised to actual tokens).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool-blocks", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.core.trace import TraceSpec, generate_trace, load_trace
+    from repro.data.pipeline import realize_request_tokens
+    from repro.models.transformer import init_params
+    from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    pool = HostKVPool(capacity_blocks=args.pool_blocks)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256)
+
+    if args.trace:
+        reqs = load_trace(args.trace, limit=args.requests)
+    else:
+        spec = TraceSpec(n_requests=args.requests, duration_ms=10_000,
+                         seed=args.seed, max_input_tokens=2048,
+                         chat_turn_mu=5.0, doc_len_mu=6.5)
+        reqs = generate_trace(spec)[:args.requests]
+    # scale lengths to smoke size
+    for r in reqs:
+        r.input_length = min(r.input_length, 1536)
+        r.hash_ids = r.hash_ids[:max(r.input_length // 512, 1)]
+
+    max_len = 2048
+    dw = DecodeWorker(params, cfg, max_batch=args.max_batch, max_len=max_len)
+    t0 = time.time()
+    done, total_new = 0, 0
+    queue = list(reqs)
+    outputs: dict = {}
+    while queue or dw.n_active:
+        while queue and dw.n_active < args.max_batch:
+            r = queue.pop(0)
+            toks = realize_request_tokens(r, cfg.vocab_size)
+            pres = pw(toks)
+            dw.join(r.req_id, pres, max_new=min(args.max_new,
+                                                max(r.output_length, 2)))
+            outputs[r.req_id] = [pres.first_token]
+            print(f"req {r.req_id:4d}: prefill {pres.prompt_len:5d} tokens, "
+                  f"reused {pres.reused_blocks} blocks, "
+                  f"computed {pres.prompt_len - 512 * pres.reused_blocks}")
+        for rid, tok, fin in dw.step():
+            outputs[rid].append(tok)
+            total_new += 1
+            if fin:
+                done += 1
+    dt = time.time() - t0
+    st = pw.stats
+    print(f"\nserved {done} requests in {dt:.1f}s — "
+          f"{total_new / dt:.1f} tok/s decode, "
+          f"pool: {pool.n_blocks} blocks resident, "
+          f"prefix reuse {st['reused_blocks']} blocks "
+          f"({512 * st['reused_blocks']} tokens skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Sharding rules: parameters are 2D-sharded — tensor-parallel over
+'model', FSDP over 'data' — and replicated over 'pod' (DESIGN.md §7: TP
+never crosses the pod fabric). Optimizer state follows its parameter.
+
+Rules are by parameter ROLE (pytree path), not shape, so every
+architecture kind maps through one table. All dimensions listed are
+verified divisible for the 10 assigned configs in tests/test_shardings.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# role → spec (leading L/stack axes are added automatically)
+_RULES: dict[str, P] = {
+    # embeddings
+    "embed":        P("model", "data"),
+    "lm_head":      P("data", "model"),
+    "final_ln":     P(),
+    "enc_final_ln": P(),
+    # attention (flat head*dim last axes)
+    "attn.ln":      P(),
+    "attn.wq":      P("data", "model"),
+    "attn.wk":      P("data", "model"),
+    "attn.wv":      P("data", "model"),
+    "attn.wo":      P("model", "data"),
+    "attn.bq":      P("model"),
+    "attn.bk":      P("model"),
+    "attn.bv":      P("model"),
+    "attn.q_norm":  P(),
+    "attn.k_norm":  P(),
+    # dense MLP
+    "mlp.ln":       P(),
+    "mlp.w1":       P("data", "model"),
+    "mlp.w2":       P("model", "data"),
+    "mlp.w3":       P("data", "model"),
+    # MoE, expert-parallel (experts on 'model'; experts lead after stack)
+    "moe.ln":       P(),
+    "moe.router":   P("data", None),
+    "moe.w1":       P("model", "data", None),
+    "moe.w2":       P("model", None, "data"),
+    "moe.w3":       P("model", "data", None),
+    # MoE, tensor-parallel experts (few-expert models: expert FF hidden on
+    # 'model' — mixtral's 8 experts < model axis 16)
+    "moe_tp.ln":     P(),
+    "moe_tp.router": P("data", None),
+    "moe_tp.w1":     P(None, "data", "model"),
+    "moe_tp.w2":     P(None, "model", "data"),
+    "moe_tp.w3":     P(None, "data", "model"),
+    # Mamba2
+    "mamba.ln":       P(),
+    "mamba.in_proj":  P("data", "model"),
+    "mamba.conv_w":   P(None, "model"),
+    "mamba.dt_bias":  P(),
+    "mamba.A_log":    P(),
+    "mamba.D":        P(),
+    "mamba.norm":     P("model"),
+    "mamba.out_proj": P("model", "data"),
+}
+
+# how many leading stack axes each top-level group carries
+_STACK_DEPTH = {
+    "attn": 1, "mlp": 1, "moe": 1, "mamba": 1,
+    "enc_attn": 1, "enc_mlp": 1, "cross_attn": 1,
+    # jamba period-scan groups: (n_per, inner, ...)
+    "ffn_dense": 2, "ffn_moe": 2,
+}
+_GROUP_ALIAS = {
+    "enc_attn": "attn", "enc_mlp": "mlp", "cross_attn": "attn",
+    "ffn_dense": "mlp", "ffn_moe": "moe",
+}
+
+
+def _spec_for(path: tuple[str, ...], leaf, cfg: ModelConfig,
+              hybrid: bool) -> P:
+    top = path[0]
+    if top in ("embed", "lm_head", "final_ln", "enc_final_ln"):
+        return _RULES[top]
+    group = _GROUP_ALIAS.get(top, top)
+    stack = _STACK_DEPTH.get(top, 1)
+    if hybrid and top == "mamba":
+        stack = 2  # (n_per, inner, ...)
+    if group == "moe" and cfg.moe is not None and cfg.moe.parallelism == "tp":
+        group = "moe_tp"
+    rule = _RULES[f"{group}.{path[-1]}"]
+    spec = (None,) * stack + tuple(rule)
+    # pad/trim to the leaf rank
+    spec = spec[:leaf.ndim]
+    spec = spec + (None,) * (leaf.ndim - len(spec))
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params: Any) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (init_params output or
+    its eval_shape)."""
+    hybrid = bool(cfg.attn_every)
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _spec_for(
+            tuple(k.key for k in kp), leaf, cfg, hybrid),
+        params)
+
+
+def check_divisibility(cfg: ModelConfig, params, mesh) -> list[str]:
+    """Every sharded dim must divide by its mesh axes. Returns violations
+    (empty = good) — used by tests and the dry-run preflight."""
+    specs = param_specs(cfg, params)
+    bad: list[str] = []
+
+    def visit(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim % size:
+                bad.append(f"{jax.tree_util.keystr(path)}: {dim} % {size}")
+
+    jax.tree_util.tree_map_with_path(visit, params, specs)
+    return bad
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

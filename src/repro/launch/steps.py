@@ -1,0 +1,253 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture × input shape) combination — what the dry-run lowers.
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   train_step
+  prefill_32k  seq 32,768  global_batch 32    prefill_step (chunk-causal)
+  decode_32k   seq 32,768  global_batch 128   serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     serve_step (sub-quadratic only)
+
+Sharding (DESIGN.md §7): weights TP on 'model' × FSDP on 'data',
+replicated on 'pod'; activations batch on ('pod','data'); KV caches shard
+batch on ('pod','data') and the SEQUENCE dim on 'model' (context-parallel
+decode — the memory-bound KV read is what decode rooflines on, so the
+sequence is striped across the TP group). ``long_500k`` (batch 1) stripes
+the sequence over ('data','model') = all 256 chips instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DTYPE, Dist
+from repro.models.mamba import MambaState
+from repro.models.transformer import (Caches, KVCache, decode_step,
+                                      init_caches, init_params, loss_fn,
+                                      prefill)
+from repro.training.optim import make_optimizer
+
+SERVE_WINDOW = 8192   # sliding-window serving variant for dense long_500k
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+    long: bool = False
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, long=True),
+}
+
+
+def applicability(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether this (arch, shape) runs, and how (DESIGN.md §6)."""
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.max_decode_len and cfg.max_decode_len < shape.seq:
+        return False, (f"decoder architecturally capped at "
+                       f"{cfg.max_decode_len} tokens — skip")
+    if cfg.kind in ("ssm", "hybrid"):
+        return True, "constant-state SSM path (+ KV for hybrid attn layers)"
+    if cfg.sliding_window:
+        return True, f"native SWA window={cfg.sliding_window} (ring cache)"
+    return True, f"sliding-window serving variant (--serve-window {SERVE_WINDOW})"
+
+
+def serve_window(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Effective attention window for a decode shape (0 = full)."""
+    if shape.name != "long_500k":
+        return cfg.sliding_window
+    if cfg.kind in ("ssm", "hybrid"):
+        return cfg.sliding_window
+    return cfg.sliding_window or SERVE_WINDOW
+
+
+# ---------------------------------------------------------------------------
+# distribution context
+# ---------------------------------------------------------------------------
+
+def make_dist(mesh, shape: ShapeSpec) -> Dist:
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if shape.batch == 1:
+        batch_axes = ()           # long_500k: nothing to shard on batch
+    return Dist(mesh=mesh, batch_axes=batch_axes)
+
+
+def _batch_spec(dist: Dist, *rest) -> P:
+    return dist.batch_spec(*rest)
+
+
+def _seq_axes(dist: Dist) -> Any:
+    """Axes striping a KV-cache sequence dim: 'model', plus 'data'/'pod'
+    when the batch doesn't use them (long_500k)."""
+    if dist.batch_axes:
+        return "model"
+    free = tuple(a for a in dist.mesh.axis_names if a != "model")
+    return free + ("model",)
+
+
+# ---------------------------------------------------------------------------
+# cache construction (shapes + shardings)
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeSpec):
+    window = serve_window(cfg, shape)
+    enc_len = cfg.frontend_tokens if cfg.encoder_layers else 0
+    shapes = jax.eval_shape(
+        lambda: init_caches(cfg, shape.batch, shape.seq,
+                            enc_len=enc_len, window=window))
+    return shapes
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, dist: Dist) -> Caches:
+    b = dist.batch_axes or None
+    if isinstance(b, tuple) and len(b) == 1:
+        b = b[0]
+    seq = _seq_axes(dist)
+    kv = ssm = enc_kv = None
+    if cfg.attention_layers:
+        lead = (None,)  # stacked layer axis (hybrid: n_per — still one axis)
+        kv = KVCache(k=P(*lead, b, seq, None, None),
+                     v=P(*lead, b, seq, None, None))
+    if cfg.ssm is not None and cfg.kind in ("ssm", "hybrid"):
+        if cfg.attn_every:
+            ssm = MambaState(ssm=P(None, None, b, "model", None, None),
+                             conv=P(None, None, b, None, "model"))
+        else:
+            ssm = MambaState(ssm=P(None, b, "model", None, None),
+                             conv=P(None, b, None, "model"))
+    if cfg.encoder_layers:
+        enc_kv = KVCache(k=P(None, b, None, None, None),
+                         v=P(None, b, None, None, None))
+    return Caches(kv=kv, ssm=ssm, enc_kv=enc_kv, length=P())
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, dist: Dist):
+    """Returns (args: dict of ShapeDtypeStruct pytrees, arg_specs: matching
+    PartitionSpec pytrees) for the step function of ``shape.kind``."""
+    b = dist.batch_axes or None
+    if isinstance(b, tuple) and len(b) == 1:
+        b = b[0]
+    B, S = shape.batch, shape.seq
+    f32, i32 = jnp.float32, jnp.int32
+
+    def tok(s):
+        return jax.ShapeDtypeStruct((B, s), i32)
+
+    args: dict = {}
+    specs: dict = {}
+    if shape.kind == "train":
+        args["batch"] = {"tokens": tok(S), "labels": tok(S)}
+        specs["batch"] = {"tokens": P(b, None), "labels": P(b, None)}
+        if cfg.frontend == "patch":
+            args["batch"]["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), f32)
+            specs["batch"]["patches"] = P(b, None, "model")
+        if cfg.frontend == "audio":
+            args["batch"]["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), f32)
+            specs["batch"]["frames"] = P(b, None, "model")
+    elif shape.kind == "prefill":
+        args["tokens"] = tok(S)
+        specs["tokens"] = P(b, None)
+        if cfg.frontend == "patch":
+            args["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), f32)
+            specs["patches"] = P(b, None, "model")
+        if cfg.frontend == "audio":
+            args["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), f32)
+            specs["frames"] = P(b, None, "model")
+    else:  # decode
+        args["tokens"] = tok(1)
+        specs["tokens"] = P(b, None)
+        args["caches"] = cache_shapes(cfg, shape)
+        specs["caches"] = cache_specs(cfg, shape, dist)
+    return args, specs
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, dist: Dist):
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, dist))(params)
+        new_params, new_opt = opt_update(params, grads, opt_state)
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, dist: Dist):
+    def prefill_step(params, tokens, extra):
+        """``extra``: {} or {'frames': ...} / {'patches': ...} (stub
+        modality embeddings)."""
+        return prefill(params, tokens, cfg, dist,
+                       frames=extra.get("frames"),
+                       patches=extra.get("patches"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, dist: Dist, shape: ShapeSpec):
+    window = serve_window(cfg, shape)
+    # ring buffer when the cache is sized AT the window (windowed serving)
+    ring = bool(window) and window < shape.seq
+
+    def serve_step(params, tokens, caches):
+        return decode_step(params, tokens, caches, cfg, dist,
+                           ring=ring, window_override=window or None)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# optimizer state specs
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(cfg: ModelConfig, p_specs, param_shapes):
+    """OptState sharding: m/v follow the parameter; adafactor's factored v
+    (row, col) drop the last / second-to-last parameter axis."""
+    from repro.training.optim import OptState
+
+    if cfg.optimizer == "adamw":
+        return OptState(step=P(), m=p_specs, v=p_specs)
+
+    is_spec = lambda s: isinstance(s, P)
+
+    def v_spec(spec, shp):
+        if shp.ndim < 2:          # unfactored second moment
+            return spec
+        t = tuple(spec) + (None,) * (shp.ndim - len(tuple(spec)))
+        return (P(*t[:-1]), P(*(t[:-2] + t[-1:])))
+
+    v = jax.tree.map(v_spec, p_specs, param_shapes, is_leaf=is_spec)
+    return OptState(step=P(), m=p_specs, v=v)
+
+
+def opt_state_shapes(cfg: ModelConfig, param_shapes):
+    from repro.training.optim import make_optimizer as mk
+    init, _ = mk(cfg.optimizer)
+    return jax.eval_shape(init, param_shapes)

@@ -1,0 +1,544 @@
+"""Transformer building blocks (pure JAX, bf16 compute / fp32 reductions).
+
+Sharding philosophy: parameters are annotated by ``launch/shardings.py``
+(FSDP over 'data', tensor-parallel over 'model'); inside the forward we only
+place activation constraints at block boundaries and run the MoE hot-path
+under ``shard_map`` (expert-parallel all_to_all or tensor-parallel experts),
+because XLA's SPMD partitioner handles scatter-based token dispatch poorly.
+
+GQA with head counts not divisible by the model axis (smollm 15H/5KV,
+whisper 20H, qwen3-14b 40H): query heads are padded to a multiple of 16 and
+K/V are expanded per padded query head with a static gather
+(``qh2kv`` map). The gather adds HBM traffic but no FLOPs — the grouped
+einsum for divisible archs is a recorded §Perf optimization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MODEL_AXIS
+
+DTYPE = jnp.bfloat16
+
+# §Perf iteration 2 (EXPERIMENTS.md): grouped GQA attention — contract
+# grouped queries against the raw (KV, Dh) cache instead of materialising
+# a per-query-head expanded copy (jnp.take over heads). Requires
+# padded_heads % n_kv_heads == 0; others keep the expansion path.
+GROUPED_ATTN = __import__("os").environ.get("REPRO_GROUPED_ATTN", "1") == "1"
+# §Perf iteration 3: Megatron-style sequence-sharded residual stream —
+# block-boundary activations sharded over 'model' on the sequence dim so
+# TP all-reduces become all-gather + reduce-scatter pairs (half traffic)
+# and norms/residuals compute on S/16 shards.
+SEQ_SHARDED_RESIDUAL = __import__("os").environ.get(
+    "REPRO_SEQ_SHARDED", "1") == "1"
+
+# Pallas hot path: route prefill-attention chunks through the
+# flash_prefill kernel (kernels/flash_prefill). Default off on this CPU
+# rig (interpret mode is for validation, not speed); on TPU flip it on.
+USE_PALLAS_ATTN = __import__("os").environ.get(
+    "REPRO_USE_PALLAS", "0") == "1"
+
+# Token count at/below which MoE uses the global (pjit-propagated) dispatch;
+# above it, the shard_map expert-parallel path (decode steps are tiny,
+# train/prefill are huge).
+MOE_GLOBAL_DISPATCH_MAX_TOKENS = 4096
+# Query-chunk length for the scanned (flash-style) attention path.
+ATTN_CHUNK_Q = 1024
+# MoE dispatch group length inside shard_map (bounds the dispatch buffer).
+MOE_GROUP_TOKENS = 8192
+
+
+@dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded through the model forward."""
+    mesh: Optional[Mesh] = None
+    batch_axes: Any = ("pod", "data")  # mesh axes carrying the batch dim
+    model_axis: str = "model"
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, name) -> int:
+        if not self.active:
+            return 1
+        if isinstance(name, tuple):
+            import math
+            return math.prod(self.mesh.shape[a] for a in name if a in self.mesh.shape)
+        return self.mesh.shape.get(name, 1)
+
+    def batch_spec(self, *rest) -> P:
+        ax = tuple(a for a in self.batch_axes if self.axis_size(a) > 1) or None
+        if isinstance(ax, tuple) and len(ax) == 1:
+            ax = ax[0]
+        return P(ax, *rest)
+
+    def residual_spec(self, seq_len: int) -> P:
+        """Block-boundary residual sharding: (batch, seq, d_model).
+        §Perf iter 3 (SEQ_SHARDED_RESIDUAL): shard the sequence over
+        'model' so TP all-reduces lower to all-gather + reduce-scatter
+        (half the traffic) and norms/residuals compute on S/TP shards."""
+        if SEQ_SHARDED_RESIDUAL and seq_len > 1 \
+                and seq_len % max(self.axis_size(self.model_axis), 1) == 0:
+            return self.batch_spec(self.model_axis, None)
+        return self.batch_spec(None, None)
+
+    def constrain(self, x, spec: P):
+        if self.active:
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(self.mesh, spec))
+        return x
+
+
+NO_DIST = Dist()
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def qh2kv_map(n_q: int, n_kv: int, padded_q: int) -> jnp.ndarray:
+    """Static map padded-query-head -> kv head (llama grouping; padded extra
+    heads reuse kv head 0 — their output projection rows are zero-init)."""
+    group = max(n_q // max(n_kv, 1), 1)
+    idx = [min(h // group, n_kv - 1) if h < n_q else 0 for h in range(padded_q)]
+    return jnp.asarray(idx, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attend(q, k, v, mask, scale):
+    """q:(B,Sq,H,D); k,v:(B,Sk,H,D) *or* (B,Sk,KV,D) with H = KV·g
+    (grouped GQA — §Perf iteration 2: contract grouped queries against the
+    raw KV instead of materialising an H-wide expanded copy).
+    mask:(B?,1,Sq,Sk) bool -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        g = H // KV
+        qg = q.reshape(B, Sq, KV, g, D)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(mask[:, :, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+        return o.reshape(B, Sq, H, D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def causal_attention(q, k, v, q_offset, window: int = 0,
+                     chunk_q: int = ATTN_CHUNK_Q):
+    """Causal (optionally sliding-window) attention over a full K/V.
+
+    q: (B, Sq, H, D) at absolute positions q_offset + [0, Sq)
+    k, v: (B, Sk, H, D) at absolute positions [0, Sk)   (Sk >= q_offset+Sq)
+    Scanned over query chunks so the (Sq, Sk) logits never materialize whole.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    kpos = jnp.arange(Sk)
+
+    def mask_for(qpos):  # qpos (C,) absolute
+        m = qpos[:, None] >= kpos[None, :]
+        if window:
+            m &= (qpos[:, None] - kpos[None, :]) < window
+        return m[None, None]  # (1,1,C,Sk)
+
+    if USE_PALLAS_ATTN and Sq % 16 == 0 and Sk % 16 == 0 \
+            and isinstance(q_offset, int) and D in (32, 64, 128, 256):
+        from repro.kernels.flash_prefill.ops import flash_prefill_attention
+        return flash_prefill_attention(q, k, v, q_offset=q_offset,
+                                       window=window, use_pallas=True)
+
+    if Sq <= chunk_q:
+        qpos = q_offset + jnp.arange(Sq)
+        return _attend(q, k, v, mask_for(qpos), scale)
+
+    n_chunks = Sq // chunk_q
+    rem = Sq - n_chunks * chunk_q
+    qs = q[:, :n_chunks * chunk_q].reshape(B, n_chunks, chunk_q, H, D)
+    qs = jnp.moveaxis(qs, 1, 0)  # (n_chunks, B, C, H, D)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        qpos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+        return None, _attend(qc, k, v, mask_for(qpos), scale)
+
+    _, out = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * chunk_q, H, D)
+    if rem:
+        qpos = q_offset + n_chunks * chunk_q + jnp.arange(rem)
+        tail = _attend(q[:, -rem:], k, v, mask_for(qpos), scale)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, window: int = 0):
+    """One-token attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S_cache, H, D) with RoPE already
+    applied at write time. ``cache_len`` counts tokens written *including*
+    the current one — scalar or (B,) for continuous batching. For sliding
+    windows the cache IS the window (ring buffer), so every slot
+    < min(cache_len, S_cache) is valid.
+    """
+    B, S, KVH, D = k_cache.shape      # KVH = H (expanded) or KV (grouped)
+    scale = 1.0 / (D ** 0.5)
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 1:
+        clen = clen[:, None]          # (B, 1)
+    valid = jnp.arange(S)[None, :] < jnp.minimum(clen, S)  # (1|B, S)
+    if window and S > window:
+        # linear (non-ring) cache of a windowed arch: mask slots older
+        # than the window (ring callers size the cache AT the window).
+        valid &= jnp.arange(S)[None, :] >= clen - window
+    mask = valid[:, None, None, :]  # (B|1, 1, 1, S)
+    return _attend(q, k_cache, v_cache, mask, scale)
+
+
+def attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
+                    q_offset=0, cache=None, cache_len=None, ring: bool = False,
+                    kv_out: bool = False, enc_kv=None, causal: bool = True,
+                    window_override: Optional[int] = None):
+    """Full attention sub-block: norm -> qkv -> rope -> attend -> out proj.
+
+    Returns (y, new_cache_or_kv):
+      * train/prefill (cache is None): new KV (k, v) if kv_out else None
+      * decode (cache = (k_cache, v_cache)): updated cache
+      * cross-attention (enc_kv given): attends encoder K/V, no cache.
+    """
+    B, S, _ = x.shape
+    Hp, KV, Dh = cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if window_override is None else window_override
+    # grouped GQA (§Perf iter 2): skip the per-query-head KV expansion.
+    # Only when heads are unpadded does the contiguous (KV, g) reshape
+    # agree with the qh2kv mapping (padded archs — smollm/whisper/
+    # qwen3-14b — keep the gather; group-contiguous head reordering for
+    # padded archs is a recorded future iteration).
+    grouped = GROUPED_ATTN and Hp == cfg.n_heads and Hp % KV == 0
+
+    def expand(t):
+        return t if grouped else jnp.take(t, qh2kv, axis=2)
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, Hp, Dh)
+    if cfg.attn_bias:
+        q = q + p["bq"].reshape(1, 1, Hp, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+
+    qh2kv = qh2kv_map(cfg.n_heads, KV, Hp)
+
+    if enc_kv is not None:  # cross-attention: K/V precomputed from encoder
+        k_full, v_full = enc_kv  # (B, S_enc, KV, Dh), rope-free
+        k_exp = expand(k_full)
+        v_exp = expand(v_full)
+        Sk = k_exp.shape[1]
+        mask = jnp.ones((1, 1, S, Sk), dtype=bool)
+        o = _attend(q, k_exp, v_exp, mask, 1.0 / (Dh ** 0.5))
+        y = o.reshape(B, S, Hp * Dh) @ p["wo"]
+        return y, None
+
+    k = (h @ p["wk"]).reshape(B, S, KV, Dh)
+    v = (h @ p["wv"]).reshape(B, S, KV, Dh)
+    if cfg.attn_bias:
+        k = k + p["bk"].reshape(1, 1, KV, Dh)
+        v = v + p["bv"].reshape(1, 1, KV, Dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if cache is None:
+        positions = q_offset + jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        # §Perf iteration 5 (REFUTED, reverted — see EXPERIMENTS.md): the
+        # partitioner all-gathers the H-headed Q here instead of the
+        # KV-headed K/V (H/KV× more traffic than necessary). Explicitly
+        # constraining K/V replicated (with or without pinning Q to the
+        # sequence shards) back-propagated replication through the whole
+        # layer: 11× redundant FLOPs/bytes. GSPMD's Q-gather stands.
+        k_exp = expand(k)
+        v_exp = expand(v)
+        if causal:
+            o = causal_attention(q, k_exp, v_exp, q_offset, window)
+        else:
+            Sk = k_exp.shape[1]
+            mask = jnp.ones((1, 1, S, Sk), dtype=bool)
+            o = _attend(q, k_exp, v_exp, mask, 1.0 / (Dh ** 0.5))
+        y = o.reshape(B, S, Hp * Dh) @ p["wo"]
+        return y, ((k, v) if kv_out else None)
+
+    # ---- decode/extend: write S new tokens at absolute position cache_len --
+    # ``cache_len`` is scalar (uniform batch: serve_step / chunked prefill)
+    # or (B,) (continuous batching: every slot at a different depth).
+    k_cache, v_cache = cache  # (B, S_cache, KV, Dh)
+    S_cache = k_cache.shape[1]
+    pos = jnp.asarray(cache_len)  # absolute position of the first new token
+    per_seq = pos.ndim == 1
+    positions = (pos[:, None] if per_seq else pos) \
+        + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = apply_rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+
+    def upd(cache_b, new_b, at):
+        return jax.lax.dynamic_update_slice_in_dim(cache_b, new_b, at, axis=0)
+
+    if ring:
+        # sliding-window ring buffer: the cache IS the window (S == 1 path,
+        # used by serve_step for long-context decode of windowed archs).
+        slot = pos % S_cache
+        if per_seq:
+            k_cache = jax.vmap(upd)(k_cache, k, slot)
+            v_cache = jax.vmap(upd)(v_cache, v, slot)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+        o = decode_attention(q, expand(k_cache), expand(v_cache),
+                             pos + 1, window)
+    else:
+        if per_seq:
+            k_cache = jax.vmap(upd)(k_cache, k, pos)
+            v_cache = jax.vmap(upd)(v_cache, v, pos)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        if per_seq:
+            o = decode_attention(q, expand(k_cache), expand(v_cache),
+                                 pos + S, window)
+        else:
+            o = causal_attention(q, expand(k_cache), expand(v_cache),
+                                 pos, window)
+    y = o.reshape(B, S, Hp * Dh) @ p["wo"]
+    return y, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_block(x, p, cfg: ModelConfig):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.silu(h @ p["w1"])
+    up = h @ p["w3"]
+    return (gate * up) @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _dispatch_indices(gates_idx, n_experts: int, capacity: int):
+    """gates_idx: (T, k) expert ids -> flat slot ids (T*k,) into an
+    (E*C [+1 overflow]) buffer; slot E*C means 'dropped'."""
+    Tk = gates_idx.shape[0] * gates_idx.shape[1]
+    flat_e = gates_idx.reshape(Tk)
+    oh = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (Tk, E)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    pos_e = jnp.sum(pos * oh, axis=-1)  # (Tk,) position within expert
+    slot = flat_e * capacity + pos_e
+    return jnp.where(pos_e < capacity, slot, n_experts * capacity)
+
+
+def _expert_ffn(buf, w1, w2, w3):
+    """buf: (E, C, D); w*: (E, D, F)/(E, F, D) -> (E, C, D)."""
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1))
+    up = jnp.einsum("ecd,edf->ecf", buf, w3)
+    return jnp.einsum("ecf,efd->ecd", gate * up, w2)
+
+
+def _route(xf, router_w, top_k: int):
+    logits = (xf @ router_w).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * mean(f_e * p_e)
+    E = router_w.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates.astype(xf.dtype), idx, aux
+
+
+def _moe_dispatch_compute(xf, router_w, w1, w2, w3, top_k, capacity):
+    """Scatter-dispatch MoE on a flat token slab (T, D). Local/global agnostic."""
+    T, D = xf.shape
+    E = router_w.shape[-1]
+    gates, idx, aux = _route(xf, router_w, top_k)
+    slot = _dispatch_indices(idx, E, capacity)  # (T*k,)
+    x_rep = jnp.repeat(xf, top_k, axis=0)  # (T*k, D)
+    buf = jnp.zeros((E * capacity + 1, D), dtype=xf.dtype).at[slot].add(x_rep)
+    out = _expert_ffn(buf[:-1].reshape(E, capacity, D), w1, w2, w3)
+    out_flat = jnp.concatenate(
+        [out.reshape(E * capacity, D), jnp.zeros((1, D), dtype=xf.dtype)])
+    y = jnp.take(out_flat, slot, axis=0).reshape(T, top_k, D)
+    y = jnp.sum(y * gates[:, :, None], axis=1)
+    return y, aux
+
+
+def _moe_ep_local(xf, router_w, w1l, w2l, w3l, *, top_k, capacity,
+                  model_axis, ep, batch_axes):
+    """Inside shard_map: xf (T_loc, D) local tokens; w*l (E_loc, D, F) local
+    experts. all_to_all over the model axis redistributes capacity slabs."""
+    T, D = xf.shape
+    E_loc = w1l.shape[0]
+    E = E_loc * ep
+    gates, idx, aux = _route(xf, router_w, top_k)
+    n_groups = max(T // MOE_GROUP_TOKENS, 1)
+    G = T // n_groups
+
+    def one_group(carry, args):
+        xg, idxg, gatesg = args
+        slot = _dispatch_indices(idxg, E, capacity)
+        x_rep = jnp.repeat(xg, top_k, axis=0)
+        buf = jnp.zeros((E * capacity + 1, D), dtype=xg.dtype).at[slot].add(x_rep)
+        buf = buf[:-1].reshape(E, capacity, D)
+        if ep > 1:
+            # (E, C, D) -> peers: send expert-slab i*E_loc..(i+1)E_loc to peer i
+            buf = jax.lax.all_to_all(buf, model_axis, split_axis=0,
+                                     concat_axis=1, tiled=True)
+            # now (E_loc, ep*C, D): all peers' tokens for my local experts
+        out = _expert_ffn(buf, w1l, w2l, w3l)
+        if ep > 1:
+            out = jax.lax.all_to_all(out, model_axis, split_axis=1,
+                                     concat_axis=0, tiled=True)
+        out_flat = jnp.concatenate(
+            [out.reshape(E * capacity, D), jnp.zeros((1, D), dtype=xg.dtype)])
+        y = jnp.take(out_flat, slot, axis=0).reshape(G, top_k, D)
+        return carry, jnp.sum(y * gatesg[:, :, None], axis=1)
+
+    xg = xf.reshape(n_groups, G, D)
+    idxg = idx.reshape(n_groups, G, top_k)
+    gatesg = gates.reshape(n_groups, G, top_k)
+    _, y = jax.lax.scan(one_group, None, (xg, idxg, gatesg))
+    if batch_axes:
+        aux = jax.lax.pmean(aux, batch_axes)
+    return y.reshape(T, D), aux
+
+
+def _moe_tp_local(xf, router_w, w1l, w2l, w3l, *, top_k, capacity, model_axis,
+                  batch_axes):
+    """Inside shard_map: all experts local, expert-FF hidden dim sharded over
+    the model axis (row/column parallel) -> psum after the down projection."""
+    T, D = xf.shape
+    E = router_w.shape[-1]
+    gates, idx, aux = _route(xf, router_w, top_k)
+    n_groups = max(T // MOE_GROUP_TOKENS, 1)
+    G = T // n_groups
+
+    def one_group(carry, args):
+        xg, idxg, gatesg = args
+        slot = _dispatch_indices(idxg, E, capacity)
+        x_rep = jnp.repeat(xg, top_k, axis=0)
+        buf = jnp.zeros((E * capacity + 1, D), dtype=xg.dtype).at[slot].add(x_rep)
+        out = _expert_ffn(buf[:-1].reshape(E, capacity, D), w1l, w2l, w3l)
+        out = jax.lax.psum(out, model_axis)
+        out_flat = jnp.concatenate(
+            [out.reshape(E * capacity, D), jnp.zeros((1, D), dtype=xg.dtype)])
+        y = jnp.take(out_flat, slot, axis=0).reshape(G, top_k, D)
+        return carry, jnp.sum(y * gatesg[:, :, None], axis=1)
+
+    xg = xf.reshape(n_groups, G, D)
+    idxg = idx.reshape(n_groups, G, top_k)
+    gatesg = gates.reshape(n_groups, G, top_k)
+    _, y = jax.lax.scan(one_group, None, (xg, idxg, gatesg))
+    if batch_axes:
+        aux = jax.lax.pmean(aux, batch_axes)
+    return y.reshape(T, D), aux
+
+
+def moe_block(x, p, cfg: ModelConfig, dist: Dist):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    T_total = B * S
+    cap_of = lambda T: max(int(T * moe.top_k / moe.n_experts
+                               * moe.capacity_factor + 0.999), moe.top_k)
+
+    if not dist.active or T_total <= MOE_GLOBAL_DISPATCH_MAX_TOKENS:
+        y, aux = _moe_dispatch_compute(
+            h.reshape(T_total, D), p["router"], p["w1"], p["w2"], p["w3"],
+            moe.top_k, cap_of(T_total))
+        return y.reshape(B, S, D), aux
+
+    mesh = dist.mesh
+    ma = dist.model_axis
+    ep = dist.axis_size(ma)
+    batch_axes = tuple(a for a in dist.batch_axes if a in mesh.shape)
+    dp = dist.axis_size(batch_axes)
+
+    use_ep = moe.parallelism == "ep" and moe.n_experts % ep == 0 \
+        and T_total % (max(dp, 1) * ep) == 0
+    if use_ep:
+        # expert parallelism: tokens are split over the MODEL axis too
+        # (each device dispatches its own token slice; the all_to_all
+        # exchanges capacity slabs). Without the model-axis split every
+        # model-row device would redundantly dispatch the same tokens —
+        # ep× wasted FLOPs (EXPERIMENTS.md §Perf iteration 1).
+        tok_axes = batch_axes + (ma,)
+        T_loc = max(T_total // max(dp * ep, 1), 1)
+    else:
+        # tensor-parallel experts: hidden dim sharded; tokens replicated
+        # over model, partial FF psum'd — the work split is the hidden dim.
+        tok_axes = batch_axes
+        T_loc = max(T_total // max(dp, 1), 1)
+    tok_spec = P(tok_axes if len(tok_axes) != 1 else tok_axes[0], None)
+    cap = cap_of(max(T_loc // max(T_loc // MOE_GROUP_TOKENS, 1), 1))
+
+    if use_ep:
+        w_spec = P(ma, None, None)
+        w2_spec = P(ma, None, None)
+        local = partial(_moe_ep_local, top_k=moe.top_k, capacity=cap,
+                        model_axis=ma, ep=ep, batch_axes=tok_axes)
+    else:
+        w_spec = P(None, None, ma)  # shard expert hidden dim
+        w2_spec = P(None, ma, None)
+        local = partial(_moe_tp_local, top_k=moe.top_k, capacity=cap,
+                        model_axis=ma, batch_axes=batch_axes)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(tok_spec, P(None, None), w_spec, w2_spec, w_spec),
+        out_specs=(tok_spec, P()),
+        check_vma=False)
+    y, aux = fn(h.reshape(T_total, D), p["router"], p["w1"], p["w2"], p["w3"])
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX. [arXiv:2405.21060]
+
+Follows the paper's minimal chunked SSD algorithm: intra-chunk "attention"
+via the 1-semiseparable mask L = exp(segsum(dt*A)), inter-chunk recurrence
+over chunk states via an associative scan. Single B/C group (n_groups = 1).
+
+The decode path is the classic selective-scan recurrence on a constant-size
+state — this is what makes SSM/hybrid archs run the 500k-context shape, and
+what Mooncake's KVCache scheduling degenerates to for these archs (state
+checkpoints instead of KV blocks; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Dist, rms_norm
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # (B, H, P, N) fp32
+    conv: jax.Array  # (B, d_conv - 1, conv_channels)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L) -> (..., L, L) with out[i, j] = sum(x[j+1 .. i]), -inf above
+    the diagonal (strict lower-triangular cumulative sums, diagonal = 0)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   inputs (already multiplied by nothing; dt applied here)
+    dt: (b, s, h)      positive step sizes
+    A:  (h,)           negative decay rates
+    B:  (b, s, n)      input projections (single group)
+    C:  (b, s, n)      output projections
+    Returns (y (b,s,h,p), final_state (b,h,p,n) fp32).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    c = s // chunk
+    f32 = jnp.float32
+
+    xdt = (x * dt[..., None]).astype(f32)            # (b,s,h,p)
+    dA = (dt * A[None, None, :]).astype(f32)         # (b,s,h)
+
+    # chunked views
+    xc = xdt.reshape(b, c, chunk, h, p)
+    dAc = jnp.moveaxis(dA.reshape(b, c, chunk, h), -1, 1)   # (b,h,c,l)
+    Bc = B.reshape(b, c, chunk, n).astype(f32)
+    Cc = C.reshape(b, c, chunk, n).astype(f32)
+
+    cum = jnp.cumsum(dAc, axis=-1)                   # (b,h,c,l)
+
+    # 1. intra-chunk (diagonal blocks): Y_diag = (C B^T ∘ L) (x*dt)
+    Lmask = jnp.exp(_segsum(dAc))                    # (b,h,c,l,l)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmask, xc)
+
+    # 2. per-chunk states: right factor with decay to the chunk end
+    decay_states = jnp.exp(cum[..., -1:] - cum)      # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[..., -1])              # (b,h,c)
+
+    def scan_body(h_prev, inp):
+        st, dec = inp                                # (b,h,p,n), (b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                         # emit the INCOMING state
+
+    states_t = jnp.moveaxis(states, 1, 0)            # (c,b,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, -1, 0)       # (c,b,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), dtype=f32)
+    h_final, h_in = jax.lax.scan(scan_body, h0, (states_t, decay_t))
+    h_in = jnp.moveaxis(h_in, 0, 1)                  # (b,c,h,p,n)
+
+    # 4. inter-chunk outputs: state contribution decayed to each position
+    state_decay = jnp.exp(cum)                       # (b,h,c,l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, h_in, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_decode(x, dt, A, B, C, state):
+    """Single-step recurrence. x: (b,h,p); dt: (b,h); B,C: (b,n);
+    state: (b,h,p,n) fp32. Returns (y (b,h,p), new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp((dt * A[None, :]).astype(f32))                # (b,h)
+    dBx = jnp.einsum("bn,bhp->bhpn", B.astype(f32),
+                     (x * dt[..., None]).astype(f32))
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(f32))
+    return y, new_state
+
+
+def _causal_conv(x, w, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (b, s, ch); w: (k, ch).
+    prev: (b, k-1, ch) history for decode/chunked prefill.
+    Returns (y (b, s, ch), new_prev (b, k-1, ch))."""
+    k = w.shape[0]
+    b, s, ch = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, k - 1, ch), dtype=x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)          # (b, s+k-1, ch)
+    y = sum(xp[:, i:i + s, :] * w[i][None, None, :] for i in range(k))
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros((b, 0, ch), x.dtype)
+    return y, new_prev
+
+
+def mamba_block(x, p, cfg: ModelConfig, dist: Dist, *,
+                state: Optional[MambaState] = None, return_state: bool = False):
+    """Mamba2 mixer block (pre-norm, residual added by the caller).
+
+    x: (B, S, D). If ``state`` is given this is a decode step (S == 1) or a
+    chunk continuation; returns (y, new_state) — else (y, final_state or None).
+    """
+    s_cfg = cfg.ssm
+    B_, S, D = x.shape
+    di = s_cfg.d_inner(D)
+    nh = s_cfg.n_heads(D)
+    hd = s_cfg.head_dim
+    n = s_cfg.d_state
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]  # (B, S, 2*di + 2n + nh)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B,S,di+2n)
+    prev = state.conv if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], prev)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (nh,)
+    xh = xs.reshape(B_, S, nh, hd)
+    if dist.active:
+        xh = dist.constrain(xh, dist.batch_spec(None, dist.model_axis, None))
+
+    ssm0 = state.ssm if state is not None else None
+    if S == 1 and ssm0 is not None:
+        y1, new_ssm = ssd_decode(xh[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0], ssm0)
+        y = y1[:, None]
+    else:
+        chunk = min(s_cfg.chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bp = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cp = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, Bp, Cp = xh, dt, Bc, Cc
+        y, new_ssm = ssd_chunked(xh_p, dt_p, A, Bp, Cp, chunk, h0=ssm0)
+        y = y[:, :S]
+
+    y = y.astype(jnp.float32) + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    if state is not None or return_state:
+        return out, MambaState(ssm=new_ssm, conv=new_conv)
+    return out, None

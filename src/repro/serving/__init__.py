@@ -1,0 +1,10 @@
+"""Serving substrate: paged device KV cache, chunked-prefill +
+continuous-batching engines, CPP pipelined prefill (§5.1), layer-wise
+prefill semantics (§5.2)."""
+from repro.serving.engine import (DecodeWorker, HostKVPool, PrefillResult,
+                                  PrefillWorker, StateCheckpointWorker,
+                                  prefix_hash_ids)
+from repro.serving.layerwise import occupation_cost, schedule
+from repro.serving.paged_cache import (PagedKVCache, assign_seq, free_seq,
+                                       gather_kv, grow_seq, init_paged_cache,
+                                       write_kv)

@@ -1,0 +1,165 @@
+"""Paged device KVCache with block tables (the vLLM-style substrate that
+Mooncake's disaggregated pool feeds — §3 step 1 loads pool blocks into
+these pages, step 2 stores new pages back).
+
+Layout (per attention layer stacked on a leading axis):
+
+    k_pages, v_pages : (L, n_pages, page_tokens, KV, Dh)
+    block_table      : (B, max_pages_per_seq) int32 — page id per slot
+    seq_lens         : (B,) int32
+
+Page allocation is host-side (a free list); attention over pages is the
+``paged_attention`` kernel (Pallas) or its jnp oracle. ``page_tokens`` is
+the on-device granularity and the pool's 512-token block is a multiple of
+it, so a pool block maps to an integer number of pages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DTYPE
+
+
+@dataclass
+class PagedKVCache:
+    k_pages: jax.Array          # (L, P, page, KV, Dh)
+    v_pages: jax.Array
+    block_table: jax.Array      # (B, max_pages) int32
+    seq_lens: jax.Array         # (B,) int32
+    page_tokens: int
+    free: list = field(default_factory=list)   # host-side free page ids
+
+    @property
+    def n_layers(self) -> int:
+        return self.k_pages.shape[0]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.block_table.shape[1]
+
+
+def init_paged_cache(cfg: ModelConfig, *, batch: int, n_pages: int,
+                     page_tokens: int = 64,
+                     max_seq: int = 32768) -> PagedKVCache:
+    La = cfg.attention_layers
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    max_pages = (max_seq + page_tokens - 1) // page_tokens
+    return PagedKVCache(
+        k_pages=jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE),
+        v_pages=jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE),
+        block_table=jnp.zeros((batch, max_pages), jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+        page_tokens=page_tokens,
+        free=list(range(n_pages - 1, 0, -1)),  # page 0 = null page
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side allocation
+# ---------------------------------------------------------------------------
+
+def alloc_pages(cache: PagedKVCache, n: int) -> list[int]:
+    if len(cache.free) < n:
+        raise MemoryError(f"paged cache OOM: want {n}, free {len(cache.free)}")
+    return [cache.free.pop() for _ in range(n)]
+
+
+def free_seq(cache: PagedKVCache, slot: int) -> PagedKVCache:
+    """Release all pages of a batch slot back to the free list."""
+    table = np.asarray(cache.block_table)
+    lens = np.asarray(cache.seq_lens)
+    n_used = int(np.ceil(lens[slot] / cache.page_tokens))
+    cache.free.extend(int(p) for p in table[slot, :n_used] if p != 0)
+    table = table.copy()
+    table[slot] = 0
+    lens = lens.copy()
+    lens[slot] = 0
+    return PagedKVCache(cache.k_pages, cache.v_pages,
+                        jnp.asarray(table), jnp.asarray(lens),
+                        cache.page_tokens, cache.free)
+
+
+def assign_seq(cache: PagedKVCache, slot: int, n_tokens: int) -> PagedKVCache:
+    """Allocate pages for a new sequence of ``n_tokens`` in ``slot``."""
+    n = (n_tokens + cache.page_tokens - 1) // cache.page_tokens
+    pages = alloc_pages(cache, n)
+    table = np.asarray(cache.block_table).copy()
+    table[slot, :n] = pages
+    table[slot, n:] = 0
+    lens = np.asarray(cache.seq_lens).copy()
+    lens[slot] = n_tokens
+    return PagedKVCache(cache.k_pages, cache.v_pages,
+                        jnp.asarray(table), jnp.asarray(lens),
+                        cache.page_tokens, cache.free)
+
+
+def grow_seq(cache: PagedKVCache, slot: int, extra: int = 1) -> PagedKVCache:
+    """Extend a sequence; allocates a fresh page at a page boundary."""
+    table = np.asarray(cache.block_table).copy()
+    lens = np.asarray(cache.seq_lens).copy()
+    old, new = int(lens[slot]), int(lens[slot]) + extra
+    n_old = (old + cache.page_tokens - 1) // cache.page_tokens
+    n_new = (new + cache.page_tokens - 1) // cache.page_tokens
+    if n_new > n_old:
+        pages = alloc_pages(cache, n_new - n_old)
+        table[slot, n_old:n_new] = pages
+    lens[slot] = new
+    return PagedKVCache(cache.k_pages, cache.v_pages,
+                        jnp.asarray(table), jnp.asarray(lens),
+                        cache.page_tokens, cache.free)
+
+
+# ---------------------------------------------------------------------------
+# device-side reads / writes (jit-able; tables are traced inputs)
+# ---------------------------------------------------------------------------
+
+def write_kv(cache: PagedKVCache, slot: int, start: int,
+             k_new: jax.Array, v_new: jax.Array) -> PagedKVCache:
+    """Write (L, S, KV, Dh) new KV of one sequence into its pages,
+    starting at token offset ``start``. Host loop over touched pages
+    (S and the table are known host-side at engine level)."""
+    pt = cache.page_tokens
+    table = np.asarray(cache.block_table)
+    S = k_new.shape[1]
+    k_pages, v_pages = cache.k_pages, cache.v_pages
+    tok = start
+    while tok < start + S:
+        page_idx = tok // pt
+        off = tok % pt
+        n = min(pt - off, start + S - tok)   # stop at the page boundary
+        pid = int(table[slot, page_idx])
+        src = slice(tok - start, tok - start + n)
+        k_pages = jax.lax.dynamic_update_slice(
+            k_pages, k_new[:, src][:, None],
+            (0, pid, off, 0, 0))
+        v_pages = jax.lax.dynamic_update_slice(
+            v_pages, v_new[:, src][:, None],
+            (0, pid, off, 0, 0))
+        tok += n
+    return PagedKVCache(k_pages, v_pages, cache.block_table, cache.seq_lens,
+                        pt, cache.free)
+
+
+def gather_kv(cache: PagedKVCache, max_tokens: int):
+    """Materialise per-sequence contiguous KV (L, B, max_tokens, KV, Dh)
+    from pages via the block table — the pure-jnp paged read used by the
+    engine on CPU (the Pallas kernel fuses this gather with attention)."""
+    pt = cache.page_tokens
+    n = max_tokens // pt
+    tbl = cache.block_table[:, :n]                     # (B, n)
+    k = cache.k_pages[:, tbl]                          # (L, B, n, pt, KV, Dh)
+    v = cache.v_pages[:, tbl]
+    L, B = k.shape[0], k.shape[1]
+    k = k.reshape(L, B, n * pt, *k.shape[4:])
+    v = v.reshape(L, B, n * pt, *v.shape[4:])
+    return k, v

@@ -1,0 +1,6 @@
+from repro.training.checkpoint import (latest_checkpoint, load_checkpoint,
+                                       save_checkpoint)
+from repro.training.loop import TrainResult, train
+from repro.training.optim import (OptState, adafactor_init, adafactor_update,
+                                  adamw_init, adamw_update, cosine_lr,
+                                  make_optimizer)

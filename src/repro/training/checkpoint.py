@@ -1,0 +1,72 @@
+"""Checkpointing: flat-name .npz snapshots of (params, opt_state, step).
+
+Pytrees are flattened with jax.tree_util key paths as archive names, so a
+checkpoint round-trips bit-exactly regardless of nesting, and partial
+restores (params only) are possible. Atomic rename for crash safety.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str) -> dict:
+    flat = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = prefix + jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":   # bfloat16 → store as f32 (lossless)
+            arr = np.asarray(leaf, dtype=np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten(tree: Any, prefix: str, archive) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in paths:
+        key = prefix + jax.tree_util.keystr(path)
+        stored = archive[key]
+        leaves.append(jax.numpy.asarray(stored).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(dir_: str, params, opt_state, step: int) -> str:
+    os.makedirs(dir_, exist_ok=True)
+    flat = {"__step__": np.asarray(step)}
+    flat.update(_flatten(params, "p"))
+    flat.update(_flatten(opt_state, "o"))
+    path = os.path.join(dir_, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=dir_, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp if tmp.endswith(".npz") else tmp + ".npz"
+               if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def latest_checkpoint(dir_: str) -> Optional[str]:
+    if not os.path.isdir(dir_):
+        return None
+    ckpts = sorted(f for f in os.listdir(dir_)
+                   if re.match(r"ckpt_\d+\.npz$", f))
+    return os.path.join(dir_, ckpts[-1]) if ckpts else None
+
+
+def load_checkpoint(dir_: str, params, opt_state):
+    """Restore into the given (shape-matched) pytrees.
+    Returns (params, opt_state, step) or None if no checkpoint."""
+    path = latest_checkpoint(dir_)
+    if path is None:
+        return None
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        params = _unflatten(params, "p", z)
+        opt_state = _unflatten(opt_state, "o", z)
+    return params, opt_state, step

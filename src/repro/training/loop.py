@@ -1,0 +1,74 @@
+"""Training loop: data pipeline → sharded train_step → checkpointing.
+
+Used by examples/train_e2e.py (a ~100M-class model for a few hundred
+steps on CPU) and, unchanged, by launch/train.py against the production
+mesh — the step function is the same one the dry-run lowers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM, batch_spec_for
+from repro.models.layers import Dist, NO_DIST
+from repro.models.transformer import init_params
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optim import make_optimizer
+
+
+@dataclass
+class TrainResult:
+    losses: list = field(default_factory=list)
+    steps: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s else 0.0
+
+
+def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+          dist: Dist = NO_DIST, seed: int = 0,
+          checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+          log_every: int = 10, resume: bool = False) -> TrainResult:
+    # local import: launch.steps imports training.optim (cycle otherwise)
+    from repro.launch.steps import make_train_step
+
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt_init(params)
+    start_step = 0
+    if resume and checkpoint_dir:
+        loaded = load_checkpoint(checkpoint_dir, params, opt_state)
+        if loaded is not None:
+            params, opt_state, start_step = loaded
+
+    step_fn = jax.jit(make_train_step(cfg, dist))
+    pipe = SyntheticLM(batch_spec_for(cfg, batch, seq), seed=seed)
+
+    res = TrainResult()
+    t0 = time.time()
+    for step in range(start_step, start_step + steps):
+        np_batch = pipe.batch(step)
+        jbatch = {k: jax.numpy.asarray(v) for k, v in np_batch.items()}
+        loss, params, opt_state = step_fn(params, opt_state, jbatch)
+        loss = float(loss)
+        assert np.isfinite(loss), f"loss diverged at step {step}: {loss}"
+        res.losses.append(loss)
+        res.steps += 1
+        res.tokens += batch * seq
+        if log_every and (step % log_every == 0):
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {loss:7.4f}  "
+                  f"{res.tokens / max(dt, 1e-9):9.0f} tok/s")
+        if checkpoint_dir and checkpoint_every and \
+                (step + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, params, opt_state, step + 1)
+    res.wall_s = time.time() - t0
+    return res

@@ -1,0 +1,118 @@
+"""Optimizers (pure JAX, no optax): AdamW and a factored-second-moment
+Adafactor variant for the ≥70B configs where full fp32 Adam state would not
+fit the 16 GB/chip HBM budget at 256 chips (see DESIGN.md §7)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any          # full v (adamw) or (v_row, v_col) tuples (adafactor)
+
+
+def cosine_lr(step, base_lr=3e-4, warmup=100, total=10_000, min_frac=0.1):
+    warm = base_lr * (step + 1) / warmup
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ----------------------------- AdamW ---------------------------------------
+
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros32, params),
+                    v=jax.tree.map(zeros32, params))
+
+
+def adamw_update(params, grads, state: OptState, *, lr=None, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    if lr is None:
+        lr = cosine_lr(step)
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        u = (m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, OptState(step=step, m=new_m, v=new_v)
+
+
+# --------------------------- Adafactor -------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def v_init(p):
+        if _factored(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                   params),
+                    v=jax.tree.map(v_init, params))
+
+
+def adafactor_update(params, grads, state: OptState, *, lr=None, b1=0.9,
+                     decay=0.99, eps=1e-30, weight_decay=0.0):
+    step = state.step + 1
+    if lr is None:
+        lr = cosine_lr(step, base_lr=1e-3)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr, vc = v
+            vr2 = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc2 = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (vr2[..., None] / jnp.mean(vr2, axis=-1, keepdims=True)[..., None]
+                     ) * vc2[..., None, :]
+            u = g * jax.lax.rsqrt(denom + eps)
+            v2 = (vr2, vc2)
+        else:
+            v2 = decay * v + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(v2 + eps)
+        # update clipping at RMS 1.0
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        m2 = (b1 * m.astype(jnp.float32) + (1 - b1) * u)
+        out = p.astype(jnp.float32) - lr * (m2 + weight_decay * p.astype(jnp.float32))
+        return out.astype(p.dtype), m2.astype(jnp.bfloat16), v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([r[0] for r in res])
+    new_m = tdef.unflatten([r[1] for r in res])
+    new_v = tdef.unflatten([r[2] for r in res])
+    return new_p, OptState(step=step, m=new_m, v=new_v)
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

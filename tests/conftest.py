@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no global XLA device-count flags here — smoke
+tests and benches must see the real single CPU device; multi-device tests
+(CPP, shard_map, dry-run) spawn subprocesses with their own XLA_FLAGS."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+def run_subprocess(code: str, devices: int = 0, timeout: int = 600):
+    """Run python code in a subprocess (optionally with N fake devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout

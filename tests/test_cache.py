@@ -1,0 +1,119 @@
+"""CachePool / eviction policies / StateCache — unit + property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (CachePool, LFUPolicy, LRUPolicy,
+                              LengthAwarePolicy, StateCache,
+                              cache_hit_analysis)
+from repro.core.trace import Request
+
+
+def test_lru_evicts_oldest():
+    pool = CachePool(capacity_blocks=2, policy="lru")
+    pool.insert([1])
+    pool.insert([2])
+    pool.lookup([1])          # touch 1 → 2 becomes LRU victim
+    evicted = pool.insert([3])
+    assert evicted == [2]
+    assert 1 in pool and 3 in pool
+
+
+def test_lfu_evicts_least_frequent():
+    pool = CachePool(capacity_blocks=2, policy="lfu")
+    pool.insert([1, 2])
+    pool.lookup([1])
+    pool.lookup([1])
+    evicted = pool.insert([3])
+    assert evicted == [2]
+
+
+def test_length_aware_prefers_deeper_blocks():
+    pool = CachePool(capacity_blocks=3, policy="length_aware")
+    pool.insert([1, 2, 3], start_pos=0)   # positions 0,1,2 — equal hits
+    evicted = pool.insert([4])
+    assert evicted == [3]                 # deepest (latest in request) first
+
+
+def test_prefix_len_stops_at_gap():
+    pool = CachePool()
+    pool.insert([1, 2, 3, 4])
+    pool._evict(3)
+    assert pool.prefix_len([1, 2, 3, 4]) == 2
+    assert pool.prefix_len([9, 1, 2]) == 0
+
+
+def test_pinned_blocks_survive_eviction():
+    pool = CachePool(capacity_blocks=2, policy="lru")
+    pool.insert([1, 2])
+    pool.pin([1, 2])
+    evicted = pool.insert([3])            # nothing evictable
+    assert evicted == [] and 3 not in pool
+    pool.unpin([1])
+    evicted = pool.insert([3])
+    assert 1 in evicted or 2 in evicted
+
+
+def test_state_cache_deepest_hit():
+    sc = StateCache()
+    sc.insert([10, 11, 12])
+    sc._evict(11)                         # chain broken in the middle
+    # KV pools would stop at depth 1; a state checkpoint at depth 3 alone
+    # suffices for SSMs:
+    assert sc.deepest_hit([10, 11, 12]) == 3
+    assert sc.deepest_hit([99]) == 0
+
+
+def test_hit_rate_accounting():
+    pool = CachePool()
+    pool.insert([1, 2])
+    pool.lookup([1, 2, 3])                # 2 hits, 1 miss
+    assert pool.hits == 2 and pool.misses == 1
+    assert abs(pool.hit_rate - 2 / 3) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.lists(st.integers(0, 50), min_size=1, max_size=10),
+                min_size=1, max_size=50),
+       st.sampled_from(["lru", "lfu", "length_aware"]),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_pool_capacity_never_exceeded(chains, policy, cap):
+    pool = CachePool(capacity_blocks=cap, policy=policy)
+    for chain in chains:
+        n = pool.lookup(chain)
+        pool.insert(chain[n:], start_pos=n)
+        assert len(pool) <= cap
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_insert_idempotent(chain):
+    pool = CachePool()
+    pool.insert(chain)
+    n1 = len(pool)
+    pool.insert(chain)
+    assert len(pool) == n1
+    assert pool.prefix_len(chain) == len(chain)
+
+
+@given(st.integers(1, 5), st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_infinite_capacity_hit_rate_is_reuse_bound(n_chains, seed):
+    """With ∞ capacity, hit rate == (total touches − unique blocks) /
+    total touches — the Table 1 ∞ column identity."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(30):
+        c = int(rng.integers(0, n_chains))
+        depth = int(rng.integers(1, 8))
+        reqs.append(Request(req_id=i, timestamp=i,
+                            input_length=depth * 512, output_length=1,
+                            hash_ids=[c * 1000 + j for j in range(depth)]))
+    hr = cache_hit_analysis(reqs, "lru", None)
+    touches = sum(len(r.hash_ids) for r in reqs)
+    uniq = len({h for r in reqs for h in r.hash_ids})
+    assert abs(hr - (touches - uniq) / touches) < 1e-9

@@ -1,0 +1,70 @@
+"""Config registry + derived quantities."""
+import pytest
+
+from repro.configs.base import MODEL_AXIS, get_config, list_configs
+
+ASSIGNED = [
+    "qwen3-moe-235b-a22b", "smollm-360m", "qwen2.5-3b", "mixtral-8x7b",
+    "phi3-mini-3.8b", "internvl2-26b", "mamba2-2.7b", "whisper-large-v3",
+    "jamba-1.5-large-398b", "qwen3-14b",
+]
+
+# approximate parameter-count targets implied by the model names (billions)
+PARAM_TARGETS = {
+    "qwen3-moe-235b-a22b": (150, 300),
+    "smollm-360m": (0.25, 0.55),
+    "qwen2.5-3b": (2.0, 4.5),
+    "mixtral-8x7b": (35, 60),
+    "phi3-mini-3.8b": (2.5, 5.0),
+    "internvl2-26b": (15, 30),      # language backbone of the 26B VLM
+    "mamba2-2.7b": (1.8, 3.5),
+    "whisper-large-v3": (1.0, 2.5),   # head padding 20→32 inflates attn
+    "jamba-1.5-large-398b": (250, 450),
+    "qwen3-14b": (10, 18),
+    "llama2-70b": (55, 85),
+}
+
+
+def test_all_assigned_present():
+    known = list_configs()
+    for a in ASSIGNED:
+        assert a in known
+    assert "llama2-70b" in known     # the paper's own dummy model
+
+
+@pytest.mark.parametrize("name", list(PARAM_TARGETS))
+def test_param_counts_plausible(name):
+    cfg = get_config(name)
+    lo, hi = PARAM_TARGETS[name]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.1f}B params outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_is_smoke_sized(name):
+    cfg = get_config(name).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 8
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.param_count() < 50e6
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()
+    dense = get_config("qwen3-14b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_padded_heads_divisible():
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        if cfg.kind != "ssm":
+            assert cfg.padded_heads % MODEL_AXIS == 0
+        assert cfg.padded_vocab % 256 == 0
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")

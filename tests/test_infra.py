@@ -1,0 +1,133 @@
+"""Infrastructure: checkpointing, data pipeline, messenger, HLO analysis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core.messenger import Messenger
+from repro.data.pipeline import BatchSpec, SyntheticLM
+from repro.models.transformer import init_params
+from repro.training.checkpoint import (latest_checkpoint, load_checkpoint,
+                                       save_checkpoint)
+from repro.training.optim import make_optimizer
+
+
+# ------------------------------------------------------------- checkpoint --
+def test_checkpoint_round_trip(tmp_path):
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    init, _ = make_optimizer("adamw")
+    opt = init(params)
+    save_checkpoint(str(tmp_path), params, opt, 42)
+    zero_p = jax.tree.map(jnp.zeros_like, params)
+    zero_o = jax.tree.map(jnp.zeros_like, opt)
+    p2, o2, step = load_checkpoint(str(tmp_path), zero_p, zero_o)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_selection(tmp_path):
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    init, _ = make_optimizer("adamw")
+    opt = init(params)
+    save_checkpoint(str(tmp_path), params, opt, 10)
+    save_checkpoint(str(tmp_path), params, opt, 200)
+    assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000200.npz")
+
+
+def test_checkpoint_adafactor_state(tmp_path):
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    init, _ = make_optimizer("adafactor")
+    opt = init(params)
+    save_checkpoint(str(tmp_path), params, opt, 1)
+    out = load_checkpoint(str(tmp_path), params, opt)
+    assert out is not None and out[2] == 1
+
+
+# ------------------------------------------------------------------- data --
+def test_pipeline_deterministic():
+    spec = BatchSpec(batch=2, seq=64, vocab=1000)
+    a = SyntheticLM(spec, seed=3).batch(7)
+    b = SyntheticLM(spec, seed=3).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(spec, seed=4).batch(7)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    spec = BatchSpec(batch=2, seq=64, vocab=1000)
+    b = SyntheticLM(spec, seed=0).batch(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 64)
+    assert (b["tokens"] < 1000).all() and (b["tokens"] >= 0).all()
+
+
+def test_pipeline_has_learnable_structure():
+    """Bigram structure: each row's next-token delta concentrates on that
+    row's injected shift — far above the uniform 1/V baseline."""
+    from collections import Counter
+    spec = BatchSpec(batch=8, seq=512, vocab=256)
+    b = SyntheticLM(spec, seed=0).batch(0)
+    diffs = (b["labels"].astype(int) - b["tokens"].astype(int)) % 256
+    for row in diffs:
+        top = Counter(row.tolist()).most_common(1)[0][1]
+        assert top > 0.15 * len(row)   # uniform would give ~1/256
+
+
+# -------------------------------------------------------------- messenger --
+def test_messenger_fifo_backlog():
+    m = Messenger([0], bw=100.0)
+    t1 = m.enqueue(0, 1000.0, now=0.0)       # 10s wire time
+    assert t1 == pytest.approx(10.0)
+    est = m.estimate(0, 500.0, now=2.0)      # 8s backlog + 5s wire
+    assert est == pytest.approx(13.0)
+    t2 = m.enqueue(0, 500.0, now=2.0)
+    assert t2 == pytest.approx(15.0)
+    assert m.congestion(0, 2.0) == pytest.approx(13.0)
+
+
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(1, 1e6)),
+                min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_messenger_completion_monotone(events):
+    """Completions on one link are FIFO-ordered regardless of enqueue times."""
+    m = Messenger([0], bw=1e3)
+    last = 0.0
+    now = 0.0
+    for dt, size in events:
+        now += dt
+        done = m.enqueue(0, size, now)
+        assert done >= last - 1e-9
+        assert done >= now
+        last = done
+
+
+# ----------------------------------------------------------- hlo analysis --
+def test_hlo_analysis_counts_scan_trips():
+    from repro.launch.hlo_analysis import analyze
+    W = jnp.ones((7, 64, 64), jnp.float32)
+
+    def g(x):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, W)[0]
+
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    r = analyze(comp.as_text())
+    expect = 2 * 64 * 64 * 64 * 7
+    assert r["flops"] == pytest.approx(expect, rel=0.01)
+
+
+def test_hlo_analysis_roofline_terms():
+    from repro.launch.hlo_analysis import roofline_terms
+    r = roofline_terms({"flops": 197e12, "bytes": 819e9,
+                        "collective_total": 0.0})
+    assert r["t_compute_s"] == pytest.approx(1.0)
+    assert r["t_memory_s"] == pytest.approx(1.0)
+    assert r["bottleneck"] in ("compute", "memory")

@@ -1,0 +1,58 @@
+"""Overload-oriented scheduling (§7): the three admission policies."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.simulator import MooncakeCluster
+from repro.core.trace import TraceSpec, generate_trace
+
+
+@pytest.fixture(scope="module")
+def heavy_trace():
+    return generate_trace(TraceSpec(
+        n_requests=1500, duration_ms=300_000, seed=3,
+        frac_doc=0.5, frac_chat=0.3, frac_oneshot=0.2, out_mu=5.9))
+
+
+def run(adm, trace, **kw):
+    cfg = get_config("llama2-70b")
+    mc = MooncakeCluster(cfg, n_prefill=4, n_decode=4, ttft_slo=30,
+                         tbt_slo=0.1, admission=adm, **kw)
+    return mc.run(trace, speedup=3.0, load_sample_dt=5.0)
+
+
+def test_baseline_wastes_prefill(heavy_trace):
+    res = run("baseline", heavy_trace)
+    waste = sum(1 for r in res.records
+                if r.reject_stage == "decode_doublecheck")
+    assert waste > 0, "baseline must reject some requests AFTER prefill"
+
+
+def test_early_rejection_eliminates_waste(heavy_trace):
+    res = run("early", heavy_trace)
+    waste = sum(1 for r in res.records
+                if r.reject_stage == "decode_doublecheck")
+    assert waste == 0
+
+
+def test_predictive_beats_baseline_goodput(heavy_trace):
+    g_base = run("baseline", heavy_trace).goodput(30, 0.1)
+    g_pred = run("predictive", heavy_trace, t_d=20.0).goodput(30, 0.1)
+    assert g_pred > g_base
+
+
+def test_predictive_smooths_decode_load(heavy_trace):
+    """§7.3/7.4: prediction damps the anti-phase decode-load fluctuation."""
+    r_early = run("early", heavy_trace)
+    r_pred = run("predictive", heavy_trace, t_d=20.0)
+    std = lambda r: float(np.std([d for _, _, d in r.load_samples]))
+    assert std(r_pred) < std(r_early)
+
+
+def test_accepted_requests_complete(heavy_trace):
+    res = run("early", heavy_trace)
+    for r in res.records:
+        if r.accepted:
+            assert r.completed and r.ttft >= 0 and r.done >= r.arrival
+        else:
+            assert r.reject_stage != ""

@@ -1,0 +1,93 @@
+"""Paged device KV cache: allocation invariants + gather round trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.serving.paged_cache import (assign_seq, free_seq, gather_kv,
+                                       grow_seq, init_paged_cache, write_kv)
+
+CFG = get_config("smollm-360m").reduced()
+
+
+def test_write_gather_round_trip():
+    cache = init_paged_cache(CFG, batch=2, n_pages=32, page_tokens=16,
+                             max_seq=128)
+    cache = assign_seq(cache, 0, 40)
+    cache = assign_seq(cache, 1, 70)
+    L, KV, Dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    k0 = jax.random.normal(jax.random.PRNGKey(0), (L, 40, KV, Dh), jnp.bfloat16)
+    v0 = -k0
+    cache = write_kv(cache, 0, 0, k0, v0)
+    k1 = jax.random.normal(jax.random.PRNGKey(1), (L, 70, KV, Dh), jnp.bfloat16)
+    cache = write_kv(cache, 1, 0, k1, k1 + 1)
+    kg, vg = gather_kv(cache, 80)
+    np.testing.assert_array_equal(np.asarray(kg[:, 0, :40]), np.asarray(k0))
+    np.testing.assert_array_equal(np.asarray(vg[:, 0, :40]), np.asarray(v0))
+    np.testing.assert_array_equal(np.asarray(kg[:, 1, :70]), np.asarray(k1))
+
+
+def test_append_write_crosses_page_boundary():
+    cache = init_paged_cache(CFG, batch=1, n_pages=16, page_tokens=16,
+                             max_seq=64)
+    cache = assign_seq(cache, 0, 30)
+    L, KV, Dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    k = jnp.ones((L, 30, KV, Dh), jnp.bfloat16)
+    cache = write_kv(cache, 0, 0, k, k)
+    cache = grow_seq(cache, 0, 10)                  # 30 → 40, new page
+    k2 = 2 * jnp.ones((L, 10, KV, Dh), jnp.bfloat16)
+    cache = write_kv(cache, 0, 30, k2, k2)
+    kg, _ = gather_kv(cache, 48)
+    np.testing.assert_array_equal(np.asarray(kg[0, 0, :30, 0, 0]),
+                                  np.ones(30, np.float32))
+    np.testing.assert_array_equal(np.asarray(kg[0, 0, 30:40, 0, 0]),
+                                  2 * np.ones(10, np.float32))
+
+
+def test_free_returns_pages():
+    cache = init_paged_cache(CFG, batch=2, n_pages=8, page_tokens=16,
+                             max_seq=64)
+    n0 = len(cache.free)
+    cache = assign_seq(cache, 0, 60)                # 4 pages
+    assert len(cache.free) == n0 - 4
+    cache = free_seq(cache, 0)
+    assert len(cache.free) == n0
+    assert int(cache.seq_lens[0]) == 0
+
+
+def test_oom_raises():
+    cache = init_paged_cache(CFG, batch=1, n_pages=4, page_tokens=16,
+                             max_seq=256)
+    with pytest.raises(MemoryError):
+        assign_seq(cache, 0, 16 * 10)
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 60)),
+                min_size=1, max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_alloc_free_cycles_conserve_pages(ops):
+    """Random assign/free cycles: no page leaked, no page double-owned."""
+    cache = init_paged_cache(CFG, batch=4, n_pages=64, page_tokens=16,
+                             max_seq=64)
+    total = len(cache.free)
+    active = set()
+    for slot, tokens in ops:
+        if slot in active:
+            cache = free_seq(cache, slot)
+            active.discard(slot)
+        else:
+            try:
+                cache = assign_seq(cache, slot, tokens)
+                active.add(slot)
+            except MemoryError:
+                pass
+        table = np.asarray(cache.block_table)
+        lens = np.asarray(cache.seq_lens)
+        owned = []
+        for s in range(4):
+            n = int(np.ceil(lens[s] / cache.page_tokens))
+            owned.extend(int(p) for p in table[s, :n] if p != 0)
+        assert len(owned) == len(set(owned)), "page double-owned"
+        assert len(owned) + len(cache.free) == total, "page leaked"

@@ -1,0 +1,54 @@
+"""Priority-aware overload admission (§10 extension)."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.simulator import MooncakeCluster
+from repro.core.trace import TraceSpec, generate_trace
+
+
+@pytest.fixture(scope="module")
+def overloaded_trace():
+    reqs = generate_trace(TraceSpec(n_requests=1200, duration_ms=200_000,
+                                    seed=5, out_mu=5.9))
+    # tag every 4th request high-priority
+    for r in reqs:
+        r.priority = 2 if r.req_id % 4 == 0 else 0
+    return reqs
+
+
+def run(trace, relief=0.5, **kw):
+    cfg = get_config("llama2-70b")
+    mc = MooncakeCluster(cfg, n_prefill=2, n_decode=2, ttft_slo=30,
+                         tbt_slo=0.1, admission="early", **kw)
+    mc.admission.priority_relief = relief
+    return mc.run(trace, speedup=6.0)
+
+
+def test_priority_shifts_rejections_to_best_effort(overloaded_trace):
+    res = run(overloaded_trace)
+    rej = [r for r in res.records if not r.accepted
+           and r.reject_stage == "admission"]
+    assert rej, "scenario must actually overload"
+    hi_rej = sum(1 for r in rej if r.req.priority > 0)
+    lo_rej = len(rej) - hi_rej
+    n_hi = sum(1 for r in overloaded_trace if r.priority > 0)
+    n_lo = len(overloaded_trace) - n_hi
+    # rejection RATE of high-priority must be well below best-effort's
+    assert hi_rej / n_hi < 0.5 * (lo_rej / n_lo)
+
+
+def test_zero_relief_is_priority_blind(overloaded_trace):
+    cfg = get_config("llama2-70b")
+    mc = MooncakeCluster(cfg, n_prefill=2, n_decode=2, ttft_slo=30,
+                         tbt_slo=0.1, admission="early")
+    mc.admission.priority_relief = 0.0
+    res = mc.run(overloaded_trace, speedup=6.0)
+    rej = [r for r in res.records if not r.accepted
+           and r.reject_stage == "admission"]
+    if rej:
+        hi_rej = sum(1 for r in rej if r.req.priority > 0)
+        n_hi = sum(1 for r in overloaded_trace if r.priority > 0)
+        n_lo = len(overloaded_trace) - n_hi
+        lo_rate = (len(rej) - hi_rej) / n_lo
+        hi_rate = hi_rej / n_hi
+        assert abs(hi_rate - lo_rate) < 0.15

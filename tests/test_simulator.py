@@ -1,0 +1,78 @@
+"""Discrete-event simulator invariants + Figure-8/12 orderings."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.simulator import CoupledCluster, MooncakeCluster
+from repro.core.trace import TraceSpec, generate_trace, simulated_requests
+
+CFG = get_config("llama2-70b")
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_trace(TraceSpec(n_requests=800, duration_ms=240_000,
+                                    seed=1))
+
+
+def test_record_invariants(trace):
+    mc = MooncakeCluster(CFG, n_prefill=4, n_decode=4)
+    res = mc.run(trace)
+    for r in res.records:
+        if r.completed:
+            assert r.accepted
+            assert r.ttft > 0
+            assert r.done >= r.arrival + r.ttft - 1e-9
+            assert len(r.tbts) == max(r.req.output_length - 1, 0)
+            assert all(t >= -1e-9 for t in r.tbts)
+    n_done = len(res.completed())
+    assert n_done + len(res.rejected()) == len(trace)
+    assert res.goodput(30, 0.1) <= n_done / res.duration + 1e-9
+
+
+def test_strategy_ordering_figure8(trace):
+    """Fig. 8: kvcache-centric ≤ cache-aware ≤ load-balance ≤ random TTFT."""
+    avg = {}
+    for s in ("random", "load_balance", "cache_aware", "kvcache"):
+        mc = MooncakeCluster(CFG, n_prefill=4, n_decode=4, strategy=s)
+        avg[s] = mc.run(trace).avg_ttft()
+    assert avg["kvcache"] <= avg["cache_aware"] * 1.05
+    assert avg["cache_aware"] < avg["load_balance"] * 1.05
+    assert avg["load_balance"] < avg["random"]
+
+
+def test_kvcache_strategy_migrates(trace):
+    mc = MooncakeCluster(CFG, n_prefill=4, n_decode=4, strategy="kvcache")
+    res = mc.run(trace)
+    assert res.n_migrations > 0
+
+
+def test_mooncake_beats_coupled_under_long_context_load():
+    """Fig. 12: under long-context pressure the coupled baseline breaks
+    TBT/TTFT SLOs while Mooncake holds them."""
+    reqs = simulated_requests(150, 32768, 512, cache_ratio=0.5, rps=2.0)
+    mc = MooncakeCluster(CFG, n_prefill=2, n_decode=2).run(reqs)
+    vl = CoupledCluster(CFG, n_instances=4).run(reqs)
+    assert mc.goodput(30, .1) > 2 * vl.goodput(30, .1)
+
+
+def test_layerwise_transfer_overlap_reduces_ttft(trace):
+    """§5.2: streaming the KVCache during prefill must not be slower than
+    store-after-compute."""
+    t_on = MooncakeCluster(CFG, n_prefill=2, n_decode=2,
+                           layerwise_prefill=True).run(trace).avg_ttft()
+    t_off = MooncakeCluster(CFG, n_prefill=2, n_decode=2,
+                            layerwise_prefill=False).run(trace).avg_ttft()
+    assert t_on <= t_off + 1e-6
+
+
+def test_prefix_caching_reduces_ttft(trace):
+    with_cache = MooncakeCluster(CFG, n_prefill=4, n_decode=4,
+                                 cache_capacity_blocks=50_000)
+    r1 = with_cache.run(trace)
+    no_cache = MooncakeCluster(CFG, n_prefill=4, n_decode=4,
+                               cache_capacity_blocks=1)
+    r2 = no_cache.run(trace)
+    assert r1.avg_ttft() < r2.avg_ttft()
+    reused = sum(r.prefix_blocks for r in r1.records)
+    assert reused > 0

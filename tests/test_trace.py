@@ -1,0 +1,90 @@
+"""Trace generator / loader — statistics and format round-trip."""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trace import (BLOCK_TOKENS, Request, TraceSpec,
+                              generate_trace, load_trace, save_trace,
+                              simulated_requests, trace_stats)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_trace(TraceSpec(n_requests=4000, seed=7))
+
+
+def test_stats_match_paper(trace):
+    s = trace_stats(trace)
+    assert 5500 < s["avg_input"] < 10500      # paper: 7,590
+    assert 120 < s["avg_output"] < 260        # paper: 182
+    assert s["frac_blocks_single_use"] > 0.5  # paper: >50% unused again
+    assert 0.4 < s["max_reuse"] < 0.62        # paper: ~50% ceiling
+
+
+def test_arrivals_sorted_and_in_window(trace):
+    ts = [r.timestamp for r in trace]
+    assert ts == sorted(ts)
+    assert ts[0] >= 0 and ts[-1] <= 3_600_000
+
+
+def test_hash_chain_lengths(trace):
+    for r in trace[:200]:
+        assert len(r.hash_ids) >= max(r.input_length // BLOCK_TOKENS, 1) - 1
+        assert len(r.hash_ids) <= r.input_length // BLOCK_TOKENS + 1
+
+
+def test_session_prefix_sharing(trace):
+    """Some requests must share non-trivial prefixes (sessions)."""
+    by_first = {}
+    shared = 0
+    for r in trace:
+        if len(r.hash_ids) >= 3:
+            key = tuple(r.hash_ids[:3])
+            shared += by_first.get(key, 0) > 0
+            by_first[key] = by_first.get(key, 0) + 1
+    assert shared > 50
+
+
+def test_jsonl_round_trip(tmp_path, trace):
+    p = str(tmp_path / "t.jsonl")
+    save_trace(trace[:100], p)
+    back = load_trace(p)
+    assert len(back) == 100
+    for a, b in zip(trace[:100], back):
+        assert (a.timestamp, a.input_length, a.output_length, a.hash_ids) \
+            == (b.timestamp, b.input_length, b.output_length, b.hash_ids)
+
+
+def test_loads_paper_sample_format(tmp_path):
+    """The exact Listing-1 syntax must load."""
+    p = str(tmp_path / "paper.jsonl")
+    with open(p, "w") as f:
+        f.write('{"timestamp": 27482, "input_length": 6955, '
+                '"output_length": 52, "hash_ids": [46, 47, 2353]}\n')
+        f.write('{"timestamp": 30535, "input_length": 6472, '
+                '"output_length": 26, "hash_ids": [46, 47, 2366]}\n')
+    reqs = load_trace(p)
+    assert reqs[0].input_length == 6955
+    assert reqs[0].hash_ids[:2] == reqs[1].hash_ids[:2]
+
+
+@given(st.floats(0.0, 1.0), st.integers(1000, 65536))
+@settings(max_examples=20, deadline=None)
+def test_simulated_cache_ratio(ratio, input_len):
+    reqs = simulated_requests(100, input_len, cache_ratio=ratio, rps=2.0)
+    n_blocks = -(-input_len // BLOCK_TOKENS)
+    for r in reqs:
+        assert len(r.hash_ids) == n_blocks
+        assert r.input_length == input_len
+    # shared prefixes appear iff ratio > 0
+    firsts = {}
+    n_shared = 0
+    for r in reqs:
+        key = tuple(r.hash_ids[:max(int(n_blocks * ratio), 1)])
+        n_shared += firsts.get(key, 0) > 0
+        firsts[key] = 1
+    if int(n_blocks * ratio) >= 1 and ratio > 0:
+        assert n_shared > 0
