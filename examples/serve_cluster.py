@@ -31,6 +31,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--dram-blocks", type=int, default=2048,
+                    help="per-instance DRAM KVCache tier capacity (blocks)")
+    ap.add_argument("--ssd-blocks", type=int, default=0,
+                    help="per-instance SSD tier capacity (blocks); "
+                         "0 = flat DRAM pool (seed behaviour)")
     args = ap.parse_args()
 
     cfg = get_config("smollm-360m").reduced()
@@ -38,7 +43,9 @@ def main():
 
     # ---- build the disaggregated cluster ----
     n_p, n_d = 2, 2
-    pools = [HostKVPool(capacity_blocks=2048) for _ in range(n_p)]
+    pools = [HostKVPool(capacity_blocks=args.dram_blocks,
+                        ssd_capacity_blocks=args.ssd_blocks)
+             for _ in range(n_p)]
     pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256)
            for i in range(n_p)]
     dws = [DecodeWorker(params, cfg, max_batch=4, max_len=2048)
@@ -49,6 +56,9 @@ def main():
          for i in range(n_p)]
     D = [DecodeInstance(iid=100 + i, cost=cost()) for i in range(n_d)]
     msg = Messenger([p.iid for p in P] + [d.iid for d in D], bw=100e9)
+    if args.ssd_blocks:
+        for p in P:
+            msg.add_ssd_channel(p.iid, InstanceSpec().hw.ssd_read_bw)
     conductor = Conductor(P, D, msg, ttft_slo=30.0, tbt_slo=0.1)
 
     # ---- workload: session-structured trace, scaled to smoke size ----
@@ -118,6 +128,14 @@ def main():
           f"computed {stats['computed']} tokens, "
           f"hot-spot migrations: {stats['migrations']}")
     print(f"conductor migrations (metadata): {conductor.n_migrations}")
+    if args.ssd_blocks:
+        print(f"conductor SSD prefix loads: {conductor.n_ssd_loads}")
+        for i, pool in enumerate(pools):
+            s = pool.meta.tier_stats()
+            print(f"P{i} tiers: dram={s['dram_blocks']} ssd={s['ssd_blocks']} "
+                  f"hits(dram/ssd)={s['dram_hits']}/{s['ssd_hits']} "
+                  f"demote={s['demotions']} promote={s['promotions']} "
+                  f"writebacks={s['n_writebacks']}")
 
 
 if __name__ == "__main__":

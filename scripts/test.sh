@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 fast lane: everything except the slow 256-device dry-run compiles.
+# Usage: scripts/test.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m pytest -q -m "not slow" "$@"

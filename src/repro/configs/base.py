@@ -25,6 +25,38 @@ def _pad_to(x: int, m: int) -> int:
 
 
 @dataclass(frozen=True)
+class CacheTierSpec:
+    """Per-serving-instance KVCache storage hierarchy (Mooncake §3:
+    "the underutilized CPU, DRAM and SSD resources of the GPU cluster").
+
+    ``ssd_blocks = 0`` disables the SSD tier (flat DRAM pool — the seed
+    behaviour); ``None`` capacities mean unbounded. Consumed by
+    ``MooncakeCluster``, ``HostKVPool`` and the serving examples.
+    """
+    dram_blocks: Optional[int] = 20_000
+    ssd_blocks: Optional[int] = 0
+    dram_policy: str = "lru"
+    ssd_policy: str = "lru"
+    writeback_batch: int = 8   # demotions per batched SSD write
+
+    @property
+    def tiered(self) -> bool:
+        return self.ssd_blocks is None or self.ssd_blocks > 0
+
+    def make_pool(self, block_bytes: int = 0):
+        """Build the matching metadata pool (flat or tiered)."""
+        from repro.core.cache import CachePool
+        from repro.core.tiered import TieredCachePool
+        if not self.tiered:
+            return CachePool(self.dram_blocks, self.dram_policy,
+                             block_bytes=block_bytes)
+        return TieredCachePool(
+            self.dram_blocks, self.ssd_blocks,
+            policy=self.dram_policy, ssd_policy=self.ssd_policy,
+            block_bytes=block_bytes, writeback_batch=self.writeback_batch)
+
+
+@dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
     top_k: int

@@ -173,31 +173,58 @@ class CachePool:
             self.misses += len(hash_ids) - n
         return n
 
+    def _make_room(self) -> tuple[list[int], bool]:
+        """Evict unpinned victims until one slot is free; returns
+        (evicted keys, whether a slot is available)."""
+        evicted: list[int] = []
+        attempts = 0
+        while self.capacity is not None and len(self.blocks) >= self.capacity:
+            v = self.policy.victim()
+            if v is None or attempts > len(self.blocks):
+                break  # nothing evictable (all pinned)
+            attempts += 1
+            if self.blocks.get(v) is not None and self.blocks[v].pinned:
+                # pinned victims are skipped by re-queueing as a hit
+                self.policy.on_hit(v, self.blocks[v])
+                continue
+            self._evict(v)
+            evicted.append(v)
+        has_room = self.capacity is None or len(self.blocks) < self.capacity
+        return evicted, has_room
+
     def insert(self, hash_ids: Iterable[int], start_pos: int = 0) -> list[int]:
         """Insert blocks (idempotent); returns evicted keys."""
         evicted: list[int] = []
         for i, h in enumerate(hash_ids):
             if h in self.blocks:
                 continue
-            attempts = 0
-            while self.capacity is not None and len(self.blocks) >= self.capacity:
-                v = self.policy.victim()
-                if v is None or attempts > len(self.blocks):
-                    break  # nothing evictable (all pinned)
-                attempts += 1
-                if self.blocks.get(v) is not None and self.blocks[v].pinned:
-                    # pinned victims are skipped by re-queueing as a hit
-                    self.policy.on_hit(v, self.blocks[v])
-                    continue
-                self._evict(v)
-                evicted.append(v)
-            if self.capacity is not None and len(self.blocks) >= self.capacity:
+            dropped, has_room = self._make_room()
+            evicted.extend(dropped)
+            if not has_room:
                 break  # everything pinned; drop the insert
             meta = BlockMeta(key=h, position=start_pos + i,
                              size_bytes=self.block_bytes)
             self.blocks[h] = meta
             self.policy.on_insert(h, meta)
         return evicted
+
+    def insert_meta(self, meta: BlockMeta) -> tuple[list[int], bool]:
+        """Insert one pre-existing ``BlockMeta`` preserving its hit count /
+        pin count / position (tier moves). Returns (evicted keys, placed)."""
+        if meta.key in self.blocks:
+            return [], True
+        evicted, has_room = self._make_room()
+        if has_room:
+            self.blocks[meta.key] = meta
+            self.policy.on_insert(meta.key, meta)
+        return evicted, has_room
+
+    def remove(self, key: int) -> Optional[BlockMeta]:
+        """Withdraw a block without counting an eviction (tier moves)."""
+        meta = self.blocks.pop(key, None)
+        if meta is not None:
+            self.policy.on_evict(key)
+        return meta
 
     def _evict(self, key: int) -> None:
         self.blocks.pop(key, None)

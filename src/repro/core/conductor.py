@@ -7,7 +7,20 @@ is either
   * cache-aware (local):      T_queue + T_prefill(len, local_prefix)
   * cache-aware + balancing:  T_transfer + T_queue + T_prefill(len, best_prefix)
 
-depending on whether the best remote prefix beats the local one by more
+and, when the instance's pool is a ``TieredCachePool`` with part of the
+prefix demoted to SSD, a third arm — the compute-vs-load decision of Jin
+et al. ("Compute Or Load KV Cache? Why Not Both?"):
+
+  * load from local SSD:  max(T_queue, T_ssd_load) + T_prefill(len, tier_prefix)
+
+The scheduler picks min(recompute, fetch-from-peer-DRAM, load-from-SSD)
+per request. The SSD load is *prefetched*: it starts immediately on the
+node's SSD read channel and overlaps the queue wait (Jin et al.'s "why
+not both"), so only the slower of queue-drain and load delays the
+compute. The channel serialises loads FIFO (``Messenger.estimate_ssd``),
+so a node whose SSD is already streaming one long prefix makes the next
+load correctly expensive. Arm selection for recompute-vs-peer depends on
+whether the best remote prefix beats the local one by more
 than ``kvcache_balancing_threshold`` (Algorithm 1 line 8). After selection,
 if the chosen instance's local prefix is much worse than the global best,
 the best holder's blocks are replicated to it (hot-spot migration, line 28)
@@ -84,6 +97,9 @@ class Decision:
     prefix_blocks: int = 0              # blocks reused (local or migrated)
     migrated_blocks: int = 0            # hot-spot replication volume
     transfer_from: Optional[int] = None
+    ssd_blocks: int = 0                 # prefix blocks loaded from local SSD
+    ssd_load_time: float = 0.0          # committed load duration incl. channel
+                                        # backlog (overlaps the queue wait)
     reject_reason: str = ""
 
 
@@ -114,6 +130,8 @@ class Conductor:
         self.account_pending = True   # baseline admission flips this (§7.2)
         self.n_migrations = 0
         self.migrated_bytes = 0.0
+        self.n_ssd_loads = 0
+        self.ssd_loaded_bytes = 0.0
 
     # ---- Algorithm 1, lines 4–23 -------------------------------------
     def _find_best_prefix(self, block_keys: list[int]):
@@ -134,15 +152,16 @@ class Conductor:
             n = inst.pool.prefix_len(block_keys)
             ttft = inst.queue_time(now) + inst.cost.prefill_time(
                 L, n * BLOCK_TOKENS)
-            return inst, ttft, n, 0, None
+            return inst, ttft, n, 0, None, 0
         if self.strategy == "load_balance":
             inst = min(self.P, key=lambda i: i.queue_free_at)
             n = inst.pool.prefix_len(block_keys)
             ttft = inst.queue_time(now) + inst.cost.prefill_time(
                 L, n * BLOCK_TOKENS)
-            return inst, ttft, n, 0, None
+            return inst, ttft, n, 0, None, 0
 
-        best = (float("inf"), None, 0, 0, None)  # ttft, inst, prefix, migrate, src
+        # candidate: (ttft, inst, prefix, migrate_blocks, src, ssd_blocks)
+        best = (float("inf"), None, 0, 0, None, 0)
         for inst in self.P:
             prefix_len = inst.pool.prefix_len(block_keys)
             t_queue = inst.queue_time(now)
@@ -150,21 +169,39 @@ class Conductor:
                 float("inf") if best_len else 1.0)
             local_only = self.strategy == "cache_aware"
             if ratio < self.threshold or local_only or best_inst is None:
-                # cache-aware: compute on the local prefix
+                # arm 1 — recompute on the local DRAM prefix
                 t_prefill = inst.cost.prefill_time(L, prefix_len * BLOCK_TOKENS)
-                cand = (t_queue + t_prefill, inst, prefix_len, 0, None)
+                cand = (t_queue + t_prefill, inst, prefix_len, 0, None, 0)
             else:
-                # cache-aware + balancing: fetch the best prefix here
+                # arm 2 — cache balancing: fetch the best peer prefix here
                 transfer_blocks = best_len - prefix_len
                 nbytes = inst.cost.kv_bytes(transfer_blocks * BLOCK_TOKENS)
                 t_transfer = self.messenger.estimate(best_inst.iid, nbytes, now)
                 t_prefill = inst.cost.prefill_time(L, best_len * BLOCK_TOKENS)
                 cand = (t_transfer + t_queue + t_prefill, inst, best_len,
-                        transfer_blocks, best_inst)
+                        transfer_blocks, best_inst, 0)
             if cand[0] < best[0]:
                 best = cand
-        ttft, inst, prefix, migrate, src = best
-        return inst, ttft, prefix, migrate, src
+            # arm 3 — compute-vs-load: the prefix extends into local SSD
+            tier_prefix = getattr(inst.pool, "tier_prefix", None)
+            if tier_prefix is None:
+                continue
+            tp = tier_prefix(block_keys)
+            if tp.ssd > 0:
+                nbytes = inst.cost.kv_bytes(tp.ssd * BLOCK_TOKENS)
+                if self.messenger.has_ssd_channel(inst.iid):
+                    t_ssd = self.messenger.estimate_ssd(inst.iid, nbytes, now)
+                else:
+                    t_ssd = inst.cost.ssd_load_time(tp.ssd * BLOCK_TOKENS)
+                t_prefill = inst.cost.prefill_time(L, tp.total * BLOCK_TOKENS)
+                # the load starts now and overlaps the queue wait; compute
+                # starts when both the queue and the load are done
+                cand = (max(t_queue, t_ssd) + t_prefill, inst, tp.total,
+                        0, None, tp.ssd)
+                if cand[0] < best[0]:
+                    best = cand
+        ttft, inst, prefix, migrate, src, ssd_blocks = best
+        return inst, ttft, prefix, migrate, src, ssd_blocks
 
     def _select_decode(self, req: Request):
         """SelectDecodingInstance: least predicted TBT with VRAM headroom.
@@ -184,7 +221,8 @@ class Conductor:
 
     # ---- the public entry point ---------------------------------------
     def schedule(self, req: Request, now: float) -> Decision:
-        inst, ttft, prefix, migrate, src = self._select_prefill(req, now)
+        inst, ttft, prefix, migrate, src, ssd_blocks = \
+            self._select_prefill(req, now)
         d, tbt = self._select_decode(req)
         if d is None:
             return Decision(False, reject_reason="no decode slot (VRAM)")
@@ -201,14 +239,33 @@ class Conductor:
             self.n_migrations += 1
             self.migrated_bytes += nbytes
 
+        # ---- commit: SSD prefix load (compute-vs-load 'load' arm) ----
+        # The load starts NOW on the node's FIFO SSD read channel and
+        # overlaps the queue wait; compute starts once both the queue has
+        # drained and the load has landed — real time the simulator sees.
+        t_ssd = 0.0
+        load_done = now
+        if ssd_blocks:
+            nbytes = inst.cost.kv_bytes(ssd_blocks * BLOCK_TOKENS)
+            if self.messenger.has_ssd_channel(inst.iid):
+                load_done = self.messenger.enqueue_ssd(inst.iid, nbytes, now)
+            else:
+                load_done = now + inst.cost.ssd_load_time(
+                    ssd_blocks * BLOCK_TOKENS)
+            t_ssd = load_done - now
+            self.n_ssd_loads += 1
+            self.ssd_loaded_bytes += nbytes
+
         # queue the prefill work (cache inserts happen at completion in the
         # simulator; here we update the pool optimistically so back-to-back
-        # requests in a session see the blocks)
+        # requests in a session see the blocks). For a tiered pool the
+        # lookup PROMOTES the loaded SSD blocks into DRAM.
         t_prefill = inst.cost.prefill_time(
             req.input_length, prefix * BLOCK_TOKENS)
         inst.pool.lookup(req.hash_ids[:prefix])
         inst.pool.insert(req.hash_ids[prefix:], start_pos=prefix)
-        inst.queue_free_at = max(inst.queue_free_at, now) + t_prefill
+        inst.queue_free_at = max(inst.queue_free_at, load_done,
+                                 now) + t_prefill
         inst.total_busy += t_prefill
         inst.n_scheduled += 1
         d.pending += 1
@@ -217,4 +274,5 @@ class Conductor:
         return Decision(True, prefill=inst, decode=d, expected_ttft=ttft,
                         expected_tbt=tbt, prefix_blocks=prefix,
                         migrated_blocks=migrate,
-                        transfer_from=src.iid if src else None)
+                        transfer_from=src.iid if src else None,
+                        ssd_blocks=ssd_blocks, ssd_load_time=t_ssd)

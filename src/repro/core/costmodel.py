@@ -28,6 +28,8 @@ class Hardware:
     ici_bw: float = 50e9              # bytes/s per ICI link
     dram_bw: float = 100e9            # host DRAM read bw (pool side)
     net_bw: float = 100e9             # inter-node KVCache transfer (RDMA-class)
+    ssd_read_bw: float = 6e9          # local NVMe read, PCIe-4 class (SSD tier)
+    ssd_write_bw: float = 3e9         # local NVMe write (demotion path)
     hbm_bytes: float = 16e9           # per chip
     mfu_prefill: float = 0.55         # achievable fraction of peak, prefill
     mbu_decode: float = 0.70          # achievable fraction of HBM bw, decode
@@ -123,3 +125,12 @@ class CostModel:
     def dram_load_time(self, tokens: int) -> float:
         """Local DRAM→HBM load of a cached prefix."""
         return self.kv_bytes(tokens) / self.inst.hw.dram_bw
+
+    def ssd_load_time(self, tokens: int) -> float:
+        """Local SSD→DRAM/HBM load of a demoted prefix (the 'load' arm of
+        the compute-vs-load decision)."""
+        return self.kv_bytes(tokens) / self.inst.hw.ssd_read_bw
+
+    def ssd_write_time(self, tokens: int) -> float:
+        """Demotion write-back DRAM→SSD."""
+        return self.kv_bytes(tokens) / self.inst.hw.ssd_write_bw

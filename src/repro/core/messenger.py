@@ -11,6 +11,12 @@ This same object answers Conductor's ``EstimateKVCacheTransferTime`` —
 the estimate includes the current backlog, which is how congestion feeds
 back into Algorithm 1's instance selection and drives hot-spot
 replication (§6.2).
+
+Nodes with a tiered DRAM+SSD pool additionally register an *SSD channel*
+(``add_ssd_channel``): a per-node FIFO pipe at NVMe read bandwidth that
+serialises SSD→DRAM prefix loads. Its backlog feeds the Conductor's
+estimate for the third TTFT arm (load-from-SSD), so a node whose SSD is
+busy loading one long prefix correctly looks expensive for the next one.
 """
 from __future__ import annotations
 
@@ -30,19 +36,25 @@ class Messenger:
 
     def __init__(self, node_ids, bw: float) -> None:
         self.links: dict = {i: Link(bw=bw) for i in node_ids}
+        self.ssd_links: dict = {}
 
     def add_node(self, node_id, bw: float) -> None:
         self.links[node_id] = Link(bw=bw)
 
-    def estimate(self, src, nbytes: float, now: float) -> float:
-        """Predicted transfer duration if enqueued now (queue + wire)."""
-        link = self.links[src]
-        wait = max(link.busy_until - now, 0.0)
-        return wait + nbytes / link.bw
+    def add_ssd_channel(self, node_id, read_bw: float) -> None:
+        """Register a node's local SSD read pipe (tiered pools only)."""
+        self.ssd_links[node_id] = Link(bw=read_bw)
 
-    def enqueue(self, src, nbytes: float, now: float) -> float:
-        """Commit a transfer; returns its completion TIME."""
-        link = self.links[src]
+    def has_ssd_channel(self, node_id) -> bool:
+        return node_id in self.ssd_links
+
+    # shared FIFO-pipe math (egress and SSD channels are the same model)
+    @staticmethod
+    def _estimate(link: Link, nbytes: float, now: float) -> float:
+        return max(link.busy_until - now, 0.0) + nbytes / link.bw
+
+    @staticmethod
+    def _commit(link: Link, nbytes: float, now: float) -> float:
         start = max(link.busy_until, now)
         done = start + nbytes / link.bw
         link.busy_until = done
@@ -50,6 +62,26 @@ class Messenger:
         link.n_transfers += 1
         return done
 
+    def estimate(self, src, nbytes: float, now: float) -> float:
+        """Predicted transfer duration if enqueued now (queue + wire)."""
+        return self._estimate(self.links[src], nbytes, now)
+
+    def enqueue(self, src, nbytes: float, now: float) -> float:
+        """Commit a transfer; returns its completion TIME."""
+        return self._commit(self.links[src], nbytes, now)
+
     def congestion(self, src, now: float) -> float:
         """Seconds of backlog on a node's egress link."""
         return max(self.links[src].busy_until - now, 0.0)
+
+    # ---- local SSD tier (same FIFO-pipe model, per-node read channel) ----
+    def estimate_ssd(self, node, nbytes: float, now: float) -> float:
+        """Predicted SSD-load duration if enqueued now (queue + media)."""
+        link = self.ssd_links.get(node)
+        if link is None:
+            return float("inf")     # node has no SSD tier
+        return self._estimate(link, nbytes, now)
+
+    def enqueue_ssd(self, node, nbytes: float, now: float) -> float:
+        """Commit an SSD load; returns its completion TIME."""
+        return self._commit(self.ssd_links[node], nbytes, now)

@@ -29,7 +29,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import CacheTierSpec, ModelConfig
 from repro.core.cache import CachePool
 from repro.core.conductor import (Conductor, DecodeInstance, PrefillInstance)
 from repro.core.costmodel import CostModel, InstanceSpec
@@ -49,6 +49,8 @@ class ReqRecord:
     tbts: list = field(default_factory=list)  # per-token gaps (s)
     done: float = -1.0
     prefix_blocks: int = 0
+    ssd_blocks: int = 0            # prefix blocks loaded from local SSD
+    ssd_load_time: float = 0.0     # seconds spent on the SSD read channel
 
     @property
     def completed(self) -> bool:
@@ -64,6 +66,7 @@ class SimResult:
     duration: float
     load_samples: list              # (t, prefill_load, decode_load)
     n_migrations: int = 0
+    n_ssd_loads: int = 0            # compute-vs-load chose 'load'
 
     # ---- aggregates ----
     def completed(self):
@@ -81,12 +84,21 @@ class SimResult:
         c = [r.tbt_p(90) for r in self.completed() if r.tbts]
         return float(np.percentile(c, 90)) if c else float("nan")
 
-    def goodput(self, ttft_slo: float, tbt_slo: float) -> float:
-        """Completed requests meeting both SLOs, per second (§2: only fully
-        completed requests count)."""
-        ok = [r for r in self.completed()
-              if r.ttft <= ttft_slo and r.tbt_p(90) <= tbt_slo]
-        return len(ok) / self.duration if self.duration else 0.0
+    def slo_ok_count(self, ttft_slo: float, tbt_slo: float) -> int:
+        """Completed requests meeting both SLOs (§2: only fully completed
+        requests count)."""
+        return len([r for r in self.completed()
+                    if r.ttft <= ttft_slo and r.tbt_p(90) <= tbt_slo])
+
+    def goodput(self, ttft_slo: float, tbt_slo: float,
+                window: float | None = None) -> float:
+        """SLO-meeting completions per second. ``window`` defaults to the
+        run's makespan; pass a common window when comparing configurations
+        (the makespan moves with the last request's completion, which is
+        noise for A/B comparisons)."""
+        window = self.duration if window is None else window
+        return self.slo_ok_count(ttft_slo, tbt_slo) / window if window \
+            else 0.0
 
     def slo_attainment(self, ttft_slo: float, tbt_slo: float):
         c = self.completed()
@@ -177,6 +189,7 @@ class MooncakeCluster:
                  ttft_slo: float = 30.0, tbt_slo: float = 0.1,
                  cache_capacity_blocks: Optional[int] = 20000,
                  cache_policy: str = "lru",
+                 cache_spec: Optional[CacheTierSpec] = None,
                  strategy: str = "kvcache",
                  admission: str = "early",
                  balancing_threshold: float = 1.3,
@@ -184,13 +197,20 @@ class MooncakeCluster:
                  t_d: float = 10.0, seed: int = 0) -> None:
         self.cfg = cfg
         cost = lambda: CostModel(cfg, inst_spec)
+        if cache_spec is None:
+            cache_spec = CacheTierSpec(dram_blocks=cache_capacity_blocks,
+                                       dram_policy=cache_policy)
+        self.cache_spec = cache_spec
         self.prefills = [PrefillInstance(
-            iid=i, pool=CachePool(cache_capacity_blocks, cache_policy),
+            iid=i, pool=cache_spec.make_pool(),
             cost=cost()) for i in range(n_prefill)]
         self.decodes = [DecodeInstance(iid=1000 + i, cost=cost())
                         for i in range(n_decode)]
         node_ids = [p.iid for p in self.prefills] + [d.iid for d in self.decodes]
         self.messenger = Messenger(node_ids, bw=inst_spec.hw.net_bw)
+        if cache_spec.tiered:
+            for p in self.prefills:
+                self.messenger.add_ssd_channel(p.iid, inst_spec.hw.ssd_read_bw)
         import random
         self.conductor = Conductor(
             self.prefills, self.decodes, self.messenger,
@@ -221,8 +241,12 @@ class MooncakeCluster:
                 return
             rec.accepted = True
             rec.prefix_blocks = dec.prefix_blocks
+            rec.ssd_blocks = dec.ssd_blocks
+            rec.ssd_load_time = dec.ssd_load_time
             p, d = dec.prefill, dec.decode
-            # prefill completion (the conductor queued the work already)
+            # prefill completion (the conductor queued the work already;
+            # any SSD prefix load overlapped the queue wait, so compute
+            # start already reflects max(queue drained, load landed))
             t_done = p.queue_free_at
             rec.prefill_start = t_done - p.cost.prefill_time(
                 rec.req.input_length, dec.prefix_blocks * BLOCK_TOKENS)
@@ -286,7 +310,8 @@ class MooncakeCluster:
                     + [r.arrival for r in records])
         return SimResult(records=records, duration=t_end,
                          load_samples=load_samples,
-                         n_migrations=self.conductor.n_migrations)
+                         n_migrations=self.conductor.n_migrations,
+                         n_ssd_loads=self.conductor.n_ssd_loads)
 
 
 # ---------------------------------------------------------------------------

@@ -535,7 +535,8 @@ def moe_block(x, p, cfg: ModelConfig, dist: Dist):
         local = partial(_moe_tp_local, top_k=moe.top_k, capacity=cap,
                         model_axis=ma, batch_axes=batch_axes)
 
-    fn = jax.shard_map(
+    from repro.launch.mesh import compat_shard_map
+    fn = compat_shard_map(
         local, mesh=mesh,
         in_specs=(tok_spec, P(None, None), w_spec, w2_spec, w_spec),
         out_specs=(tok_spec, P()),

@@ -129,7 +129,8 @@ def cpp_prefill(params, tokens, cfg: ModelConfig, mesh: Mesh, *,
             stage_axis)
         return h_last, (k_buf, v_buf)
 
-    fn = jax.shard_map(
+    from repro.launch.mesh import compat_shard_map
+    fn = compat_shard_map(
         pipeline, mesh=mesh,
         in_specs=(P(), P(stage_axis)),
         out_specs=(P(), P(stage_axis)),

@@ -43,11 +43,22 @@ def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
 class HostKVPool:
     """CPU-DRAM KVCache pool: prefix-hash → per-layer KV block bytes.
     Metadata/eviction delegated to ``CachePool``; evicted keys drop their
-    bytes. Models Figure 3's 'KVCache pool in CPU memory'."""
+    bytes. Models Figure 3's 'KVCache pool in CPU memory'.
+
+    With ``ssd_capacity_blocks`` a second (SSD) tier is added: DRAM
+    evictions demote to it instead of dropping, and only blocks evicted
+    from the *whole hierarchy* lose their bytes — so long-context cold
+    prefixes stay loadable (here both tiers are host arrays; the tier
+    split is the metadata/cost model's concern)."""
 
     def __init__(self, capacity_blocks: Optional[int] = None,
-                 policy: str = "lru") -> None:
-        self.meta = CachePool(capacity_blocks, policy)
+                 policy: str = "lru", ssd_capacity_blocks: int = 0,
+                 ssd_policy: str = "lru", writeback_batch: int = 8) -> None:
+        from repro.configs.base import CacheTierSpec
+        self.meta: CachePool = CacheTierSpec(
+            dram_blocks=capacity_blocks, ssd_blocks=ssd_capacity_blocks,
+            dram_policy=policy, ssd_policy=ssd_policy,
+            writeback_batch=writeback_batch).make_pool()
         self.data: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
     def match_prefix(self, hash_ids: list[int]) -> int:

@@ -1,6 +1,9 @@
 """CachePool / eviction policies / StateCache — unit + property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # sandboxed env: vendored shim (seeded random)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.cache import (CachePool, LFUPolicy, LRUPolicy,
                               LengthAwarePolicy, StateCache,

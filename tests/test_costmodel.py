@@ -1,6 +1,9 @@
 """Cost model (Figure 2) shape properties + layer-wise schedule (§5.2)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # sandboxed env: vendored shim (seeded random)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.core.costmodel import CostModel, InstanceSpec

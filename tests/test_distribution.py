@@ -46,8 +46,8 @@ from repro.serving.cpp import cpp_prefill, cpp_reference
 import dataclasses
 cfg = dataclasses.replace(get_config("smollm-360m").reduced(), n_layers=4)
 params = init_params(cfg, jax.random.PRNGKey(0))
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_stage_mesh
+mesh = make_stage_mesh(4)
 tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 256), 0, cfg.vocab_size)
 lr, (kr, vr) = jax.jit(lambda p, t: cpp_reference(p, t, cfg))(params, tokens)
 with mesh:
@@ -73,8 +73,8 @@ params = init_params(cfg, jax.random.PRNGKey(0))
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab_size)
 batch = {"tokens": tokens, "labels": tokens}
 l0 = jax.jit(lambda p, b: loss_fn(p, b, cfg, NO_DIST))(params, batch)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh(2, 2)
 dist = Dist(mesh=mesh, batch_axes=("data",))
 with mesh:
     l1 = jax.jit(lambda p, b: loss_fn(p, b, cfg, dist))(params, batch)
@@ -98,8 +98,8 @@ p_moe = jax.tree.map(lambda x: x[0], params["moe"])
 B, S, D = 2, 4096, cfg.d_model   # B*S > dispatch threshold -> shard_map path
 x = jax.random.normal(jax.random.PRNGKey(2), (B, S, D), jnp.bfloat16) * 0.3
 y0, aux0 = moe_block(x, p_moe, cfg, NO_DIST)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh(2, 2)
 dist = Dist(mesh=mesh, batch_axes=("data",))
 with mesh:
     y1, aux1 = jax.jit(lambda x_: moe_block(x_, p_moe, cfg, dist))(x)

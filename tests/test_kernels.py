@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # sandboxed env: vendored shim (seeded random)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.flash_prefill.kernel import flash_prefill
 from repro.kernels.flash_prefill.ref import flash_prefill_ref

@@ -4,7 +4,10 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # sandboxed env: vendored shim (seeded random)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.trace import (BLOCK_TOKENS, Request, TraceSpec,
                               generate_trace, load_trace, save_trace,
