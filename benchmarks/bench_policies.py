@@ -1,0 +1,168 @@
+"""Strategy × admission goodput grid over declarative ClusterSpec scenarios.
+
+The scenario-diversity payoff of the pluggable policy API: every registered
+prefill routing policy crossed with every registered admission policy, over
+three scenarios a hardcoded scheduler could not have expressed as data:
+
+* ``moderate``  — the standard trace at moderate load, flat DRAM pools:
+  the Figure-8 regime, TTFT-shaped.
+* ``ssd_tier``  — long-context doc sessions with DRAM far below the
+  working set and an NVMe tier: the compute-vs-load regime where the
+  ``why_not_both`` overlap arm (head recompute ∥ tail SSD load) pays.
+* ``overload``  — decode-binding 3× replay: the §7 regime where admission
+  policy dominates and ``load_aware``'s queue-imbalance pricing flattens
+  TTFT tails.
+
+Emits one table per scenario (``policy_grid_<scenario>``) plus a summary
+of where each NEW policy (load_aware, why_not_both) beats a legacy one —
+and asserts at least one such win exists per new policy.
+
+    PYTHONPATH=src python -m benchmarks.bench_policies [--fast|--quick]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.configs.base import CacheTierSpec, ClusterSpec, get_config
+from repro.core.costmodel import V5E, InstanceSpec
+from repro.core.policies import list_policies
+from repro.core.simulator import MooncakeCluster
+from repro.core.trace import TraceSpec, generate_trace
+
+# SATA-class SSD: pure load rarely beats recompute, so the all-or-nothing
+# SSD arm goes quiet — the regime where splitting (why_not_both) pays
+SATA_INST = InstanceSpec(hw=dataclasses.replace(V5E, ssd_read_bw=1.5e9))
+
+LEGACY_STRATEGIES = ("random", "load_balance", "cache_aware", "kvcache")
+NEW_STRATEGIES = ("load_aware", "why_not_both")
+
+
+@dataclass
+class Scenario:
+    """One benchmark scenario: a trace recipe + a base ClusterSpec."""
+    name: str
+    trace: TraceSpec
+    spec: ClusterSpec
+    speedup: float = 1.0
+    #: DRAM budget as a fraction of the trace's unique working set;
+    #: None keeps the spec's cache untouched
+    dram_frac: float | None = None
+    ssd_ratio: int = 0
+
+    def build_requests(self, fast: bool):
+        ts = self.trace
+        if fast:
+            ts = dataclasses.replace(
+                ts, n_requests=max(ts.n_requests // 4, 200),
+                duration_ms=max(ts.duration_ms // 4, 60_000))
+        return generate_trace(ts)
+
+    def build_spec(self, requests) -> ClusterSpec:
+        if self.dram_frac is None:
+            return self.spec
+        uniq = len({h for r in requests for h in r.hash_ids})
+        dram = max(int(uniq * self.dram_frac), 64)
+        return self.spec.replace(cache=CacheTierSpec(
+            dram_blocks=dram, ssd_blocks=self.ssd_ratio * dram))
+
+
+SCENARIOS = [
+    Scenario("moderate",
+             TraceSpec(n_requests=2000, duration_ms=600_000, seed=11),
+             ClusterSpec(n_prefill=4, n_decode=4),
+             speedup=2.0),
+    Scenario("ssd_tier",
+             TraceSpec(n_requests=1200, duration_ms=900_000, seed=7,
+                       frac_chat=0.25, frac_doc=0.55, frac_oneshot=0.20,
+                       doc_len_mu=9.6, doc_len_sigma=0.6),
+             ClusterSpec(n_prefill=4, n_decode=4, tbt_slo=0.2,
+                         inst_spec=SATA_INST),
+             speedup=1.0, dram_frac=0.02, ssd_ratio=8),
+    Scenario("overload",
+             TraceSpec(n_requests=1600, duration_ms=200_000, seed=3,
+                       frac_doc=0.5, frac_chat=0.3, frac_oneshot=0.2,
+                       out_mu=5.9),
+             ClusterSpec(n_prefill=4, n_decode=4,
+                         cache=CacheTierSpec(dram_blocks=2000)),
+             speedup=3.0),
+]
+
+
+def run_grid(scn: Scenario, strategies, admissions, fast: bool) -> list[dict]:
+    requests = scn.build_requests(fast)
+    base = scn.build_spec(requests)
+    # common window: the makespan moves with the last completion, which is
+    # A/B noise — goodput over the shared trace horizon is the fair compare
+    window = max(r.timestamp for r in requests) / 1000.0 / scn.speedup + 120.0
+    rows = []
+    for strategy in strategies:
+        for admission in admissions:
+            spec = base.replace(strategy=strategy, admission=admission,
+                                t_d=20.0)
+            res = MooncakeCluster.from_spec(get_config("llama2-70b"),
+                                            spec).run(requests,
+                                                      speedup=scn.speedup)
+            slo = (spec.ttft_slo, spec.tbt_slo)
+            rows.append(dict(
+                scenario=scn.name, strategy=strategy, admission=admission,
+                goodput_rps=round(res.goodput(*slo, window), 4),
+                avg_ttft_s=round(res.avg_ttft(), 3),
+                ttft_p90_s=round(res.ttft_p90(), 3),
+                completed=len(res.completed()),
+                rejected=len(res.rejected()),
+                migrations=res.n_migrations,
+                ssd_loads=res.n_ssd_loads,
+                reject_top=next(iter(res.reject_breakdown()), "")))
+    return rows
+
+
+def _wins(rows: list[dict], new: str) -> list[str]:
+    """Grid cells where ``new`` beats a legacy strategy under the same
+    scenario+admission on goodput or TTFT p90."""
+    out = []
+    for r in rows:
+        if r["strategy"] != new:
+            continue
+        for other in rows:
+            if other["strategy"] not in LEGACY_STRATEGIES \
+                    or other["scenario"] != r["scenario"] \
+                    or other["admission"] != r["admission"]:
+                continue
+            if r["goodput_rps"] > other["goodput_rps"] \
+                    or r["ttft_p90_s"] < other["ttft_p90_s"]:
+                metric = "goodput" if r["goodput_rps"] > other["goodput_rps"] \
+                    else "ttft_p90"
+                out.append(f"{r['scenario']}/{r['admission']}: {new} beats "
+                           f"{other['strategy']} on {metric}")
+    return out
+
+
+def main(fast: bool = False):
+    strategies = list_policies("prefill")
+    admissions = list_policies("admission")
+    all_rows = []
+    for scn in SCENARIOS:
+        rows = run_grid(scn, strategies, admissions, fast)
+        emit(f"policy_grid_{scn.name}", rows)
+        all_rows.extend(rows)
+
+    print("\n== new-policy wins vs legacy ==")
+    for new in NEW_STRATEGIES:
+        wins = _wins(all_rows, new)
+        for w in wins[:6]:
+            print("  " + w)
+        if len(wins) > 6:
+            print(f"  ... and {len(wins) - 6} more")
+        assert wins, f"{new} must beat >=1 legacy policy in >=1 scenario"
+    return all_rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", "--quick", dest="fast", action="store_true",
+                    help="reduced trace sizes (CI smoke lane)")
+    main(fast=ap.parse_args().fast)

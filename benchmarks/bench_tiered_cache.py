@@ -126,5 +126,6 @@ def main(fast: bool = False):
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--fast", "--quick", dest="fast", action="store_true",
+                    help="reduced trace sizes (CI smoke lane)")
     main(fast=ap.parse_args().fast)

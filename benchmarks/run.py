@@ -29,14 +29,15 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_cache_policy, bench_cpp, bench_e2e,
                             bench_kernels, bench_layerwise, bench_overload,
-                            bench_scheduling, bench_stage_model,
-                            bench_tiered_cache)
+                            bench_policies, bench_scheduling,
+                            bench_stage_model, bench_tiered_cache)
     benches = {
         "cache_policy": bench_cache_policy.main,     # Table 1
         "tiered_cache": bench_tiered_cache.main,     # DRAM+SSD hierarchy
         "stage_model": bench_stage_model.main,       # Figure 2
         "layerwise": bench_layerwise.main,           # Figure 7
         "scheduling": bench_scheduling.main,         # Figure 8
+        "policies": bench_policies.main,             # strategy×admission grid
         "e2e": bench_e2e.main,                       # Figures 11/12/13
         "overload": bench_overload.main,             # Table 3 + Fig 9/10
         "cpp": bench_cpp.main,                       # §5.1 CPP vs SP/TP

@@ -10,7 +10,8 @@ import argparse
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import MooncakeCluster, TraceSpec, generate_trace
+from repro.core import (ClusterSpec, MooncakeCluster, TraceSpec,
+                        generate_trace, list_policies)
 
 
 def sparkline(vals, width=60):
@@ -34,9 +35,10 @@ def main():
     reqs = generate_trace(TraceSpec(n_requests=args.requests, seed=2,
                                     out_mu=5.9))
     print(f"replaying {len(reqs)} requests at {args.speedup}x on 8P+8D\n")
-    for adm in ("baseline", "early", "predictive"):
-        mc = MooncakeCluster(cfg, n_prefill=8, n_decode=8, ttft_slo=30,
-                             tbt_slo=0.1, admission=adm, t_d=20.0)
+    for adm in list_policies("admission"):
+        spec = ClusterSpec(n_prefill=8, n_decode=8, ttft_slo=30,
+                           tbt_slo=0.1, admission=adm, t_d=20.0)
+        mc = MooncakeCluster.from_spec(cfg, spec)
         res = mc.run(reqs, speedup=args.speedup, load_sample_dt=5.0)
         waste = sum(1 for r in res.records
                     if r.reject_stage == "decode_doublecheck")
@@ -47,6 +49,7 @@ def main():
               f"(after prefill: {waste}) | completed "
               f"{len(res.completed())} | goodput "
               f"{res.goodput(30, .1):.2f} req/s")
+        print(f"rejects by reason: {res.reject_breakdown()}")
         print(f"prefill load |{sparkline(pload)}|")
         print(f"decode load  |{sparkline(dload)}|  "
               f"std={np.std(dload):.2f}\n")

@@ -12,8 +12,9 @@
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import (CachePool, MooncakeCluster, TraceSpec,
-                        cache_hit_analysis, generate_trace, trace_stats)
+from repro.core import (CachePool, ClusterSpec, MooncakeCluster, TraceSpec,
+                        cache_hit_analysis, generate_trace, list_policies,
+                        trace_stats)
 
 
 def main():
@@ -42,11 +43,12 @@ def main():
 
     # --- 3. KVCache-centric scheduling (Fig 8) -----------------------------
     print("=" * 70)
-    print("3. Conductor scheduling strategies on a 4P+4D cluster (Fig 8)")
+    print("3. Conductor scheduling strategies on a 4P+4D cluster (Fig 8)\n"
+          "   (every policy in the registry — including any you add)")
     cfg = get_config("llama2-70b")   # the paper's dummy model
-    for strategy in ("random", "load_balance", "cache_aware", "kvcache"):
-        mc = MooncakeCluster(cfg, n_prefill=4, n_decode=4,
-                             strategy=strategy)
+    for strategy in list_policies("prefill"):
+        spec = ClusterSpec(n_prefill=4, n_decode=4, strategy=strategy)
+        mc = MooncakeCluster.from_spec(cfg, spec)
         res = mc.run(trace)
         print(f"   {strategy:13s} avg TTFT {res.avg_ttft():6.3f}s  "
               f"P90 {res.ttft_p90():6.3f}s  migrations={res.n_migrations}")

@@ -21,6 +21,7 @@ from repro.core.cache import CachePool
 from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.messenger import Messenger
+from repro.core.policies import list_policies
 from repro.core.trace import BLOCK_TOKENS, TraceSpec, generate_trace
 from repro.data.pipeline import realize_request_tokens
 from repro.models.transformer import init_params
@@ -36,6 +37,9 @@ def main():
     ap.add_argument("--ssd-blocks", type=int, default=0,
                     help="per-instance SSD tier capacity (blocks); "
                          "0 = flat DRAM pool (seed behaviour)")
+    ap.add_argument("--strategy", default="kvcache",
+                    choices=list_policies("prefill"),
+                    help="prefill routing policy (from the registry)")
     args = ap.parse_args()
 
     cfg = get_config("smollm-360m").reduced()
@@ -59,7 +63,8 @@ def main():
     if args.ssd_blocks:
         for p in P:
             msg.add_ssd_channel(p.iid, InstanceSpec().hw.ssd_read_bw)
-    conductor = Conductor(P, D, msg, ttft_slo=30.0, tbt_slo=0.1)
+    conductor = Conductor(P, D, msg, ttft_slo=30.0, tbt_slo=0.1,
+                          strategy=args.strategy)
 
     # ---- workload: session-structured trace, scaled to smoke size ----
     trace = generate_trace(TraceSpec(

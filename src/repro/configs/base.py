@@ -57,6 +57,38 @@ class CacheTierSpec:
 
 
 @dataclass(frozen=True)
+class ClusterSpec:
+    """A serving scenario as data: pool sizes, SLOs, cache hierarchy and
+    the scheduling policies (by registry name) of one ``MooncakeCluster``.
+
+    Benchmarks and examples declare scenarios by constructing/``replace``-ing
+    specs instead of threading 15 kwargs; ``MooncakeCluster.from_spec(cfg,
+    spec)`` builds the cluster. ``strategy`` / ``admission`` /
+    ``decode_policy`` resolve through ``repro.core.policies`` — any
+    registered name (including user policies) is valid.
+
+    ``inst_spec`` is a ``repro.core.costmodel.InstanceSpec`` (``None`` =
+    default v5e slice); typed loosely to keep configs import-light.
+    """
+    n_prefill: int = 4
+    n_decode: int = 4
+    ttft_slo: float = 30.0
+    tbt_slo: float = 0.1
+    cache: CacheTierSpec = CacheTierSpec()
+    strategy: str = "kvcache"
+    admission: str = "early"
+    decode_policy: str = "min_tbt"
+    balancing_threshold: float = 1.3
+    layerwise_prefill: bool = True
+    t_d: float = 10.0              # predictive admission's uniform decode time
+    seed: int = 0
+    inst_spec: Optional[object] = None
+
+    def replace(self, **kw) -> "ClusterSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
     top_k: int

@@ -7,8 +7,11 @@ from repro.core.tiered import TierPrefix, TieredCachePool
 from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
 from repro.core.costmodel import CostModel, Hardware, InstanceSpec, V5E
 from repro.core.messenger import Messenger
-from repro.core.overload import make_admission
+from repro.core.policies import (AdmissionPolicy, Arm, PolicyContext,
+                                 get_policy, list_policies, make_admission,
+                                 register_policy)
 from repro.core.simulator import CoupledCluster, MooncakeCluster, SimResult
+from repro.configs.base import CacheTierSpec, ClusterSpec
 from repro.core.trace import (BLOCK_TOKENS, Request, TraceSpec,
                               generate_trace, load_trace, save_trace,
                               simulated_requests, trace_stats)

@@ -109,8 +109,13 @@ class LengthAwarePolicy(_HeapPolicy):
 
 
 def make_policy(name: str) -> EvictionPolicy:
-    return {"lru": LRUPolicy, "lfu": LFUPolicy,
-            "length_aware": LengthAwarePolicy}[name]()
+    policies = {"lru": LRUPolicy, "lfu": LFUPolicy,
+                "length_aware": LengthAwarePolicy}
+    try:
+        return policies[name]()
+    except KeyError:
+        raise ValueError(f"unknown eviction policy {name!r}; "
+                         f"registered: {sorted(policies)}") from None
 
 
 # ---------------------------------------------------------------------------

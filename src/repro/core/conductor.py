@@ -1,43 +1,39 @@
 """Conductor — Mooncake's KVCache-centric global scheduler (§6, Algorithm 1).
 
-For each request the Conductor selects a (prefill, decode) instance pair by
-minimising predicted TTFT over the prefill pool, where each candidate's TTFT
-is either
+For each request the Conductor asks its prefill routing policy for a list
+of candidate ``Arm``s — ways to serve the prefill, each with a predicted
+TTFT — and commits the best one. The built-in arms are
 
-  * cache-aware (local):      T_queue + T_prefill(len, local_prefix)
-  * cache-aware + balancing:  T_transfer + T_queue + T_prefill(len, best_prefix)
+  * recompute (cache-aware, local):  T_queue + T_prefill(len, local_prefix)
+  * peer fetch (cache balancing):    T_transfer + T_queue + T_prefill(len, best_prefix)
+  * SSD load (compute-vs-load):      max(T_queue, T_ssd_load) + T_prefill(len, tier_prefix)
+  * overlap (why-not-both):          max(T_queue + T_head, T_ssd_load) + T_suffix
 
-and, when the instance's pool is a ``TieredCachePool`` with part of the
-prefix demoted to SSD, a third arm — the compute-vs-load decision of Jin
-et al. ("Compute Or Load KV Cache? Why Not Both?"):
+The SSD load is *prefetched*: it starts immediately on the node's SSD read
+channel and overlaps the queue wait, so only the slower of queue-drain and
+load delays the compute. The channel serialises loads FIFO
+(``Messenger.estimate_ssd``), so a node whose SSD is already streaming one
+long prefix makes the next load correctly expensive. Which arms exist for
+a request is the routing policy's business (``strategy`` resolves through
+the policy registry — see ``repro.core.policies``); the Conductor is only
+the commit machinery: SLO admission (line 25), hot-spot migration
+bookkeeping (line 28 — hot blocks spread automatically because they keep
+winning matches), queue/pool/decode accounting.
 
-  * load from local SSD:  max(T_queue, T_ssd_load) + T_prefill(len, tier_prefix)
-
-The scheduler picks min(recompute, fetch-from-peer-DRAM, load-from-SSD)
-per request. The SSD load is *prefetched*: it starts immediately on the
-node's SSD read channel and overlaps the queue wait (Jin et al.'s "why
-not both"), so only the slower of queue-drain and load delays the
-compute. The channel serialises loads FIFO (``Messenger.estimate_ssd``),
-so a node whose SSD is already streaming one long prefix makes the next
-load correctly expensive. Arm selection for recompute-vs-peer depends on
-whether the best remote prefix beats the local one by more
-than ``kvcache_balancing_threshold`` (Algorithm 1 line 8). After selection,
-if the chosen instance's local prefix is much worse than the global best,
-the best holder's blocks are replicated to it (hot-spot migration, line 28)
-— hot blocks spread automatically because they keep winning matches.
-
-Admission (line 25) rejects when the achievable TTFT or the decode pool's
-predicted TBT violates the SLO; overload-oriented policies (§7) wrap this
-with earlier, load-based rejection — see ``overload.py``.
+Overload-oriented admission policies (§7) wrap ``schedule`` with earlier,
+load-based rejection — see ``repro.core.policies.admission``. They set the
+``accounting`` knob ("pending" counts accepted-but-still-prefilling work
+in decode pre-selection; "current" reproduces the §7.2 time lag).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.cache import CachePool, StateCache
 from repro.core.costmodel import CostModel
 from repro.core.messenger import Messenger
+from repro.core.policies.base import Arm, PolicyContext, get_policy
 from repro.core.trace import BLOCK_TOKENS, Request
 
 
@@ -100,179 +96,130 @@ class Decision:
     ssd_blocks: int = 0                 # prefix blocks loaded from local SSD
     ssd_load_time: float = 0.0          # committed load duration incl. channel
                                         # backlog (overlaps the queue wait)
+    compute_time: float = 0.0           # prefill busy-time the arm charges
+    arm_kind: str = ""                  # which arm won (see policies.base.Arm)
     reject_reason: str = ""
 
 
 class Conductor:
-    """Algorithm 1 + hot-spot migration. Scheduling strategies:
+    """Algorithm 1 + hot-spot migration, driven by registry policies.
+
+    ``strategy`` names a registered prefill routing policy — built-ins:
 
     * ``kvcache`` — full Algorithm 1 (cache-aware + cache load balancing)
     * ``cache_aware`` — §6.1 only: always use the local prefix, never
       migrate (the Figure 8 "cache-aware" baseline)
     * ``load_balance`` — pick the least-loaded prefill instance
     * ``random`` — uniform random instance
+    * ``load_aware`` — FlowKV-style priced transfers + imbalance penalty
+    * ``why_not_both`` — overlapped head-recompute + tail-SSD-load arm
+
+    ``accounting`` ("pending" | "current") controls whether decode
+    pre-selection counts accepted-but-still-prefilling requests; §7
+    admission policies set it to match their stage model.
     """
 
     def __init__(self, prefills: list[PrefillInstance],
                  decodes: list[DecodeInstance], messenger: Messenger, *,
                  ttft_slo: float, tbt_slo: float,
                  balancing_threshold: float = 1.3,
-                 strategy: str = "kvcache", rng=None) -> None:
+                 strategy: str = "kvcache", decode_policy: str = "min_tbt",
+                 accounting: str = "pending", rng=None) -> None:
         self.P = prefills
         self.D = decodes
         self.messenger = messenger
         self.ttft_slo = ttft_slo
         self.tbt_slo = tbt_slo
-        self.threshold = balancing_threshold
-        self.strategy = strategy
         import random as _random
-        self.rng = rng or _random.Random(0)
-        self.account_pending = True   # baseline admission flips this (§7.2)
+        self.ctx = PolicyContext(messenger=messenger,
+                                 balancing_threshold=balancing_threshold,
+                                 rng=rng or _random.Random(0))
+        self.strategy = strategy
+        self.prefill_policy = get_policy("prefill", strategy)(self.ctx)
+        self.decode_policy = get_policy("decode", decode_policy)(self.ctx)
+        self.accounting = accounting
         self.n_migrations = 0
         self.migrated_bytes = 0.0
         self.n_ssd_loads = 0
         self.ssd_loaded_bytes = 0.0
 
-    # ---- Algorithm 1, lines 4–23 -------------------------------------
-    def _find_best_prefix(self, block_keys: list[int]):
-        best_len, best_inst = 0, None
-        for inst in self.P:
-            n = inst.pool.prefix_len(block_keys)
-            if n > best_len:
-                best_len, best_inst = n, inst
-        return best_len, best_inst
+    @property
+    def threshold(self) -> float:
+        return self.ctx.balancing_threshold
 
-    def _select_prefill(self, req: Request, now: float):
-        block_keys = req.hash_ids
-        L = req.input_length
-        best_len, best_inst = self._find_best_prefix(block_keys)
+    @property
+    def accounting(self) -> str:
+        return self._accounting
 
-        if self.strategy == "random":
-            inst = self.rng.choice(self.P)
-            n = inst.pool.prefix_len(block_keys)
-            ttft = inst.queue_time(now) + inst.cost.prefill_time(
-                L, n * BLOCK_TOKENS)
-            return inst, ttft, n, 0, None, 0
-        if self.strategy == "load_balance":
-            inst = min(self.P, key=lambda i: i.queue_free_at)
-            n = inst.pool.prefix_len(block_keys)
-            ttft = inst.queue_time(now) + inst.cost.prefill_time(
-                L, n * BLOCK_TOKENS)
-            return inst, ttft, n, 0, None, 0
+    @accounting.setter
+    def accounting(self, mode: str) -> None:
+        if mode not in ("pending", "current"):
+            raise ValueError(f"accounting must be 'pending' or 'current', "
+                             f"got {mode!r}")
+        self._accounting = mode
 
-        # candidate: (ttft, inst, prefix, migrate_blocks, src, ssd_blocks)
-        best = (float("inf"), None, 0, 0, None, 0)
-        for inst in self.P:
-            prefix_len = inst.pool.prefix_len(block_keys)
-            t_queue = inst.queue_time(now)
-            ratio = (best_len / prefix_len) if prefix_len else (
-                float("inf") if best_len else 1.0)
-            local_only = self.strategy == "cache_aware"
-            if ratio < self.threshold or local_only or best_inst is None:
-                # arm 1 — recompute on the local DRAM prefix
-                t_prefill = inst.cost.prefill_time(L, prefix_len * BLOCK_TOKENS)
-                cand = (t_queue + t_prefill, inst, prefix_len, 0, None, 0)
-            else:
-                # arm 2 — cache balancing: fetch the best peer prefix here
-                transfer_blocks = best_len - prefix_len
-                nbytes = inst.cost.kv_bytes(transfer_blocks * BLOCK_TOKENS)
-                t_transfer = self.messenger.estimate(best_inst.iid, nbytes, now)
-                t_prefill = inst.cost.prefill_time(L, best_len * BLOCK_TOKENS)
-                cand = (t_transfer + t_queue + t_prefill, inst, best_len,
-                        transfer_blocks, best_inst, 0)
-            if cand[0] < best[0]:
-                best = cand
-            # arm 3 — compute-vs-load: the prefix extends into local SSD
-            tier_prefix = getattr(inst.pool, "tier_prefix", None)
-            if tier_prefix is None:
-                continue
-            tp = tier_prefix(block_keys)
-            if tp.ssd > 0:
-                nbytes = inst.cost.kv_bytes(tp.ssd * BLOCK_TOKENS)
-                if self.messenger.has_ssd_channel(inst.iid):
-                    t_ssd = self.messenger.estimate_ssd(inst.iid, nbytes, now)
-                else:
-                    t_ssd = inst.cost.ssd_load_time(tp.ssd * BLOCK_TOKENS)
-                t_prefill = inst.cost.prefill_time(L, tp.total * BLOCK_TOKENS)
-                # the load starts now and overlaps the queue wait; compute
-                # starts when both the queue and the load are done
-                cand = (max(t_queue, t_ssd) + t_prefill, inst, tp.total,
-                        0, None, tp.ssd)
-                if cand[0] < best[0]:
-                    best = cand
-        ttft, inst, prefix, migrate, src, ssd_blocks = best
-        return inst, ttft, prefix, migrate, src, ssd_blocks
+    @property
+    def account_pending(self) -> bool:
+        """Whether decode pre-selection counts in-flight commitments."""
+        return self.accounting == "pending"
 
-    def _select_decode(self, req: Request):
-        """SelectDecodingInstance: least predicted TBT with VRAM headroom.
-
-        ``account_pending`` distinguishes the §7 policies: the naive
-        baseline pre-selects on the CURRENT decode state only (the time-lag
-        of §7.2 — accepted-but-still-prefilling requests are invisible),
-        while early/predictive policies count in-flight commitments."""
-        tokens = req.input_length + req.output_length
-        ok = [d for d in self.D if d.vram_ok(tokens, self.account_pending)]
-        if not ok:
-            return None, float("inf")
-        d = min(ok, key=lambda d: d.predicted_tbt(
-            1, tokens, include_pending=self.account_pending))
-        return d, d.predicted_tbt(1, tokens,
-                                  include_pending=self.account_pending)
+    def propose(self, req: Request, now: float) -> list[Arm]:
+        """Candidate arms for a request (pure — no side effects)."""
+        return self.prefill_policy.propose(req, self.P, now)
 
     # ---- the public entry point ---------------------------------------
     def schedule(self, req: Request, now: float) -> Decision:
-        inst, ttft, prefix, migrate, src, ssd_blocks = \
-            self._select_prefill(req, now)
-        d, tbt = self._select_decode(req)
+        arms = self.propose(req, now)
+        if not arms:
+            return Decision(False, reject_reason="no prefill arm")
+        arm = min(arms, key=lambda a: a.sort_key)   # first wins ties
+        if arm.ttft > self.ttft_slo:
+            # a score-biased pick (e.g. load_aware's imbalance penalty) must
+            # not reject a request another proposed arm could serve in SLO
+            arm = min(arms, key=lambda a: a.ttft)
+        d, tbt = self.decode_policy.select(req, self.D, now,
+                                           include_pending=self.account_pending)
         if d is None:
             return Decision(False, reject_reason="no decode slot (VRAM)")
-        if ttft > self.ttft_slo or tbt > self.tbt_slo:
-            reason = "TTFT SLO" if ttft > self.ttft_slo else "TBT SLO"
+        if arm.ttft > self.ttft_slo or tbt > self.tbt_slo:
+            reason = "TTFT SLO" if arm.ttft > self.ttft_slo else "TBT SLO"
             return Decision(False, reject_reason=reason,
-                            expected_ttft=ttft, expected_tbt=tbt)
+                            expected_ttft=arm.ttft, expected_tbt=tbt)
 
-        # ---- commit: hot-spot migration (Algorithm 1 line 28) ----
-        if migrate and src is not None:
-            nbytes = inst.cost.kv_bytes(migrate * BLOCK_TOKENS)
-            self.messenger.enqueue(src.iid, nbytes, now)
-            inst.pool.insert(req.hash_ids[:prefix], start_pos=0)
+        # ---- commit: the arm's own side effects (peer transfer enqueue +
+        # block replication, SSD channel enqueue) happen in its closure;
+        # ``load_done`` is when the arm's data lands — compute starts once
+        # both the queue has drained and the data is there.
+        inst = arm.instance
+        load_done = arm.land(now)
+        if arm.migrate_blocks and arm.transfer_from is not None:
             self.n_migrations += 1
-            self.migrated_bytes += nbytes
-
-        # ---- commit: SSD prefix load (compute-vs-load 'load' arm) ----
-        # The load starts NOW on the node's FIFO SSD read channel and
-        # overlaps the queue wait; compute starts once both the queue has
-        # drained and the load has landed — real time the simulator sees.
-        t_ssd = 0.0
-        load_done = now
-        if ssd_blocks:
-            nbytes = inst.cost.kv_bytes(ssd_blocks * BLOCK_TOKENS)
-            if self.messenger.has_ssd_channel(inst.iid):
-                load_done = self.messenger.enqueue_ssd(inst.iid, nbytes, now)
-            else:
-                load_done = now + inst.cost.ssd_load_time(
-                    ssd_blocks * BLOCK_TOKENS)
-            t_ssd = load_done - now
+            self.migrated_bytes += inst.cost.kv_bytes(
+                arm.migrate_blocks * BLOCK_TOKENS)
+        if arm.ssd_blocks:
             self.n_ssd_loads += 1
-            self.ssd_loaded_bytes += nbytes
+            self.ssd_loaded_bytes += inst.cost.kv_bytes(
+                arm.ssd_blocks * BLOCK_TOKENS)
 
         # queue the prefill work (cache inserts happen at completion in the
         # simulator; here we update the pool optimistically so back-to-back
         # requests in a session see the blocks). For a tiered pool the
         # lookup PROMOTES the loaded SSD blocks into DRAM.
-        t_prefill = inst.cost.prefill_time(
-            req.input_length, prefix * BLOCK_TOKENS)
-        inst.pool.lookup(req.hash_ids[:prefix])
-        inst.pool.insert(req.hash_ids[prefix:], start_pos=prefix)
+        inst.pool.lookup(req.hash_ids[:arm.prefix_blocks])
+        inst.pool.insert(req.hash_ids[arm.prefix_blocks:],
+                         start_pos=arm.prefix_blocks)
         inst.queue_free_at = max(inst.queue_free_at, load_done,
-                                 now) + t_prefill
-        inst.total_busy += t_prefill
+                                 now) + arm.compute_time
+        inst.total_busy += arm.compute_time
         inst.n_scheduled += 1
         d.pending += 1
         d.pending_tokens += req.input_length + req.output_length
         d.n_scheduled += 1
-        return Decision(True, prefill=inst, decode=d, expected_ttft=ttft,
-                        expected_tbt=tbt, prefix_blocks=prefix,
-                        migrated_blocks=migrate,
-                        transfer_from=src.iid if src else None,
-                        ssd_blocks=ssd_blocks, ssd_load_time=t_ssd)
+        return Decision(True, prefill=inst, decode=d, expected_ttft=arm.ttft,
+                        expected_tbt=tbt, prefix_blocks=arm.prefix_blocks,
+                        migrated_blocks=arm.migrate_blocks,
+                        transfer_from=arm.transfer_from.iid
+                        if arm.transfer_from else None,
+                        ssd_blocks=arm.ssd_blocks,
+                        ssd_load_time=arm.ssd_load_time,
+                        compute_time=arm.compute_time, arm_kind=arm.kind)

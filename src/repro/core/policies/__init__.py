@@ -1,0 +1,26 @@
+"""Pluggable scheduling policies: Arm candidates, prefill/decode routing,
+§7 admission — one string-keyed registry for all three kinds.
+
+    from repro.core.policies import register_policy, list_policies
+
+    @register_policy("prefill", "my_router")
+    class MyRouter:
+        def __init__(self, ctx): self.ctx = ctx
+        def propose(self, req, instances, now): ...
+
+See README "Adding a scheduling policy" for a worked example.
+"""
+from repro.core.policies.base import (Arm, DecodePolicy, PolicyContext,
+                                      PrefillPolicy, get_policy,
+                                      list_policies, register_policy)
+from repro.core.policies.admission import (AdmissionPolicy, BaselineAdmission,
+                                           EarlyRejection,
+                                           PredictiveEarlyRejection,
+                                           make_admission)
+from repro.core.policies.routing import (CacheAwareRouting, KVCacheRouting,
+                                         LoadBalanceRouting, RandomRouting,
+                                         find_best_prefix, peer_fetch_arm,
+                                         recompute_arm, ssd_load_arm)
+from repro.core.policies.load_aware import LoadAwareRouting
+from repro.core.policies.why_not_both import WhyNotBothRouting
+from repro.core.policies.decode import MinTBTDecode

@@ -1,0 +1,28 @@
+"""Built-in decode-placement policy.
+
+``min_tbt`` is the paper's SelectDecodingInstance: among instances with
+VRAM headroom, the one whose predicted TBT after joining is lowest.
+
+``include_pending`` is the Conductor's ``accounting`` knob (§7.2): the
+naive baseline pre-selects on the CURRENT decode state only — accepted
+requests still prefilling are invisible (the time lag that causes wasted
+prefill) — while pending-aware accounting counts in-flight commitments.
+"""
+from __future__ import annotations
+
+from repro.core.policies.base import PolicyContext, register_policy
+
+
+@register_policy("decode", "min_tbt")
+class MinTBTDecode:
+    def __init__(self, ctx: PolicyContext) -> None:
+        self.ctx = ctx
+
+    def select(self, req, instances, now, include_pending: bool = True):
+        tokens = req.input_length + req.output_length
+        ok = [d for d in instances if d.vram_ok(tokens, include_pending)]
+        if not ok:
+            return None, float("inf")
+        d = min(ok, key=lambda d: d.predicted_tbt(
+            1, tokens, include_pending=include_pending))
+        return d, d.predicted_tbt(1, tokens, include_pending=include_pending)

@@ -29,12 +29,12 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.configs.base import CacheTierSpec, ModelConfig
+from repro.configs.base import CacheTierSpec, ClusterSpec, ModelConfig
 from repro.core.cache import CachePool
 from repro.core.conductor import (Conductor, DecodeInstance, PrefillInstance)
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.messenger import Messenger
-from repro.core.overload import AdmissionPolicy, make_admission
+from repro.core.policies import AdmissionPolicy, make_admission
 from repro.core.trace import BLOCK_TOKENS, Request
 
 
@@ -44,6 +44,7 @@ class ReqRecord:
     arrival: float
     accepted: bool = False
     reject_stage: str = ""         # "admission" | "decode_doublecheck" | ""
+    reject_reason: str = ""        # Decision.reject_reason (detailed)
     prefill_start: float = -1.0
     ttft: float = -1.0             # first token latency (s)
     tbts: list = field(default_factory=list)  # per-token gaps (s)
@@ -74,6 +75,19 @@ class SimResult:
 
     def rejected(self):
         return [r for r in self.records if not r.accepted]
+
+    def reject_breakdown(self) -> dict:
+        """Rejected-request counts by detailed reason (falling back to the
+        stage when a reason wasn't recorded), most frequent first."""
+        counts: dict = {}
+        for r in self.records:
+            if r.accepted:
+                continue
+            key = r.reject_reason or r.reject_stage
+            if not key:
+                continue
+            counts[key] = counts.get(key, 0) + 1
+        return dict(sorted(counts.items(), key=lambda kv: (-kv[1], kv[0])))
 
     def ttft_p90(self) -> float:
         c = [r.ttft for r in self.completed()]
@@ -183,47 +197,96 @@ class _DecodeEngine:
         self.events.push(t2, lambda: self.tick(t2))
 
 
+_UNSET = object()   # sentinel: distinguishes "not passed" from None defaults
+
+
 class MooncakeCluster:
-    def __init__(self, cfg: ModelConfig, *, n_prefill: int, n_decode: int,
-                 inst_spec: InstanceSpec = InstanceSpec(),
-                 ttft_slo: float = 30.0, tbt_slo: float = 0.1,
-                 cache_capacity_blocks: Optional[int] = 20000,
-                 cache_policy: str = "lru",
-                 cache_spec: Optional[CacheTierSpec] = None,
-                 strategy: str = "kvcache",
-                 admission: str = "early",
-                 balancing_threshold: float = 1.3,
-                 layerwise_prefill: bool = True,
-                 t_d: float = 10.0, seed: int = 0) -> None:
+    """Disaggregated cluster. The scenario is a ``ClusterSpec``:
+
+        MooncakeCluster.from_spec(cfg, ClusterSpec(n_prefill=8, ...))
+
+    The flat-kwarg constructor (``MooncakeCluster(cfg, n_prefill=8, ...)``)
+    is a deprecated shim kept for existing callers; it builds the same
+    ``ClusterSpec`` internally (``cache_capacity_blocks``/``cache_policy``
+    fold into a flat ``CacheTierSpec`` unless ``cache_spec`` is given).
+    """
+
+    def __init__(self, cfg: ModelConfig, spec: Optional[ClusterSpec] = None,
+                 *, n_prefill: int = _UNSET, n_decode: int = _UNSET,
+                 inst_spec: InstanceSpec = _UNSET,
+                 ttft_slo: float = _UNSET, tbt_slo: float = _UNSET,
+                 cache_capacity_blocks: Optional[int] = _UNSET,
+                 cache_policy: str = _UNSET,
+                 cache_spec: Optional[CacheTierSpec] = _UNSET,
+                 strategy: str = _UNSET,
+                 admission: str = _UNSET,
+                 balancing_threshold: float = _UNSET,
+                 layerwise_prefill: bool = _UNSET,
+                 t_d: float = _UNSET, seed: int = _UNSET) -> None:
+        legacy = {k: v for k, v in dict(
+            n_prefill=n_prefill, n_decode=n_decode, inst_spec=inst_spec,
+            ttft_slo=ttft_slo, tbt_slo=tbt_slo, strategy=strategy,
+            admission=admission, balancing_threshold=balancing_threshold,
+            layerwise_prefill=layerwise_prefill, t_d=t_d,
+            seed=seed).items() if v is not _UNSET}
+        if spec is not None:
+            if legacy or cache_spec is not _UNSET \
+                    or cache_capacity_blocks is not _UNSET \
+                    or cache_policy is not _UNSET:
+                raise ValueError("pass either a ClusterSpec or legacy "
+                                 "kwargs, not both")
+        else:
+            if cache_spec is not _UNSET and cache_spec is not None:
+                legacy["cache"] = cache_spec
+            elif cache_capacity_blocks is not _UNSET \
+                    or cache_policy is not _UNSET:
+                legacy["cache"] = CacheTierSpec(
+                    dram_blocks=20000 if cache_capacity_blocks is _UNSET
+                    else cache_capacity_blocks,
+                    dram_policy="lru" if cache_policy is _UNSET
+                    else cache_policy)
+            spec = ClusterSpec(**legacy)
+
         self.cfg = cfg
-        cost = lambda: CostModel(cfg, inst_spec)
-        if cache_spec is None:
-            cache_spec = CacheTierSpec(dram_blocks=cache_capacity_blocks,
-                                       dram_policy=cache_policy)
-        self.cache_spec = cache_spec
+        self.spec = spec
+        inst = spec.inst_spec if spec.inst_spec is not None else InstanceSpec()
+        cost = lambda: CostModel(cfg, inst)
+        self.cache_spec = spec.cache
         self.prefills = [PrefillInstance(
-            iid=i, pool=cache_spec.make_pool(),
-            cost=cost()) for i in range(n_prefill)]
+            iid=i, pool=spec.cache.make_pool(),
+            cost=cost()) for i in range(spec.n_prefill)]
         self.decodes = [DecodeInstance(iid=1000 + i, cost=cost())
-                        for i in range(n_decode)]
+                        for i in range(spec.n_decode)]
         node_ids = [p.iid for p in self.prefills] + [d.iid for d in self.decodes]
-        self.messenger = Messenger(node_ids, bw=inst_spec.hw.net_bw)
-        if cache_spec.tiered:
+        self.messenger = Messenger(node_ids, bw=inst.hw.net_bw)
+        if spec.cache.tiered:
             for p in self.prefills:
-                self.messenger.add_ssd_channel(p.iid, inst_spec.hw.ssd_read_bw)
+                self.messenger.add_ssd_channel(p.iid, inst.hw.ssd_read_bw)
         import random
         self.conductor = Conductor(
             self.prefills, self.decodes, self.messenger,
-            ttft_slo=ttft_slo, tbt_slo=tbt_slo,
-            balancing_threshold=balancing_threshold, strategy=strategy,
-            rng=random.Random(seed))
-        kw = {"t_d": t_d} if admission == "predictive" else {}
-        self.admission: AdmissionPolicy = make_admission(
-            admission, self.conductor, **kw)
-        self.ttft_slo = ttft_slo
-        self.tbt_slo = tbt_slo
-        self.layerwise = layerwise_prefill
-        self.admission_name = admission
+            ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
+            balancing_threshold=spec.balancing_threshold,
+            strategy=spec.strategy, decode_policy=spec.decode_policy,
+            rng=random.Random(spec.seed))
+        # forward spec knobs any registered admission policy declares
+        # (predictive's t_d, and user policies subclassing it)
+        import inspect
+        from repro.core.policies import get_policy
+        adm_cls = get_policy("admission", spec.admission)
+        kw = {"t_d": spec.t_d} if "t_d" in inspect.signature(
+            adm_cls.__init__).parameters else {}
+        self.admission: AdmissionPolicy = adm_cls(self.conductor, **kw)
+        self.ttft_slo = spec.ttft_slo
+        self.tbt_slo = spec.tbt_slo
+        self.layerwise = spec.layerwise_prefill
+        self.admission_name = spec.admission
+
+    @classmethod
+    def from_spec(cls, cfg: ModelConfig, spec: ClusterSpec) \
+            -> "MooncakeCluster":
+        """Build a cluster from a declarative scenario spec."""
+        return cls(cfg, spec)
 
     def run(self, requests: list[Request], *, speedup: float = 1.0,
             load_sample_dt: float = 10.0) -> SimResult:
@@ -238,6 +301,7 @@ class MooncakeCluster:
             dec = self.admission.schedule(rec.req, now)
             if not dec.accepted:
                 rec.reject_stage = "admission"
+                rec.reject_reason = dec.reject_reason
                 return
             rec.accepted = True
             rec.prefix_blocks = dec.prefix_blocks
@@ -248,8 +312,7 @@ class MooncakeCluster:
             # any SSD prefix load overlapped the queue wait, so compute
             # start already reflects max(queue drained, load landed))
             t_done = p.queue_free_at
-            rec.prefill_start = t_done - p.cost.prefill_time(
-                rec.req.input_length, dec.prefix_blocks * BLOCK_TOKENS)
+            rec.prefill_start = t_done - dec.compute_time
 
             # KVCache transfer to the decode node (§5.2 layer-wise overlap):
             # streaming starts when prefill starts, so completion is
@@ -278,9 +341,11 @@ class MooncakeCluster:
                 over_tbt = d.predicted_tbt(
                     1, tokens, include_pending=False) > self.tbt_slo
                 over_vram = not d.vram_ok(tokens, include_pending=False)
-                if self.admission_name == "baseline" and (over_tbt or over_vram):
+                if self.admission.decode_double_check and (over_tbt or over_vram):
                     rec.accepted = False
                     rec.reject_stage = "decode_doublecheck"
+                    rec.reject_reason = "decode double-check (%s)" % (
+                        "VRAM" if over_vram else "TBT")
                     d.pending -= 1
                     d.pending_tokens -= tokens
                     return
@@ -415,6 +480,7 @@ class CoupledCluster:
             inst = min(self.insts, key=lambda i: i.load())
             if inst.load() >= self.admit_load:
                 rec.reject_stage = "admission"
+                rec.reject_reason = "instance load limit"
                 return
             rec.accepted = True
             inst.waiting.append(rec)

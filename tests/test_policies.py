@@ -1,0 +1,324 @@
+"""Policy registry + an invariant suite over EVERY registered policy.
+
+The invariants (run for each registered prefill routing policy and each
+admission policy, so user-registered policies get them for free by being
+in the registry when pytest collects):
+
+  * propose is PURE — no pool/queue/messenger mutation, and repeatable;
+  * proposed arms are well-formed (no negative TTFT, instance assigned);
+  * accept ⇒ prefill+decode instances assigned and the queue advanced;
+  * reject ⇒ no pool/queue/messenger mutation (nothing was committed);
+  * commit happens exactly once, at schedule time, not at propose time.
+"""
+import random
+
+import pytest
+
+from repro.configs.base import ClusterSpec, get_config
+from repro.core.cache import CachePool, make_policy
+from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.messenger import Messenger
+from repro.core.policies import (get_policy, list_policies, make_admission,
+                                 register_policy)
+from repro.core.policies.base import _REGISTRY
+from repro.core.simulator import MooncakeCluster
+from repro.core.tiered import TieredCachePool
+from repro.core.trace import BLOCK_TOKENS, Request, TraceSpec, generate_trace
+
+CFG = get_config("llama2-70b")
+
+PREFILL_POLICIES = list_policies("prefill")
+ADMISSION_POLICIES = list_policies("admission")
+
+
+def make_cluster(strategy="kvcache", n_p=3, n_d=2, *, ttft_slo=30.0,
+                 tbt_slo=0.1, tiered=True):
+    """Small cluster with a seeded cache state that exercises every arm
+    kind: instance 1 holds a full DRAM prefix, instance 2 a partial one
+    spilling into SSD, instance 0 is cold."""
+    cost = lambda: CostModel(CFG, InstanceSpec())
+    mk = (lambda: TieredCachePool(64, 512)) if tiered else (lambda: CachePool())
+    P = [PrefillInstance(iid=i, pool=mk(), cost=cost()) for i in range(n_p)]
+    D = [DecodeInstance(iid=100 + i, cost=cost()) for i in range(n_d)]
+    msg = Messenger([p.iid for p in P] + [d.iid for d in D], bw=100e9)
+    if tiered:
+        for p in P:
+            msg.add_ssd_channel(p.iid, 6e9)
+    P[1].pool.insert(range(8))
+    if tiered:
+        P[2].pool.insert(range(5))
+        for k in (3, 4):            # demote the tail of P2's prefix to SSD
+            meta = P[2].pool.remove(k)
+            P[2].pool.ssd.insert_meta(meta)
+    c = Conductor(P, D, msg, ttft_slo=ttft_slo, tbt_slo=tbt_slo,
+                  strategy=strategy)
+    return c, P, D
+
+
+def req(rid=0, n_blocks=8, out=64):
+    return Request(req_id=rid, timestamp=0,
+                   input_length=n_blocks * BLOCK_TOKENS, output_length=out,
+                   hash_ids=list(range(n_blocks)))
+
+
+def snapshot(c):
+    """Everything a scheduling decision may mutate."""
+    return (
+        tuple((p.queue_free_at, p.total_busy, p.n_scheduled,
+               tuple(sorted(p.pool.blocks)),
+               tuple(sorted(getattr(p.pool, "ssd", p.pool).blocks)))
+              for p in c.P),
+        tuple((d.pending, d.pending_tokens, d.n_scheduled) for d in c.D),
+        tuple(sorted((k, l.busy_until, l.n_transfers)
+                     for k, l in c.messenger.links.items())),
+        tuple(sorted((k, l.busy_until, l.n_transfers)
+                     for k, l in c.messenger.ssd_links.items())),
+        (c.n_migrations, c.n_ssd_loads),
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_unknown_policy_raises_valueerror_listing_names():
+    with pytest.raises(ValueError) as e:
+        get_policy("prefill", "nope")
+    for name in PREFILL_POLICIES:
+        assert name in str(e.value)
+
+
+def test_make_admission_unknown_name():
+    c, _, _ = make_cluster()
+    with pytest.raises(ValueError) as e:
+        make_admission("nope", c)
+    assert "early" in str(e.value) and "predictive" in str(e.value)
+
+
+def test_conductor_unknown_strategy():
+    with pytest.raises(ValueError, match="kvcache"):
+        make_cluster(strategy="definitely_not_registered")
+
+
+def test_eviction_make_policy_unknown_name():
+    with pytest.raises(ValueError, match="lru"):
+        make_policy("nope")
+
+
+def test_register_policy_roundtrip():
+    @register_policy("prefill", "_test_local_only")
+    class LocalOnly:
+        def __init__(self, ctx):
+            self.ctx = ctx
+
+        def propose(self, req, instances, now):
+            from repro.core.policies.routing import recompute_arm
+            return [recompute_arm(instances[0], req, now)]
+
+    try:
+        assert "_test_local_only" in list_policies("prefill")
+        c, P, D = make_cluster(strategy="_test_local_only")
+        dec = c.schedule(req(), 0.0)
+        assert dec.accepted and dec.prefill is P[0]
+    finally:
+        del _REGISTRY[("prefill", "_test_local_only")]
+
+
+def test_register_policy_bad_kind():
+    with pytest.raises(ValueError, match="kind"):
+        register_policy("sideways", "x")
+
+
+# ---------------------------------------------------------------------------
+# invariants over every registered prefill policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", PREFILL_POLICIES)
+def test_propose_is_pure_and_wellformed(strategy):
+    c, P, D = make_cluster(strategy)
+    P[0].queue_free_at = 3.0          # some queue skew for load-aware paths
+    before = snapshot(c)
+    c.ctx.rng = random.Random(0)
+    arms = c.propose(req(), now=0.0)
+    assert arms, "policy must propose at least one arm for a live pool"
+    for a in arms:
+        assert a.ttft >= 0.0 and a.compute_time >= 0.0
+        assert a.sort_key >= 0.0
+        assert a.instance in P
+        assert a.prefix_blocks >= 0 and a.ssd_blocks >= 0
+    assert snapshot(c) == before, "propose must not mutate state"
+    c.ctx.rng = random.Random(0)
+    arms2 = c.propose(req(), now=0.0)
+    assert [a.ttft for a in arms] == [a.ttft for a in arms2]
+    assert snapshot(c) == before
+
+
+@pytest.mark.parametrize("strategy", PREFILL_POLICIES)
+def test_accept_assigns_instances_and_commits_once(strategy):
+    c, P, D = make_cluster(strategy)
+    before = snapshot(c)
+    dec = c.schedule(req(), now=0.0)
+    assert dec.accepted
+    assert dec.prefill is not None and dec.decode is not None
+    assert dec.expected_ttft >= 0.0 and dec.compute_time > 0.0
+    assert dec.prefill.queue_free_at > 0.0, "commit must charge the queue"
+    assert dec.prefill.n_scheduled == 1
+    assert dec.decode.pending == 1
+    assert snapshot(c) != before
+    # the request's blocks are now resident on the chosen instance
+    assert dec.prefill.pool.lookup(req().hash_ids, touch=False) \
+        == req().n_blocks
+
+
+@pytest.mark.parametrize("strategy", PREFILL_POLICIES)
+def test_reject_leaves_state_untouched(strategy):
+    c, P, D = make_cluster(strategy, ttft_slo=1e-12)   # nothing can meet it
+    before = snapshot(c)
+    dec = c.schedule(req(), now=0.0)
+    assert not dec.accepted and dec.reject_reason
+    assert snapshot(c) == before, "a rejected request must commit nothing"
+
+
+@pytest.mark.parametrize("strategy", PREFILL_POLICIES)
+def test_flat_pool_still_schedules(strategy):
+    c, P, D = make_cluster(strategy, tiered=False)
+    dec = c.schedule(req(), now=0.0)
+    assert dec.accepted and dec.ssd_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# invariants over every registered admission policy
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def overload_trace():
+    return generate_trace(TraceSpec(n_requests=600, duration_ms=100_000,
+                                    seed=5, out_mu=5.9))
+
+
+@pytest.mark.parametrize("adm", ADMISSION_POLICIES)
+def test_admission_records_and_breakdown(adm, overload_trace):
+    spec = ClusterSpec(n_prefill=2, n_decode=2, admission=adm, t_d=20.0)
+    res = MooncakeCluster.from_spec(CFG, spec).run(overload_trace,
+                                                   speedup=6.0)
+    rejected = res.rejected()
+    assert rejected, "scenario must actually overload"
+    for r in rejected:
+        assert r.reject_reason, "every rejection must carry a reason"
+    bd = res.reject_breakdown()
+    assert sum(bd.values()) == len(rejected)
+    for r in res.records:
+        if r.completed:
+            assert r.ttft >= 0.0
+
+
+def test_baseline_breakdown_separates_doublecheck(overload_trace):
+    spec = ClusterSpec(n_prefill=2, n_decode=2, admission="baseline")
+    res = MooncakeCluster.from_spec(CFG, spec).run(overload_trace,
+                                                   speedup=6.0)
+    bd = res.reject_breakdown()
+    assert any(k.startswith("decode double-check") for k in bd), bd
+
+
+@pytest.mark.parametrize("adm", ADMISSION_POLICIES)
+def test_admission_sets_conductor_accounting(adm):
+    c, _, _ = make_cluster()
+    pol = make_admission(adm, c)
+    assert c.accounting == pol.accounting
+    assert c.account_pending == (pol.accounting == "pending")
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec
+# ---------------------------------------------------------------------------
+
+def test_from_spec_matches_legacy_kwargs():
+    reqs = generate_trace(TraceSpec(n_requests=200, duration_ms=60_000,
+                                    seed=9))
+    legacy = MooncakeCluster(CFG, n_prefill=2, n_decode=2, ttft_slo=30,
+                             tbt_slo=0.1, strategy="kvcache",
+                             admission="early").run(reqs)
+    spec = ClusterSpec(n_prefill=2, n_decode=2, ttft_slo=30, tbt_slo=0.1,
+                       strategy="kvcache", admission="early")
+    modern = MooncakeCluster.from_spec(CFG, spec).run(reqs)
+    assert legacy.avg_ttft() == modern.avg_ttft()
+    assert len(legacy.completed()) == len(modern.completed())
+
+
+def test_spec_and_kwargs_are_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        MooncakeCluster(CFG, ClusterSpec(), n_prefill=2)
+
+
+def test_spec_replace():
+    s = ClusterSpec(strategy="kvcache")
+    assert s.replace(strategy="load_aware").strategy == "load_aware"
+    assert s.strategy == "kvcache"
+
+
+# ---------------------------------------------------------------------------
+# the new policies
+# ---------------------------------------------------------------------------
+
+def test_why_not_both_never_predicts_slower_than_kvcache():
+    """The overlap arm's split search includes k=ssd (pure load) and the
+    other inherited arms, so its best predicted TTFT is <= kvcache's on
+    the same cluster state."""
+    for n_blocks in (4, 8, 12):
+        a, _, _ = make_cluster("kvcache")
+        b, _, _ = make_cluster("why_not_both")
+        r = req(n_blocks=n_blocks)
+        t_kv = min(x.ttft for x in a.propose(r, 0.0))
+        t_wnb = min(x.ttft for x in b.propose(r, 0.0))
+        assert t_wnb <= t_kv + 1e-12
+
+
+def test_why_not_both_overlap_beats_pure_arms():
+    """With an idle queue and NVMe-class SSD (load and recompute times
+    comparable), the split arm's predicted TTFT beats both the pure-load
+    and pure-recompute plans on the same instance."""
+    c, P, D = make_cluster("why_not_both")
+    kv, _, _ = make_cluster("kvcache")
+    r = req(n_blocks=5)                           # P2: 3 DRAM + 2 SSD blocks
+    overlap = [a for a in c.propose(r, 0.0) if a.kind == "overlap"]
+    assert overlap, "tier prefix must yield an overlap arm"
+    arm = min(overlap, key=lambda a: a.ttft)
+    assert 0 < arm.ssd_blocks < 2, "the split must load only the tail"
+    # vs the pure-load plan (kvcache's all-or-nothing SSD arm)
+    pure_load = [a for a in kv.propose(r, 0.0) if a.kind == "ssd_load"
+                 and a.instance.iid == arm.instance.iid]
+    assert pure_load and arm.ttft <= min(a.ttft for a in pure_load) + 1e-12
+    # vs the pure-recompute plan on the same instance's DRAM prefix
+    inst = next(p for p in c.P if p.iid == arm.instance.iid)
+    from repro.core.policies.routing import recompute_arm
+    assert arm.ttft <= recompute_arm(inst, r, 0.0).ttft + 1e-12
+
+
+def test_load_aware_prices_transfers_the_ratio_gate_skips():
+    """Holder has 8/8 blocks, rival 7/8: kvcache's ratio gate (8/7 < 1.3)
+    never proposes the fetch; load_aware prices it."""
+    cost = lambda: CostModel(CFG, InstanceSpec())
+    P = [PrefillInstance(iid=i, pool=CachePool(), cost=cost())
+         for i in range(2)]
+    D = [DecodeInstance(iid=100, cost=cost())]
+    msg = Messenger([0, 1, 100], bw=100e9)
+    P[0].pool.insert(range(8))
+    P[1].pool.insert(range(7))
+    kv = Conductor(P, D, msg, ttft_slo=30, tbt_slo=0.1, strategy="kvcache")
+    la = Conductor(P, D, msg, ttft_slo=30, tbt_slo=0.1, strategy="load_aware")
+    r = req(n_blocks=8)
+    assert not any(a.kind == "peer_fetch" for a in kv.propose(r, 0.0))
+    fetches = [a for a in la.propose(r, 0.0) if a.kind == "peer_fetch"]
+    assert fetches and fetches[0].instance is P[1]
+    assert fetches[0].migrate_blocks == 1
+
+
+def test_load_aware_penalty_biases_score_not_ttft():
+    c, P, D = make_cluster("load_aware")
+    P[1].queue_free_at = 50.0          # hot holder
+    arms = c.propose(req(), now=0.0)
+    hot = [a for a in arms if a.instance is P[1]]
+    assert hot and all(a.score is not None and a.score > a.ttft for a in hot)
+    cold = [a for a in arms if a.instance is P[0]]
+    assert all(a.score == pytest.approx(a.ttft) for a in cold)
