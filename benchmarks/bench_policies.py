@@ -91,7 +91,8 @@ SCENARIOS = [
 ]
 
 
-def run_grid(scn: Scenario, strategies, admissions, fast: bool) -> list[dict]:
+def run_grid(scn: Scenario, strategies, admissions, decodes,
+             fast: bool) -> list[dict]:
     requests = scn.build_requests(fast)
     base = scn.build_spec(requests)
     # common window: the makespan moves with the last completion, which is
@@ -100,28 +101,30 @@ def run_grid(scn: Scenario, strategies, admissions, fast: bool) -> list[dict]:
     rows = []
     for strategy in strategies:
         for admission in admissions:
-            spec = base.replace(strategy=strategy, admission=admission,
-                                t_d=20.0)
-            res = MooncakeCluster.from_spec(get_config("llama2-70b"),
-                                            spec).run(requests,
-                                                      speedup=scn.speedup)
-            slo = (spec.ttft_slo, spec.tbt_slo)
-            rows.append(dict(
-                scenario=scn.name, strategy=strategy, admission=admission,
-                goodput_rps=round(res.goodput(*slo, window), 4),
-                avg_ttft_s=round(res.avg_ttft(), 3),
-                ttft_p90_s=round(res.ttft_p90(), 3),
-                completed=len(res.completed()),
-                rejected=len(res.rejected()),
-                migrations=res.n_migrations,
-                ssd_loads=res.n_ssd_loads,
-                reject_top=next(iter(res.reject_breakdown()), "")))
+            for decode in decodes:
+                spec = base.replace(strategy=strategy, admission=admission,
+                                    decode_policy=decode, t_d=20.0)
+                res = MooncakeCluster.from_spec(get_config("llama2-70b"),
+                                                spec).run(requests,
+                                                          speedup=scn.speedup)
+                slo = (spec.ttft_slo, spec.tbt_slo)
+                rows.append(dict(
+                    scenario=scn.name, strategy=strategy,
+                    admission=admission, decode=decode,
+                    goodput_rps=round(res.goodput(*slo, window), 4),
+                    avg_ttft_s=round(res.avg_ttft(), 3),
+                    ttft_p90_s=round(res.ttft_p90(), 3),
+                    completed=len(res.completed()),
+                    rejected=len(res.rejected()),
+                    migrations=res.n_migrations,
+                    ssd_loads=res.n_ssd_loads,
+                    reject_top=next(iter(res.reject_breakdown()), "")))
     return rows
 
 
 def _wins(rows: list[dict], new: str) -> list[str]:
     """Grid cells where ``new`` beats a legacy strategy under the same
-    scenario+admission on goodput or TTFT p90."""
+    scenario+admission+decode on goodput or TTFT p90."""
     out = []
     for r in rows:
         if r["strategy"] != new:
@@ -129,23 +132,45 @@ def _wins(rows: list[dict], new: str) -> list[str]:
         for other in rows:
             if other["strategy"] not in LEGACY_STRATEGIES \
                     or other["scenario"] != r["scenario"] \
-                    or other["admission"] != r["admission"]:
+                    or other["admission"] != r["admission"] \
+                    or other["decode"] != r["decode"]:
                 continue
             if r["goodput_rps"] > other["goodput_rps"] \
                     or r["ttft_p90_s"] < other["ttft_p90_s"]:
                 metric = "goodput" if r["goodput_rps"] > other["goodput_rps"] \
                     else "ttft_p90"
-                out.append(f"{r['scenario']}/{r['admission']}: {new} beats "
-                           f"{other['strategy']} on {metric}")
+                out.append(f"{r['scenario']}/{r['admission']}/{r['decode']}: "
+                           f"{new} beats {other['strategy']} on {metric}")
+    return out
+
+
+def _decode_wins(rows: list[dict], new: str, base: str) -> list[str]:
+    """Cells where decode policy ``new`` beats ``base`` at the same
+    scenario+strategy+admission on goodput or TTFT p90."""
+    by_cell = {(r["scenario"], r["strategy"], r["admission"], r["decode"]): r
+               for r in rows}
+    out = []
+    for (scn, strat, adm, dec), r in by_cell.items():
+        if dec != new:
+            continue
+        other = by_cell.get((scn, strat, adm, base))
+        if other is None:
+            continue
+        if r["goodput_rps"] > other["goodput_rps"] \
+                or r["ttft_p90_s"] < other["ttft_p90_s"]:
+            metric = "goodput" if r["goodput_rps"] > other["goodput_rps"] \
+                else "ttft_p90"
+            out.append(f"{scn}/{strat}/{adm}: {new} beats {base} on {metric}")
     return out
 
 
 def main(fast: bool = False):
     strategies = list_policies("prefill")
     admissions = list_policies("admission")
+    decodes = list_policies("decode")
     all_rows = []
     for scn in SCENARIOS:
-        rows = run_grid(scn, strategies, admissions, fast)
+        rows = run_grid(scn, strategies, admissions, decodes, fast)
         emit(f"policy_grid_{scn.name}", rows)
         all_rows.extend(rows)
 
@@ -157,6 +182,14 @@ def main(fast: bool = False):
         if len(wins) > 6:
             print(f"  ... and {len(wins) - 6} more")
         assert wins, f"{new} must beat >=1 legacy policy in >=1 scenario"
+
+    print("\n== decode-policy wins (kv_pressure vs min_tbt) ==")
+    dwins = _decode_wins(all_rows, "kv_pressure", "min_tbt")
+    for w in dwins[:6]:
+        print("  " + w)
+    if len(dwins) > 6:
+        print(f"  ... and {len(dwins) - 6} more")
+    assert dwins, "kv_pressure must beat min_tbt in >=1 grid cell"
     return all_rows
 
 

@@ -1,0 +1,139 @@
+"""Benchmark regression gate — compare fresh --quick results to committed
+baselines within tolerance.
+
+CI runs the quick benchmark lanes with ``BENCH_RESULTS`` pointed at a
+scratch dir, then invokes this module to diff the scratch JSON against
+the committed quick baselines (``benchmarks/results/quick/``). Only
+DETERMINISTIC headline metrics are gated (seeded-simulator outputs:
+goodput, TTFT, completion/rejection counts, hit rates) — wall-clock
+benchmarks like ``ssd_store`` assert their own orderings in-process and
+are uploaded as artifacts, not gated here.
+
+Rows are matched positionally (the benches are deterministic) and their
+identity columns (every non-gated field) must agree exactly; a schema
+change therefore fails loudly, which is the point — intentional changes
+regenerate the baselines in the same PR:
+
+    BENCH_RESULTS=benchmarks/results/quick \
+        python -m benchmarks.bench_policies --quick
+    BENCH_RESULTS=benchmarks/results/quick \
+        python -m benchmarks.bench_tiered_cache --quick
+
+    python -m benchmarks.check_regression --fresh <scratch-dir>
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: table -> (gated metric columns, relative tolerance, absolute floor).
+#: The simulators are fully seeded, so drift beyond float-formatting noise
+#: means behaviour changed; the tolerance absorbs rounding + minor
+#: platform float differences only.
+GATED_TABLES: dict[str, tuple[tuple[str, ...], float, float]] = {
+    "policy_grid_moderate": (
+        ("goodput_rps", "avg_ttft_s", "ttft_p90_s", "completed", "rejected"),
+        0.02, 0.01),
+    "policy_grid_ssd_tier": (
+        ("goodput_rps", "avg_ttft_s", "ttft_p90_s", "completed", "rejected"),
+        0.02, 0.01),
+    "policy_grid_overload": (
+        ("goodput_rps", "avg_ttft_s", "ttft_p90_s", "completed", "rejected"),
+        0.02, 0.01),
+    "tiered_cache_hit_rate": (
+        ("hit_rate", "dram_hits", "ssd_hits", "demotions", "promotions"),
+        0.02, 0.01),
+    "tiered_cache_goodput": (
+        ("goodput_rps", "avg_ttft_s", "ttft_p90_s", "slo_ok", "completed"),
+        0.02, 0.01),
+}
+
+
+def _load(directory: str, table: str):
+    path = os.path.join(directory, table + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_table(table: str, baseline: list[dict], fresh: list[dict],
+                  metrics: tuple[str, ...], rel_tol: float,
+                  abs_floor: float) -> list[str]:
+    errors = []
+    if len(baseline) != len(fresh):
+        return [f"{table}: row count {len(fresh)} != baseline "
+                f"{len(baseline)} (regenerate baselines if intentional)"]
+    for i, (b, f) in enumerate(zip(baseline, fresh)):
+        ident_b = {k: v for k, v in b.items() if k not in metrics}
+        ident_f = {k: v for k, v in f.items() if k not in metrics}
+        if ident_b != ident_f:
+            errors.append(f"{table}[{i}]: identity columns differ: "
+                          f"{ident_f} != baseline {ident_b}")
+            continue
+        for m in metrics:
+            if m not in b and m not in f:
+                continue
+            bv, fv = b.get(m), f.get(m)
+            if bv is None or fv is None:
+                if bv != fv:
+                    errors.append(f"{table}[{i}].{m}: {fv} != {bv}")
+                continue
+            tol = max(abs(float(bv)) * rel_tol, abs_floor)
+            if abs(float(fv) - float(bv)) > tol:
+                errors.append(
+                    f"{table}[{i}].{m}: {fv} vs baseline {bv} "
+                    f"(|Δ|={abs(float(fv) - float(bv)):.4g} > tol {tol:.4g}) "
+                    f"[{ident_b}]")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/results/quick",
+                    help="committed quick-lane baseline dir")
+    ap.add_argument("--fresh", required=True,
+                    help="dir the quick benches just wrote (BENCH_RESULTS)")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="multiply every table's tolerance (debugging aid)")
+    args = ap.parse_args(argv)
+
+    all_errors: list[str] = []
+    checked = 0
+    for table, (metrics, rel, floor) in sorted(GATED_TABLES.items()):
+        baseline = _load(args.baseline, table)
+        fresh = _load(args.fresh, table)
+        if baseline is None:
+            print(f"[gate] {table}: no committed baseline — SKIP "
+                  f"(commit one under {args.baseline}/)")
+            continue
+        if fresh is None:
+            all_errors.append(f"{table}: baseline exists but the quick lane "
+                              f"produced no {table}.json in {args.fresh}")
+            continue
+        errs = compare_table(table, baseline, fresh, metrics,
+                             rel * args.tol_scale, floor * args.tol_scale)
+        checked += 1
+        status = "OK" if not errs else f"{len(errs)} violations"
+        print(f"[gate] {table}: {len(fresh)} rows, "
+              f"{len(metrics)} metrics — {status}")
+        all_errors.extend(errs)
+
+    if all_errors:
+        print(f"\nREGRESSION GATE FAILED ({len(all_errors)} violations):",
+              file=sys.stderr)
+        for e in all_errors[:40]:
+            print("  " + e, file=sys.stderr)
+        if len(all_errors) > 40:
+            print(f"  ... and {len(all_errors) - 40} more", file=sys.stderr)
+        print("\nIf the change is intentional, regenerate the committed "
+              "baselines (see module docstring).", file=sys.stderr)
+        return 1
+    print(f"\nregression gate: {checked} tables within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,8 +7,12 @@
 4. Run a real (reduced-model) prefill with prefix reuse through the
    serving engine.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--requests 3000]
+
+(--requests scales the trace; CI's smoke lane uses a few hundred.)
 """
+import argparse
+
 import numpy as np
 
 from repro.configs.base import get_config
@@ -17,11 +21,16 @@ from repro.core import (CachePool, ClusterSpec, MooncakeCluster, TraceSpec,
                         trace_stats)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=3000,
+                    help="trace size for the simulator sections")
+    args = ap.parse_args(argv)
+
     # --- 1. the trace (§4) -------------------------------------------------
     print("=" * 70)
     print("1. Mooncake-format trace with the paper's workload statistics")
-    trace = generate_trace(TraceSpec(n_requests=3000, seed=0))
+    trace = generate_trace(TraceSpec(n_requests=args.requests, seed=0))
     stats = trace_stats(trace)
     print(f"   {stats['n']} requests | avg input {stats['avg_input']:.0f} "
           f"tok (paper: 7,590) | avg output {stats['avg_output']:.0f} "

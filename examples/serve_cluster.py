@@ -11,6 +11,7 @@ chains — so the engine's measured prefix reuse equals the trace's.
     PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
 """
 import argparse
+import os
 import time
 
 import jax
@@ -37,6 +38,14 @@ def main():
     ap.add_argument("--ssd-blocks", type=int, default=0,
                     help="per-instance SSD tier capacity (blocks); "
                          "0 = flat DRAM pool (seed behaviour)")
+    ap.add_argument("--ssd-dir", default=None,
+                    help="base directory for the file-backed SSD store "
+                         "(one subdir per prefill instance); omit to keep "
+                         "demoted bytes in host arrays")
+    ap.add_argument("--ssd-mode", default="overlap",
+                    choices=("blocking", "overlap"),
+                    help="SSD prefix loads: synchronous, or overlapped "
+                         "with head-chunk recompute (§5.2)")
     ap.add_argument("--strategy", default="kvcache",
                     choices=list_policies("prefill"),
                     help="prefill routing policy (from the registry)")
@@ -47,10 +56,15 @@ def main():
 
     # ---- build the disaggregated cluster ----
     n_p, n_d = 2, 2
+    # --ssd-dir without --ssd-blocks raises in HostKVPool (a store nothing
+    # can reach is a config error, not a silent flat pool)
     pools = [HostKVPool(capacity_blocks=args.dram_blocks,
-                        ssd_capacity_blocks=args.ssd_blocks)
-             for _ in range(n_p)]
-    pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256)
+                        ssd_capacity_blocks=args.ssd_blocks,
+                        ssd_dir=(os.path.join(args.ssd_dir, f"p{i}")
+                                 if args.ssd_dir else None))
+             for i in range(n_p)]
+    pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256,
+                         ssd_mode=args.ssd_mode)
            for i in range(n_p)]
     dws = [DecodeWorker(params, cfg, max_batch=4, max_len=2048)
            for _ in range(n_d)]
@@ -141,6 +155,18 @@ def main():
                   f"hits(dram/ssd)={s['dram_hits']}/{s['ssd_hits']} "
                   f"demote={s['demotions']} promote={s['promotions']} "
                   f"writebacks={s['n_writebacks']}")
+            if pool.store is not None:
+                st = pool.store.stats()
+                print(
+                    f"   store: {st['blocks']} on disk "
+                    f"({st['file_bytes'] >> 10} KiB), wrote "
+                    f"{st['blocks_written']} blk / {st['n_flushes']} flushes, "
+                    f"read {st['layer_reads']} layers, "
+                    f"{st['read_failures']} failures; engine overlapped "
+                    f"{pws[i].stats['overlapped_requests']} prefills "
+                    f"({pws[i].stats['ssd_loaded_blocks']} blocks prefetched)")
+    for pool in pools:
+        pool.close()
 
 
 if __name__ == "__main__":

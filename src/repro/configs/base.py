@@ -32,12 +32,18 @@ class CacheTierSpec:
     ``ssd_blocks = 0`` disables the SSD tier (flat DRAM pool — the seed
     behaviour); ``None`` capacities mean unbounded. Consumed by
     ``MooncakeCluster``, ``HostKVPool`` and the serving examples.
+
+    ``ssd_dir`` makes the serving engine's SSD tier REAL: ``HostKVPool``
+    backs it with a checksummed file store (``serving/ssd_store.py``) in
+    that directory and prefetches demoted blocks asynchronously. Metadata
+    pools (simulator) ignore it.
     """
     dram_blocks: Optional[int] = 20_000
     ssd_blocks: Optional[int] = 0
     dram_policy: str = "lru"
     ssd_policy: str = "lru"
     writeback_batch: int = 8   # demotions per batched SSD write
+    ssd_dir: Optional[str] = None   # file-backed store location (engine)
 
     @property
     def tiered(self) -> bool:

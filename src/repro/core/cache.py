@@ -178,6 +178,25 @@ class CachePool:
             self.misses += len(hash_ids) - n
         return n
 
+    def touch_keys(self, hash_ids: Iterable[int],
+                   count_read: bool = True) -> int:
+        """Hit-account an arbitrary set of resident keys (no prefix walk);
+        the tiered subclass overrides this to also promote SSD keys."""
+        n = 0
+        for h in hash_ids:
+            meta = self.blocks.get(h)
+            if meta is None:
+                continue
+            meta.hits += 1
+            self.policy.on_hit(h, meta)
+            self.hits += 1
+            n += 1
+        return n
+
+    def discard(self, key: int) -> bool:
+        """Drop one block outright (no eviction accounting)."""
+        return self.remove(key) is not None
+
     def _make_room(self) -> tuple[list[int], bool]:
         """Evict unpinned victims until one slot is free; returns
         (evicted keys, whether a slot is available)."""

@@ -23,4 +23,4 @@ from repro.core.policies.routing import (CacheAwareRouting, KVCacheRouting,
                                          recompute_arm, ssd_load_arm)
 from repro.core.policies.load_aware import LoadAwareRouting
 from repro.core.policies.why_not_both import WhyNotBothRouting
-from repro.core.policies.decode import MinTBTDecode
+from repro.core.policies.decode import KVPressureDecode, MinTBTDecode

@@ -1,7 +1,20 @@
-"""Built-in decode-placement policy.
+"""Built-in decode-placement policies.
 
 ``min_tbt`` is the paper's SelectDecodingInstance: among instances with
 VRAM headroom, the one whose predicted TBT after joining is lowest.
+
+``kv_pressure`` additionally penalises placement by per-node KVCache
+occupancy — and, crucially, its occupancy term ALWAYS counts pending
+(accepted-but-still-prefilling) commitments, independent of the
+``accounting`` knob. The knob reproduces the §7.2 time-lag ablation in
+the TBT *estimate*; occupancy is about future VRAM pressure, where a
+committed request consumes bytes whether or not it has started decoding.
+Under naive ("current") accounting min_tbt piles concurrent arrivals
+onto the momentarily-emptiest node; kv_pressure's lag-free pressure term
+spreads them, so fewer later arrivals bounce off the ``vram_ok`` gate in
+KV-heavy regimes. The returned TBT stays the honest ``predicted_tbt``
+(SLO checks see latency, not the shaped score), mirroring the
+Arm.score / Arm.ttft split.
 
 ``include_pending`` is the Conductor's ``accounting`` knob (§7.2): the
 naive baseline pre-selects on the CURRENT decode state only — accepted
@@ -25,4 +38,34 @@ class MinTBTDecode:
             return None, float("inf")
         d = min(ok, key=lambda d: d.predicted_tbt(
             1, tokens, include_pending=include_pending))
+        return d, d.predicted_tbt(1, tokens, include_pending=include_pending)
+
+
+@register_policy("decode", "kv_pressure")
+class KVPressureDecode:
+    """min_tbt shaped by per-node KV occupancy (see module docstring)."""
+
+    alpha = 4.0     # quadratic penalty weight: mild until ~50% occupancy
+
+    def __init__(self, ctx: PolicyContext) -> None:
+        self.ctx = ctx
+
+    def _occupancy(self, d, tokens: float) -> float:
+        # pending commitments always count: bytes are promised to the node
+        # regardless of the §7.2 accounting knob (see module docstring)
+        held = d.kv_tokens + tokens + d.pending_tokens
+        return held / max(d.cost.decode_capacity_tokens(), 1.0)
+
+    def select(self, req, instances, now, include_pending: bool = True):
+        tokens = req.input_length + req.output_length
+        ok = [d for d in instances if d.vram_ok(tokens, include_pending)]
+        if not ok:
+            return None, float("inf")
+
+        def score(d) -> float:
+            tbt = d.predicted_tbt(1, tokens, include_pending=include_pending)
+            occ = self._occupancy(d, tokens)
+            return tbt * (1.0 + self.alpha * occ * occ) + 1e-9 * occ
+
+        d = min(ok, key=score)
         return d, d.predicted_tbt(1, tokens, include_pending=include_pending)

@@ -25,6 +25,14 @@ Write-back batching: demotions are staged and accounted as one SSD write
 per ``writeback_batch`` blocks (sequential batched writes are how real
 tiers avoid write-amplification); ``flush_writeback()`` forces a partial
 batch out, e.g. at checkpoint boundaries.
+
+Tier-event hooks: a byte-holder (``HostKVPool`` with a file-backed
+``SSDBlockStore``) mirrors metadata moves by setting ``on_demote(key)``
+/ ``on_promote(key, count_read)`` / ``on_drop(key)``. They fire exactly
+when a block changes tier or leaves the hierarchy, with ``on_demote``
+guaranteed to run while the caller still holds the DRAM bytes — so the
+hook can stage the write-back — and ``on_drop`` when the bytes may be
+freed. All default to ``None`` (the simulator's metadata-only use).
 """
 from __future__ import annotations
 
@@ -78,6 +86,10 @@ class TieredCachePool(CachePool):
         self.n_writebacks = 0       # batched SSD write operations issued
         self._wb_pending = 0        # demoted blocks awaiting a batch flush
         self._dropped: list[int] = []   # keys that left the hierarchy
+        # tier-event hooks (see module docstring); None = metadata-only
+        self.on_demote = None       # fn(key) — DRAM bytes still readable
+        self.on_promote = None      # fn(key, count_read)
+        self.on_drop = None         # fn(key) — bytes may be freed
 
     # ---- residency ----------------------------------------------------
     def __contains__(self, key: int) -> bool:
@@ -108,6 +120,13 @@ class TieredCachePool(CachePool):
         return TierPrefix(total, dram, ssd)
 
     # ---- demotion / promotion -----------------------------------------
+    def _drop(self, keys: Iterable[int]) -> None:
+        """Blocks leaving the hierarchy: record + notify the byte-holder."""
+        for k in keys:
+            self._dropped.append(k)
+            if self.on_drop is not None:
+                self.on_drop(k)
+
     def _evict(self, key: int) -> None:
         """DRAM eviction = demotion (metadata moves; SSD does the drop)."""
         meta = self.blocks.pop(key, None)
@@ -116,15 +135,17 @@ class TieredCachePool(CachePool):
         if meta is None:
             return
         if self.ssd.capacity == 0:
-            self._dropped.append(key)
+            self._drop([key])
             return  # no SSD tier configured — behave like the flat pool
         ssd_evicted, placed = self.ssd.insert_meta(meta)
-        self._dropped.extend(ssd_evicted)   # end of the hierarchy
+        self._drop(ssd_evicted)             # end of the hierarchy
         if placed:
             self.demotions += 1
             self._account_ssd_write()
+            if self.on_demote is not None:
+                self.on_demote(key)
         else:
-            self._dropped.append(key)       # SSD full of pinned blocks
+            self._drop([key])               # SSD full of pinned blocks
 
     def _account_ssd_write(self) -> None:
         """Every block written to SSD joins the current write-back batch."""
@@ -158,10 +179,12 @@ class TieredCachePool(CachePool):
         _, placed = self.insert_meta(meta)
         if placed:
             self.promotions += 1
+            if self.on_promote is not None:
+                self.on_promote(key, count_read)
             return True
         # DRAM entirely pinned: put the block back where it was
         ssd_evicted, _ = self.ssd.insert_meta(meta)
-        self._dropped.extend(ssd_evicted)
+        self._drop(ssd_evicted)
         return False
 
     # ---- CachePool interface ------------------------------------------
@@ -208,7 +231,7 @@ class TieredCachePool(CachePool):
                                  size_bytes=self.block_bytes)
                 if self.ssd.capacity != 0:
                     ssd_evicted, placed = self.ssd.insert_meta(meta)
-                    self._dropped.extend(ssd_evicted)
+                    self._drop(ssd_evicted)
                     if placed:
                         self._account_ssd_write()
                         continue
@@ -219,6 +242,43 @@ class TieredCachePool(CachePool):
             self.policy.on_insert(h, meta)
         dropped, self._dropped = self._dropped, []
         return dropped
+
+    def touch_keys(self, hash_ids: Iterable[int],
+                   count_read: bool = True) -> int:
+        """Hit-account an arbitrary VERIFIED set of resident keys (no
+        prefix semantics): DRAM keys are touched, SSD keys promoted.
+        Unlike ``lookup`` this never walks past the given keys, so the
+        serving engine can commit a loaded tail segment without touching
+        the head blocks it chose to recompute instead. Returns the number
+        of keys found resident."""
+        n = 0
+        for h in hash_ids:
+            if h in self.blocks:
+                meta = self.blocks[h]
+                meta.hits += 1
+                self.policy.on_hit(h, meta)
+                self.dram_hits += 1
+            elif h in self.ssd.blocks:
+                self.ssd.blocks[h].hits += 1
+                self._promote(h, count_read=count_read)
+                self.ssd_hits += 1
+            else:
+                continue
+            n += 1
+            self.hits += 1
+        return n
+
+    def discard(self, key: int) -> bool:
+        """Drop a block from whichever tier holds it (e.g. a block whose
+        on-disk bytes failed their checksum — the metadata must never
+        claim residency the store can't honour)."""
+        meta = self.remove(key)
+        if meta is None:
+            meta = self.ssd.remove(key)
+        if meta is None:
+            return False
+        self._drop([key])
+        return True
 
     def pin(self, hash_ids: Iterable[int]) -> None:
         for h in hash_ids:

@@ -24,6 +24,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pool-blocks", type=int, default=4096)
+    ap.add_argument("--ssd-blocks", type=int, default=0,
+                    help="SSD-tier capacity in blocks (0 = flat DRAM pool)")
+    ap.add_argument("--ssd-dir", default=None,
+                    help="directory for the file-backed SSD block store; "
+                         "with --ssd-blocks, demoted KV really hits disk")
+    ap.add_argument("--ssd-mode", default="overlap",
+                    choices=("blocking", "overlap"),
+                    help="how SSD-resident prefixes load: synchronously, or "
+                         "overlapped with head-chunk recompute (§5.2)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,8 +47,11 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    pool = HostKVPool(capacity_blocks=args.pool_blocks)
-    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256)
+    pool = HostKVPool(capacity_blocks=args.pool_blocks,
+                      ssd_capacity_blocks=args.ssd_blocks,
+                      ssd_dir=args.ssd_dir)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
+                       ssd_mode=args.ssd_mode)
 
     if args.trace:
         reqs = load_trace(args.trace, limit=args.requests)
@@ -82,6 +94,14 @@ def main(argv=None) -> int:
           f"pool: {pool.n_blocks} blocks resident, "
           f"prefix reuse {st['reused_blocks']} blocks "
           f"({512 * st['reused_blocks']} tokens skipped)")
+    if pool.store is not None:
+        s = pool.store.stats()
+        print(f"ssd store: {s['blocks']} blocks on disk "
+              f"({s['file_bytes'] >> 10} KiB), {s['n_flushes']} write-back "
+              f"flushes, {s['layer_reads']} layer reads, "
+              f"{s['read_failures']} read failures; overlapped "
+              f"{st['overlapped_requests']} prefills")
+    pool.close()
     return 0
 
 

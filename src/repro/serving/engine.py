@@ -13,6 +13,7 @@ pool) is what examples/serve_cluster.py drives with a Conductor in front.
 from __future__ import annotations
 
 import hashlib
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -40,34 +41,186 @@ def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
     return out
 
 
-class HostKVPool:
-    """CPU-DRAM KVCache pool: prefix-hash → per-layer KV block bytes.
-    Metadata/eviction delegated to ``CachePool``; evicted keys drop their
-    bytes. Models Figure 3's 'KVCache pool in CPU memory'.
+@dataclass
+class FetchPlan:
+    """Side-effect-free snapshot of a hash chain's residency: which prefix
+    blocks are resident and in which tier. The engine plans the §5.2
+    load-vs-compute split off this, then commits via ``finish_fetch``."""
+    hash_ids: list[int]
+    tiers: list[str]                # per resident prefix block: dram | ssd
 
-    With ``ssd_capacity_blocks`` a second (SSD) tier is added: DRAM
-    evictions demote to it instead of dropping, and only blocks evicted
-    from the *whole hierarchy* lose their bytes — so long-context cold
-    prefixes stay loadable (here both tiers are host arrays; the tier
-    split is the metadata/cost model's concern)."""
+    @property
+    def n_resident(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def has_ssd(self) -> bool:
+        return "ssd" in self.tiers
+
+    def truncate(self, n: int) -> "FetchPlan":
+        return FetchPlan(self.hash_ids, self.tiers[:n])
+
+
+class HostKVPool:
+    """Two-tier CPU KVCache pool: prefix-hash → per-layer KV block bytes.
+
+    Metadata/eviction delegated to ``CachePool``/``TieredCachePool``
+    (``core/tiered.py`` — same demote-on-evict / promote-on-hit semantics
+    the simulator prices). Models Figure 3's 'KVCache pool in CPU memory'
+    plus the paper's SSD rung:
+
+    * ``ssd_capacity_blocks`` alone keeps demoted bytes in host arrays
+      (the pre-SSD-store behaviour — the tier split is the metadata/cost
+      model's concern only);
+    * with ``ssd_dir`` the SSD tier is REAL: demotions batch-write to a
+      checksummed ``SSDBlockStore`` file, promotions read them back, and
+      ``start_prefetch``/``finish_fetch`` expose the async layer-wise load
+      path the ``PrefillWorker`` overlaps with head recompute (§5.2).
+      A block whose on-disk bytes fail verification is discarded from the
+      hierarchy and silently becomes a miss — never wrong bytes.
+    """
 
     def __init__(self, capacity_blocks: Optional[int] = None,
                  policy: str = "lru", ssd_capacity_blocks: int = 0,
-                 ssd_policy: str = "lru", writeback_batch: int = 8) -> None:
+                 ssd_policy: str = "lru", writeback_batch: int = 8,
+                 ssd_dir: Optional[str] = None,
+                 ssd_read_bw: Optional[float] = None,
+                 ssd_write_bw: Optional[float] = None,
+                 spec=None) -> None:
         from repro.configs.base import CacheTierSpec
-        self.meta: CachePool = CacheTierSpec(
-            dram_blocks=capacity_blocks, ssd_blocks=ssd_capacity_blocks,
-            dram_policy=policy, ssd_policy=ssd_policy,
-            writeback_batch=writeback_batch).make_pool()
+        if spec is None:
+            spec = CacheTierSpec(
+                dram_blocks=capacity_blocks, ssd_blocks=ssd_capacity_blocks,
+                dram_policy=policy, ssd_policy=ssd_policy,
+                writeback_batch=writeback_batch, ssd_dir=ssd_dir)
+        self.spec = spec
+        self.meta: CachePool = spec.make_pool()
         self.data: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self.store = None
+        self.prefetcher = None
+        self._inflight: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        if spec.ssd_dir is not None and not spec.tiered:
+            raise ValueError(
+                "ssd_dir given but the SSD tier is disabled (ssd_blocks=0) "
+                "— nothing would ever reach the file-backed store; set "
+                "ssd_capacity_blocks/CacheTierSpec.ssd_blocks > 0")
+        if spec.tiered and spec.ssd_dir is not None:
+            from repro.core.cache import BlockMeta
+            from repro.serving.ssd_store import AsyncPrefetcher, SSDBlockStore
+            self.store = SSDBlockStore(
+                spec.ssd_dir, writeback_batch=spec.writeback_batch,
+                read_bw=ssd_read_bw, write_bw=ssd_write_bw)
+            self.prefetcher = AsyncPrefetcher(self.store)
+            self.meta.on_demote = self._on_demote
+            self.meta.on_promote = self._on_promote
+            self.meta.on_drop = self._on_drop
+            # restart recovery: blocks a previous run flushed re-enter the
+            # SSD tier's metadata (chain hashes are stable across runs, so
+            # matching prefixes become hits again; depth is unknown → 0)
+            for key in self.store.keys():
+                ssd_evicted, placed = self.meta.ssd.insert_meta(
+                    BlockMeta(key=key))
+                for e in ssd_evicted:
+                    self.store.delete(e)
+                if not placed:
+                    self.store.delete(key)
+
+    # ---- tier-event hooks (file-backed mode only) ----------------------
+    def _on_demote(self, key: int) -> None:
+        kv = self.data.pop(key, None)
+        if kv is not None:
+            self.store.put(key, *kv)    # staged; flushed per writeback batch
+
+    def _on_promote(self, key: int, count_read: bool) -> None:
+        if count_read:
+            kv = self._inflight.pop(key, None)
+            if kv is None:              # promotion outside a verified fetch
+                kv = self.store.read_block(key)
+            if kv is not None:
+                self.data[key] = kv
+            # unreadable bytes leave no DRAM copy; the next verified fetch
+            # sees the hole and discards the block's metadata
+        self.store.delete(key)
+
+    def _on_drop(self, key: int) -> None:
+        self.data.pop(key, None)
+        if self.store is not None:
+            self.store.delete(key)
+
+    # ---- fetch protocol ------------------------------------------------
+    def plan_fetch(self, hash_ids: list[int]) -> FetchPlan:
+        """Residency snapshot of the chain's prefix (no side effects)."""
+        rt = getattr(self.meta, "resident_tier", None)
+        tiers: list[str] = []
+        for h in hash_ids:
+            t = rt(h) if rt is not None \
+                else ("dram" if h in self.meta else None)
+            if t is None:
+                break
+            tiers.append(t)
+        return FetchPlan(list(hash_ids), tiers)
+
+    def start_prefetch(self, plan: FetchPlan, from_block: int = 0):
+        """Enqueue async layer-wise loads of the plan's SSD blocks at
+        index ≥ ``from_block``; returns a PrefetchHandle (or None)."""
+        if self.prefetcher is None:
+            return None
+        keys = [h for h, t in zip(plan.hash_ids[from_block:plan.n_resident],
+                                  plan.tiers[from_block:]) if t == "ssd"]
+        return self.prefetcher.fetch(keys) if keys else None
+
+    def finish_fetch(self, plan: FetchPlan, handle=None,
+                     from_block: int = 0) -> int:
+        """Verify + install bytes for plan blocks [from_block:], promote
+        their metadata, and return how many CONSECUTIVE blocks from
+        ``from_block`` are usable. A block that fails verification is
+        discarded from the hierarchy and truncates the usable run — the
+        caller recomputes from there (crash safety: stale/torn SSD state
+        degrades to recompute, never to wrong KV)."""
+        if handle is not None:
+            handle.wait()               # §5.2 wait-before-attend barrier
+        n_ok = 0
+        for i in range(from_block, plan.n_resident):
+            h, tier = plan.hash_ids[i], plan.tiers[i]
+            if tier == "dram":
+                if h in self.data or self.store is None:
+                    n_ok += 1
+                    continue
+                self.meta.discard(h)    # metadata claimed bytes we lost
+                break
+            kv = handle.result(h) if handle is not None else None
+            if kv is None and self.store is not None:
+                kv = self.store.read_block(h)
+            if kv is None:
+                self.meta.discard(h)
+                break
+            self._inflight[h] = kv
+            n_ok += 1
+        seg = plan.hash_ids[from_block:from_block + n_ok]
+        if seg:
+            self.meta.touch_keys(seg)   # promotions consume _inflight
+        self._inflight.clear()
+        return n_ok
 
     def match_prefix(self, hash_ids: list[int]) -> int:
-        return self.meta.lookup(hash_ids)
+        if self.store is None:
+            return self.meta.lookup(hash_ids)
+        n = self.finish_fetch(self.plan_fetch(hash_ids))
+        self.meta.misses += len(hash_ids) - n
+        return n
 
+    # ---- bytes ---------------------------------------------------------
     def get(self, hash_ids: list[int]):
         """Stack blocks → (L, n*512, KV, Dh) k and v."""
-        ks = [self.data[h][0] for h in hash_ids]
-        vs = [self.data[h][1] for h in hash_ids]
+        ks, vs = [], []
+        for h in hash_ids:
+            kv = self.data.get(h)
+            if kv is None and self.store is not None:
+                kv = self.store.read_block(h)
+            if kv is None:
+                raise KeyError(f"block {h} has no readable bytes")
+            ks.append(kv[0])
+            vs.append(kv[1])
         return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
 
     def put(self, hash_ids: list[int], k: np.ndarray, v: np.ndarray,
@@ -75,16 +228,35 @@ class HostKVPool:
         """k/v: (L, n*512, KV, Dh) covering ``hash_ids`` in order."""
         evicted = self.meta.insert(hash_ids, start_pos=start_pos)
         for e in evicted:
-            self.data.pop(e, None)
+            self.data.pop(e, None)      # file-backed: on_drop already freed
+        rt = getattr(self.meta, "resident_tier", None) \
+            if self.store is not None else None
         for i, h in enumerate(hash_ids):
-            if h in self.meta and h not in self.data:
-                sl = slice(i * BLOCK_TOKENS, (i + 1) * BLOCK_TOKENS)
-                self.data[h] = (np.ascontiguousarray(k[:, sl]),
-                                np.ascontiguousarray(v[:, sl]))
+            if h not in self.meta or h in self.data:
+                continue
+            sl = slice(i * BLOCK_TOKENS, (i + 1) * BLOCK_TOKENS)
+            blk = (np.ascontiguousarray(k[:, sl]),
+                   np.ascontiguousarray(v[:, sl]))
+            if rt is not None and rt(h) == "ssd":
+                if h not in self.store:  # inserted straight to the SSD tier
+                    self.store.put(h, *blk)
+            else:
+                self.data[h] = blk
+
+    def est_block_read_s(self) -> float:
+        """Expected SSD read seconds per block (for the split search)."""
+        return self.store.est_block_read_s() if self.store is not None \
+            else 0.0
 
     @property
     def n_blocks(self) -> int:
-        return len(self.data)
+        return len(self.data) + (len(self.store) if self.store else 0)
+
+    def close(self) -> None:
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+        if self.store is not None:
+            self.store.close()
 
 
 @dataclass
@@ -95,23 +267,47 @@ class PrefillResult:
     prompt_len: int
     reused_blocks: int
     new_blocks: int
+    ssd_blocks: int = 0         # prefix blocks loaded off the SSD store
+    overlapped: bool = False    # head recompute ∥ tail SSD load was used
 
 
 class PrefillWorker:
     """§3 steps 1–3: KVCache reuse → incremental (chunked) prefill →
-    layer-wise store-back. One request at a time (B = 1)."""
+    layer-wise store-back. One request at a time (B = 1).
+
+    With a file-backed pool, ``ssd_mode`` picks how SSD-resident prefix
+    blocks reach the accelerator: ``"blocking"`` loads them synchronously
+    before any compute (the naive schedule); ``"overlap"`` — the
+    executable ``why_not_both`` — splits the prefix per
+    ``layerwise.overlap_split``, RECOMPUTING the head chunks while the
+    tail streams from SSD layer-by-layer, and only then computes the
+    uncached suffix. Verification failures shrink the loaded tail and the
+    lost blocks are recomputed — wrong tokens are impossible.
+    """
 
     def __init__(self, params, cfg: ModelConfig, pool: HostKVPool, *,
-                 prefill_chunk: int = 1024) -> None:
+                 prefill_chunk: int = 1024, ssd_mode: str = "overlap") -> None:
+        assert ssd_mode in ("blocking", "overlap"), ssd_mode
         self.params = params
         self.cfg = cfg
         self.pool = pool
         self.chunk = prefill_chunk
+        self.ssd_mode = ssd_mode
         self._prefill = jax.jit(
             lambda p, t, off: prefill(p, t, cfg, q_offset=off))
         self._extend = jax.jit(
             lambda p, t, c: decode_step(p, t, c, cfg))
-        self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0)
+        self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0,
+                          ssd_loaded_blocks=0, overlapped_requests=0,
+                          fallback_blocks=0)
+        self._t_block_ema: Optional[float] = None  # measured s / 512-tok blk
+
+    def _note_compute(self, tokens: int, dt: float) -> None:
+        if tokens <= 0 or dt <= 0:
+            return
+        per_block = dt * BLOCK_TOKENS / tokens
+        self._t_block_ema = per_block if self._t_block_ema is None \
+            else 0.7 * self._t_block_ema + 0.3 * per_block
 
     def __call__(self, tokens: np.ndarray) -> PrefillResult:
         cfg = self.cfg
@@ -119,6 +315,18 @@ class PrefillWorker:
             "PrefillWorker KV path supports uniform attention stacks"
         S = len(tokens)
         hash_ids = prefix_hash_ids(tokens)
+
+        if self.ssd_mode == "overlap" and self.pool.prefetcher is not None:
+            plan = self.pool.plan_fetch(hash_ids)
+            n_res = plan.n_resident
+            if n_res * BLOCK_TOKENS >= S:    # full hit: keep a tail to
+                n_res = max((S - 1) // BLOCK_TOKENS, 0)  # recompute logits
+            plan = plan.truncate(n_res)
+            if plan.has_ssd:
+                return self._prefill_overlapped(tokens, hash_ids, plan)
+
+        # blocking path: flat pool, legacy tiered pool, or synchronous
+        # file-backed loads (ssd_mode="blocking")
         n_hit = self.pool.match_prefix(hash_ids)
         prefix_tokens = n_hit * BLOCK_TOKENS
         if prefix_tokens >= S:           # full hit: recompute last block's
@@ -128,6 +336,7 @@ class PrefillWorker:
         t = jnp.asarray(tokens[None, :], jnp.int32)
         max_len = S
         caches = init_caches(cfg, 1, max_len)
+        t0 = time.monotonic()
         if n_hit:
             k_np, v_np = self.pool.get(hash_ids[:n_hit])
             kv = KVCache(
@@ -135,6 +344,7 @@ class PrefillWorker:
                 v=caches.kv.v.at[:, 0, :prefix_tokens].set(jnp.asarray(v_np)))
             caches = caches._replace(kv=kv,
                                      length=jnp.asarray(prefix_tokens, jnp.int32))
+            t0 = time.monotonic()        # exclude the (possibly SSD) load
             # chunked incremental prefill over the uncached suffix
             logits = None
             for lo in range(prefix_tokens, S, self.chunk):
@@ -149,6 +359,7 @@ class PrefillWorker:
             first = int(jnp.argmax(logits[0]))
             k_full = np.asarray(pc.kv.k[:, 0])
             v_full = np.asarray(pc.kv.v[:, 0])
+        self._note_compute(S - prefix_tokens, time.monotonic() - t0)
 
         # layer-wise store-back of every fresh full block (§5.2: on TPU the
         # per-layer store launches as soon as that layer's KV exists; here
@@ -165,6 +376,98 @@ class PrefillWorker:
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=n_hit,
                              new_blocks=n_total - n_hit)
+
+    def _prefill_overlapped(self, tokens: np.ndarray, hash_ids: list[int],
+                            plan: FetchPlan) -> PrefillResult:
+        """Head recompute ∥ tail SSD load (§5.2 / Jin et al., executable).
+
+        Timeline: pick split s via ``overlap_split``; blocks [0, d0) come
+        from DRAM free; launch async layer-wise loads of blocks [s, n);
+        recompute chunks over [d0·B, s·B) while they stream; barrier; set
+        the loaded tail into the cache arena; compute the uncached suffix.
+        """
+        from repro.serving.layerwise import overlap_split
+        B = BLOCK_TOKENS
+        cfg = self.cfg
+        S = len(tokens)
+        n = plan.n_resident
+        tl = self.pool.est_block_read_s()
+        tc = self._t_block_ema if self._t_block_ema is not None else tl
+        ov = overlap_split(plan.tiers, tc, tl)
+        s, d0 = ov.split, ov.dram_head
+        handle = self.pool.start_prefetch(plan, from_block=s)
+        if d0:
+            self.pool.meta.touch_keys(hash_ids[:d0])
+
+        t = jnp.asarray(tokens[None, :], jnp.int32)
+        caches = init_caches(cfg, 1, S)
+        caches = caches._replace(length=jnp.asarray(0, jnp.int32))
+        pos = 0
+        if d0:
+            k_np, v_np = self.pool.get(hash_ids[:d0])
+            kv = KVCache(
+                k=caches.kv.k.at[:, 0, :d0 * B].set(jnp.asarray(k_np)),
+                v=caches.kv.v.at[:, 0, :d0 * B].set(jnp.asarray(v_np)))
+            caches = caches._replace(kv=kv,
+                                     length=jnp.asarray(d0 * B, jnp.int32))
+            pos = d0 * B
+
+        # head recompute, overlapping the prefetch thread's layer loads
+        logits = None
+        t0 = time.monotonic()
+        for lo in range(pos, s * B, self.chunk):
+            hi = min(lo + self.chunk, s * B)
+            logits, caches = self._extend(self.params, t[:, lo:hi], caches)
+        if logits is not None:
+            jax.block_until_ready(logits)
+        dt_head = time.monotonic() - t0
+
+        # §5.2 barrier: verify + install the loaded tail
+        n_tail = self.pool.finish_fetch(plan, handle, from_block=s)
+        usable = s + n_tail
+        if n_tail:
+            k_np, v_np = self.pool.get(hash_ids[s:usable])
+            kv = caches.kv
+            kv = KVCache(
+                k=kv.k.at[:, 0, s * B:usable * B].set(jnp.asarray(k_np)),
+                v=kv.v.at[:, 0, s * B:usable * B].set(jnp.asarray(v_np)))
+            caches = caches._replace(kv=kv,
+                                     length=jnp.asarray(usable * B, jnp.int32))
+
+        # uncached suffix (+ any blocks lost to verification failures)
+        t1 = time.monotonic()
+        for lo in range(usable * B, S, self.chunk):
+            hi = min(lo + self.chunk, S)
+            logits, caches = self._extend(self.params, t[:, lo:hi], caches)
+        first = int(jnp.argmax(logits[0, -1]))
+        k_full = np.asarray(caches.kv.k[:, 0])
+        v_full = np.asarray(caches.kv.v[:, 0])
+        dt_suffix = time.monotonic() - t1
+        self._note_compute((s * B - pos) + (S - usable * B),
+                           dt_head + dt_suffix)
+
+        # store-back: the recomputed head span and the fresh suffix blocks
+        n_total = len(hash_ids)
+        if s > d0:
+            sl = slice(d0 * B, s * B)
+            self.pool.put(hash_ids[d0:s], k_full[:, sl], v_full[:, sl],
+                          start_pos=d0)
+        if n_total > usable:
+            sl = slice(usable * B, n_total * B)
+            self.pool.put(hash_ids[usable:n_total], k_full[:, sl],
+                          v_full[:, sl], start_pos=usable)
+
+        reused = d0 + n_tail
+        self.stats["reused_blocks"] += reused
+        self.stats["computed_tokens"] += S - reused * B
+        self.stats["requests"] += 1
+        self.stats["ssd_loaded_blocks"] += n_tail
+        self.stats["overlapped_requests"] += 1
+        self.stats["fallback_blocks"] += n - usable
+        return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
+                             prompt_len=S, reused_blocks=reused,
+                             new_blocks=len(hash_ids) - reused,
+                             ssd_blocks=n_tail, overlapped=True)
 
 
 @dataclass

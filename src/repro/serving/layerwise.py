@@ -97,6 +97,65 @@ def occupation_cost(cfg: ModelConfig, input_tokens: int, *,
     )
 
 
+@dataclass
+class ChunkOverlapPlan:
+    """Per-chunk load-vs-compute schedule for a tiered prefix (§5.2 grafted
+    onto Jin et al.'s split): recompute blocks [dram_head, split) on the
+    accelerator WHILE blocks [split, n) stream from SSD layer-by-layer,
+    then compute the uncached suffix once both land.
+
+    ``t_overlapped``/``t_blocking`` cover the prefix phase only (the suffix
+    cost is identical in both schedules and cancels out of the compare).
+    """
+    split: int                 # first block index loaded (not recomputed)
+    n_resident: int
+    dram_head: int
+    t_head: float              # recompute time of blocks [dram_head, split)
+    t_load: float              # load time of SSD blocks in [split, n)
+    t_blocking: float          # load ALL SSD blocks, no overlap
+    t_overlapped: float        # max(t_head, t_load)
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.t_blocking / self.t_overlapped \
+            if self.t_overlapped > 0 else 1.0
+
+
+def overlap_split(tiers: list[str], t_compute_block: float,
+                  t_load_block: float) -> ChunkOverlapPlan:
+    """Choose the head/tail split of a resident prefix.
+
+    ``tiers`` is the per-block residency ("dram"/"ssd") of the prefix
+    chain, as ``HostKVPool.plan_fetch`` reports it. Candidate split s lies
+    in [dram_head, n]: the engine recomputes blocks [dram_head, s)
+    wholesale (interleaved DRAM blocks inside the span are recomputed too
+    — chunked attention can't skip the middle of a sequence) and loads the
+    SSD blocks in [s, n). The pick minimises max(head recompute, tail
+    load); s = dram_head degenerates to the blocking all-load schedule and
+    s = n to pure recompute, so the chosen split is never predicted-slower
+    than either — the executable ``why_not_both``.
+    """
+    n = len(tiers)
+    d0 = 0
+    while d0 < n and tiers[d0] == "dram":
+        d0 += 1
+    ssd_after = [0] * (n + 1)       # SSD blocks in [s, n)
+    for s in range(n - 1, -1, -1):
+        ssd_after[s] = ssd_after[s + 1] + (tiers[s] == "ssd")
+    t_blocking = ssd_after[d0] * t_load_block
+    best = None
+    for s in range(d0, n + 1):
+        t_head = (s - d0) * t_compute_block
+        t_load = ssd_after[s] * t_load_block
+        t_ov = max(t_head, t_load)
+        if best is None or t_ov < best[0]:
+            best = (t_ov, s, t_head, t_load)
+    t_ov, s, t_head, t_load = best if best is not None else (0.0, d0, 0., 0.)
+    return ChunkOverlapPlan(split=s, n_resident=n, dram_head=d0,
+                            t_head=t_head, t_load=t_load,
+                            t_blocking=t_blocking, t_overlapped=t_ov)
+
+
 def verify_stream_order(cfg: ModelConfig, params, tokens) -> bool:
     """Structural check that per-layer KV is available layer-by-layer:
     the prefill scan's stacked KV equals per-layer recomputation, i.e. the

@@ -1,0 +1,462 @@
+"""File-backed SSD KVCache tier with async layer-wise prefetch (§5.2).
+
+``SSDBlockStore`` is the byte store behind ``HostKVPool``'s SSD tier: one
+data file of fixed-size slots, one 512-token block per slot, laid out
+layer-major so a block can be read back layer by layer — the on-disk
+mirror of the §5.2 load stream. Demotions are *staged* in memory and
+written as one sequential batch every ``writeback_batch`` blocks (the
+same batching ``TieredCachePool`` accounts for); a crash before the flush
+loses only staged blocks, which simply fall back to recompute.
+
+Every slot carries a header with a magic tag, the block key, and one
+CRC32 per layer, so reads are truncation- and corruption-safe: a torn
+write, a truncated file, or flipped payload bits make ``read_block`` /
+``read_layer`` return ``None`` — never wrong KV bytes. Callers treat a
+failed read as a cache miss and recompute (the engine also discards the
+block's metadata so the hierarchy stops claiming it).
+
+``AsyncPrefetcher`` is the §5.2 "launch the next layer's load" queue: a
+daemon thread that services (block, layer) reads in layer-major order —
+layer l of every requested block lands before layer l+1 — while the
+prefill worker recomputes the head chunks of the prefix on the
+accelerator. ``PrefetchHandle.wait()`` is the paper's wait-before-attend
+barrier. ``read_bw`` throttles reads to a target bandwidth so the
+load-vs-compute split stays meaningful on hosts whose page cache would
+otherwise hide the tier entirely (and so benchmarks can dial the
+SSD:compute ratio the paper's SATA/NVMe scenarios explore).
+"""
+from __future__ import annotations
+
+import json
+import mmap
+import os
+import queue
+import struct
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+_MAGIC = b"MKV1"
+_HDR_FIXED = struct.Struct("<4sQI")     # magic, block key, n_layers
+
+
+class SSDBlockStore:
+    """Slotted, checksummed, file-backed KV block store.
+
+    One block = the per-layer (k, v) arrays of 512 tokens, shape
+    ``(L, T, KV, Dh)`` each. The slot payload is layer-major:
+    ``k[0] v[0] k[1] v[1] ...`` so ``read_layer`` is one contiguous read.
+    Shapes/dtype are inferred from the first ``put`` and persisted to
+    ``meta.json`` next to the data file.
+    """
+
+    def __init__(self, directory: str, *, writeback_batch: int = 8,
+                 read_bw: Optional[float] = None,
+                 write_bw: Optional[float] = None,
+                 fsync: bool = False) -> None:
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.path = os.path.join(directory, "kvblocks.dat")
+        self.writeback_batch = max(int(writeback_batch), 1)
+        self.read_bw = read_bw
+        self.write_bw = write_bw
+        self.fsync = fsync
+        self._fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
+        self._lock = threading.RLock()
+        self._mm: Optional[mmap.mmap] = None
+        self._mm_size = 0
+        self._offsets: dict[int, int] = {}      # key -> slot offset (on disk)
+        self._free: list[int] = []              # reusable slot offsets
+        self._staged: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._shape: Optional[tuple] = None     # per-array (L, T, KV, Dh)
+        self._dtype: Optional[np.dtype] = None
+        # stats
+        self.blocks_written = 0
+        self.blocks_read = 0
+        self.layer_reads = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.n_flushes = 0                      # batched write operations
+        self.read_failures = 0                  # checksum / truncation
+        self._read_s_ema: Optional[float] = None  # seconds per block read
+        self._recover()
+
+    def _recover(self) -> None:
+        """Reopen an existing store: restore geometry from ``meta.json``
+        and re-index flushed slots by scanning their headers, so a crash
+        loses only the STAGED blocks (payload validity is still checked
+        per-read by the layer CRCs). Slots with torn headers become free
+        slots; an unreadable/absent meta.json means a fresh store."""
+        meta_path = os.path.join(self.dir, "meta.json")
+        size = os.fstat(self._fd).st_size
+        if size == 0 or not os.path.exists(meta_path):
+            return
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+            shape, dtype = tuple(meta["shape"]), np.dtype(meta["dtype"])
+        except (ValueError, KeyError, TypeError):
+            return                              # torn meta: treat as fresh
+        self._set_shape(np.empty(shape, dtype))
+        for off in range(0, size - self._slot_size + 1, self._slot_size):
+            raw = self._read_at(off, self._hdr_size)
+            if raw is None:
+                break
+            magic, key, L = _HDR_FIXED.unpack_from(raw)
+            if magic == _MAGIC and L == shape[0] and key not in self._offsets:
+                self._offsets[key] = off
+            else:
+                self._free.append(off)
+
+    # ---- geometry ------------------------------------------------------
+    def _set_shape(self, k: np.ndarray) -> None:
+        self._shape = tuple(k.shape)
+        self._dtype = k.dtype
+        self._layer_bytes = int(np.prod(self._shape[1:])) * k.dtype.itemsize
+        L = self._shape[0]
+        self._hdr_size = _HDR_FIXED.size + 4 * L    # + one CRC32 per layer
+        self._slot_size = self._hdr_size + 2 * L * self._layer_bytes
+        with open(os.path.join(self.dir, "meta.json"), "w") as f:
+            json.dump(dict(shape=list(self._shape), dtype=str(self._dtype),
+                           slot_size=self._slot_size), f)
+
+    @property
+    def n_layers(self) -> int:
+        return self._shape[0] if self._shape else 0
+
+    @property
+    def block_bytes(self) -> int:
+        """Payload bytes of one block (k + v, all layers)."""
+        return 2 * self.n_layers * self._layer_bytes if self._shape else 0
+
+    def est_block_read_s(self, default_bw: float = 500e6) -> float:
+        """Expected seconds to read one block: measured EMA when we have
+        one, else the throttle bandwidth, else a SATA-class default."""
+        if self._read_s_ema is not None:
+            return self._read_s_ema
+        if not self._shape:
+            return 0.0
+        bw = self.read_bw if self.read_bw else default_bw
+        return self.block_bytes / bw
+
+    # ---- residency -----------------------------------------------------
+    def __contains__(self, key: int) -> bool:
+        with self._lock:
+            return key in self._offsets or key in self._staged
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._offsets) + len(self._staged)
+
+    @property
+    def staged_blocks(self) -> int:
+        return len(self._staged)
+
+    def keys(self) -> list[int]:
+        """Keys with flushed on-disk slots (staged blocks excluded)."""
+        with self._lock:
+            return list(self._offsets)
+
+    # ---- write path ----------------------------------------------------
+    def put(self, key: int, k: np.ndarray, v: np.ndarray) -> None:
+        """Stage one block for write-back; flushes a full batch inline."""
+        with self._lock:
+            if self._shape is None:
+                self._set_shape(np.asarray(k))
+            self._staged[key] = (np.ascontiguousarray(k),
+                                 np.ascontiguousarray(v))
+            if len(self._staged) >= self.writeback_batch:
+                self._flush_locked()
+
+    def flush(self) -> int:
+        """Force the partial write-back batch out; returns blocks written."""
+        with self._lock:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> int:
+        if not self._staged:
+            return 0
+        staged, self._staged = self._staged, {}
+        total = 0
+        for key, (k, v) in staged.items():
+            off = self._alloc_slot()
+            buf = self._encode(key, k, v)
+            os.pwrite(self._fd, buf, off)
+            self._offsets[key] = off
+            self.blocks_written += 1
+            total += len(buf)
+        self.bytes_written += total
+        self.n_flushes += 1
+        if self.fsync:
+            os.fsync(self._fd)
+        if self.write_bw:
+            time.sleep(total / self.write_bw)
+        return len(staged)
+
+    def _alloc_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        end = (max(self._offsets.values()) + self._slot_size
+               if self._offsets else 0)
+        return end
+
+    def _encode(self, key: int, k: np.ndarray, v: np.ndarray) -> bytes:
+        L = self._shape[0]
+        parts, crcs = [], []
+        for l in range(L):
+            kb = np.ascontiguousarray(k[l]).tobytes()
+            vb = np.ascontiguousarray(v[l]).tobytes()
+            crcs.append(zlib.crc32(kb + vb) & 0xFFFFFFFF)
+            parts.append(kb)
+            parts.append(vb)
+        hdr = _HDR_FIXED.pack(_MAGIC, key & (2**64 - 1), L) \
+            + struct.pack(f"<{L}I", *crcs)
+        return hdr + b"".join(parts)
+
+    def delete(self, key: int) -> None:
+        with self._lock:
+            if self._staged.pop(key, None) is not None:
+                return
+            off = self._offsets.pop(key, None)
+            if off is not None:
+                self._free.append(off)
+
+    # ---- read path -----------------------------------------------------
+    def _read_at(self, off: int, n: int) -> Optional[bytes]:
+        """mmap fast path (remapped as the file grows); a request past EOF
+        is a truncated slot → None."""
+        end = off + n
+        if end > self._mm_size:
+            size = os.fstat(self._fd).st_size
+            if end > size:
+                return None
+            if self._mm is not None:
+                self._mm.close()
+            self._mm = mmap.mmap(self._fd, size, prot=mmap.PROT_READ)
+            self._mm_size = size
+        return self._mm[off:end]
+
+    def _slot_header(self, key: int) -> Optional[tuple[int, list[int]]]:
+        """Validated (slot offset, per-layer CRCs) of an on-disk block."""
+        off = self._offsets.get(key)
+        if off is None:
+            return None
+        raw = self._read_at(off, self._hdr_size)
+        if raw is None:
+            return None
+        magic, hkey, L = _HDR_FIXED.unpack_from(raw)
+        if magic != _MAGIC or hkey != key & (2**64 - 1) \
+                or L != self._shape[0]:
+            return None
+        crcs = list(struct.unpack_from(f"<{L}I", raw, _HDR_FIXED.size))
+        return off, crcs
+
+    def _decode_layer(self, raw: bytes) -> tuple[np.ndarray, np.ndarray]:
+        half = self._layer_bytes
+        shape = self._shape[1:]
+        k = np.frombuffer(raw[:half], dtype=self._dtype).reshape(shape)
+        v = np.frombuffer(raw[half:], dtype=self._dtype).reshape(shape)
+        return k, v
+
+    def read_layer(self, key: int, layer: int) \
+            -> Optional[tuple[np.ndarray, np.ndarray]]:
+        """One layer's (k, v) of one block — the §5.2 load-stream unit.
+        ``None`` on any integrity failure (missing, truncated, corrupt)."""
+        t0 = time.monotonic()
+        with self._lock:
+            st = self._staged.get(key)
+            if st is not None:
+                k, v = st
+                return np.asarray(k[layer]), np.asarray(v[layer])
+            hdr = self._slot_header(key)
+            if hdr is None:
+                if key in self._offsets:
+                    self.read_failures += 1
+                return None
+            off, crcs = hdr
+            pair = 2 * self._layer_bytes
+            raw = self._read_at(off + self._hdr_size + layer * pair, pair)
+            if raw is None or (zlib.crc32(raw) & 0xFFFFFFFF) != crcs[layer]:
+                self.read_failures += 1
+                return None
+            self.layer_reads += 1
+            self.bytes_read += pair
+        self._throttle(pair, t0)
+        return self._decode_layer(raw)
+
+    def read_block(self, key: int) \
+            -> Optional[tuple[np.ndarray, np.ndarray]]:
+        """Whole-block (k, v), layer-verified; ``None`` on any failure."""
+        L = self.n_layers
+        if L == 0 or key not in self:
+            return None
+        t0 = time.monotonic()
+        ks, vs = [], []
+        for l in range(L):
+            pair = self.read_layer(key, l)
+            if pair is None:
+                return None
+            ks.append(pair[0])
+            vs.append(pair[1])
+        self.blocks_read += 1
+        # feed the split-search EMA from BLOCKING reads only: here the wall
+        # time is genuinely the store's cost. Prefetch-thread layer reads
+        # deliberately don't count — their elapsed time includes the GIL /
+        # scheduling gaps of the compute they overlap, which would inflate
+        # the estimate and push the split toward pure recompute.
+        self.note_measured_read(time.monotonic() - t0)
+        return np.stack(ks), np.stack(vs)
+
+    def _throttle(self, nbytes: int, t0: float) -> None:
+        if self.read_bw:
+            remain = nbytes / self.read_bw - (time.monotonic() - t0)
+            if remain > 0:
+                time.sleep(remain)
+
+    def note_measured_read(self, seconds_per_block: float) -> None:
+        """Fold one measured block-read time into the split-search EMA."""
+        self._read_s_ema = seconds_per_block if self._read_s_ema is None \
+            else 0.7 * self._read_s_ema + 0.3 * seconds_per_block
+
+    # ---- reporting / lifecycle ----------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(blocks=len(self._offsets), staged=len(self._staged),
+                        blocks_written=self.blocks_written,
+                        blocks_read=self.blocks_read,
+                        layer_reads=self.layer_reads,
+                        bytes_written=self.bytes_written,
+                        bytes_read=self.bytes_read,
+                        n_flushes=self.n_flushes,
+                        read_failures=self.read_failures,
+                        file_bytes=os.fstat(self._fd).st_size)
+
+    def close(self) -> None:
+        with self._lock:
+            self._flush_locked()
+            if self._mm is not None:
+                self._mm.close()
+                self._mm = None
+            if self._fd >= 0:
+                os.close(self._fd)
+                self._fd = -1
+
+    def __del__(self):  # best-effort; explicit close() preferred
+        try:
+            if getattr(self, "_fd", -1) >= 0:
+                os.close(self._fd)
+                self._fd = -1
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# async layer-wise prefetch
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefetchHandle:
+    """In-flight layer-wise loads of one block set.
+
+    ``result(key)`` is the assembled (k, v) for a fully verified block,
+    ``None`` while loading or after any layer of it failed; ``failed``
+    lists blocks that hit a checksum/truncation error. ``layer_log``
+    records (key, layer, t_done) in completion order — the §5.2 timeline
+    the benchmark plots against compute chunks.
+    """
+    keys: list[int]
+    _bufs: dict = field(default_factory=dict)      # key -> (k, v) buffers
+    _layers_done: dict = field(default_factory=dict)
+    failed: set = field(default_factory=set)
+    layer_log: list = field(default_factory=list)
+    _t0: float = field(default_factory=time.monotonic)
+    _remaining: int = 0
+    _done: threading.Event = field(default_factory=threading.Event)
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def _deliver(self, key: int, layer: int, pair, n_layers: int) -> None:
+        with self._lock:
+            if pair is None:
+                self.failed.add(key)
+                self._bufs.pop(key, None)
+            elif key not in self.failed:
+                if key not in self._bufs:
+                    k0 = pair[0]
+                    shape = (n_layers,) + k0.shape
+                    self._bufs[key] = (np.empty(shape, k0.dtype),
+                                       np.empty(shape, k0.dtype))
+                self._bufs[key][0][layer] = pair[0]
+                self._bufs[key][1][layer] = pair[1]
+                self._layers_done[key] = self._layers_done.get(key, 0) + 1
+            self.layer_log.append((key, layer,
+                                   time.monotonic() - self._t0))
+            self._remaining -= 1
+            if self._remaining <= 0:
+                self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """§5.2 wait-before-attend barrier for the whole fetch."""
+        return self._done.wait(timeout)
+
+    def result(self, key: int):
+        """(k, v) for a complete, verified block; else None."""
+        with self._lock:
+            if key in self.failed:
+                return None
+            bufs = self._bufs.get(key)
+            if bufs is None:
+                return None
+            n = self._layers_done.get(key, 0)
+            return bufs if n == bufs[0].shape[0] else None
+
+
+class AsyncPrefetcher:
+    """Daemon thread servicing layer-major block loads off the store.
+
+    ``fetch(keys)`` enqueues layer 0 of every block, then layer 1, … so
+    arrival order matches the §5.2 load stream; the caller overlaps its
+    head-chunk recompute and joins on ``PrefetchHandle.wait()``.
+    """
+
+    def __init__(self, store: SSDBlockStore) -> None:
+        self.store = store
+        self._q: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="kv-prefetch")
+        self._thread.start()
+
+    def fetch(self, keys: list[int]) -> PrefetchHandle:
+        h = PrefetchHandle(keys=list(keys))
+        L = self.store.n_layers
+        if L == 0 or not keys:
+            h._done.set()
+            return h
+        h._remaining = L * len(keys)
+        for layer in range(L):
+            for key in keys:
+                self._q.put((h, key, layer, L))
+        return h
+
+    def _run(self) -> None:
+        while True:
+            task = self._q.get()
+            if task is None:
+                return
+            h, key, layer, L = task
+            if key in h.failed:          # skip remaining layers of a bad blk
+                h._deliver(key, layer, None, L)
+                continue
+            try:
+                pair = self.store.read_layer(key, layer)
+            except Exception:            # never let the thread die mid-fetch
+                pair = None
+            h._deliver(key, layer, pair, L)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=2.0)
