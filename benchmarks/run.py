@@ -28,14 +28,15 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_cache_policy, bench_cpp, bench_e2e,
-                            bench_kernels, bench_layerwise, bench_overload,
-                            bench_policies, bench_scheduling,
-                            bench_ssd_store, bench_stage_model,
-                            bench_tiered_cache)
+                            bench_global_pool, bench_kernels,
+                            bench_layerwise, bench_overload, bench_policies,
+                            bench_scheduling, bench_ssd_store,
+                            bench_stage_model, bench_tiered_cache)
     benches = {
         "cache_policy": bench_cache_policy.main,     # Table 1
         "tiered_cache": bench_tiered_cache.main,     # DRAM+SSD hierarchy
         "ssd_store": bench_ssd_store.main,           # file-backed tier (§5.2)
+        "global_pool": bench_global_pool.main,       # cross-node peer handoff
         "stage_model": bench_stage_model.main,       # Figure 2
         "layerwise": bench_layerwise.main,           # Figure 7
         "scheduling": bench_scheduling.main,         # Figure 8

@@ -8,7 +8,14 @@ instance it joins. Requests come from a generated Mooncake-format trace
 and are realised to actual tokens whose block structure matches the hash
 chains — so the engine's measured prefix reuse equals the trace's.
 
+With ``--global-pool`` the two pools share one ``GlobalBlockDirectory``
+(the Figure-3 cluster-wide pool): a block demoted to one instance's SSD
+store is fetchable by the other, the Conductor prices the peer-SSD arm,
+and the stores' measured read EMAs feed back into the arm prices.
+
     PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
+    PYTHONPATH=src python examples/serve_cluster.py --ssd-blocks 64 \
+        --ssd-dir /tmp/kvssd --dram-blocks 8 --global-pool
 """
 import argparse
 import os
@@ -49,20 +56,36 @@ def main():
     ap.add_argument("--strategy", default="kvcache",
                     choices=list_policies("prefill"),
                     help="prefill routing policy (from the registry)")
+    ap.add_argument("--global-pool", action="store_true",
+                    help="share one GlobalBlockDirectory across the prefill "
+                         "instances' pools: blocks demoted on one node are "
+                         "peer-fetchable from the other, and the Conductor "
+                         "prices the peer-SSD arm (requires --ssd-blocks)")
     args = ap.parse_args()
+
+    if args.global_pool and not args.ssd_blocks:
+        ap.error("--global-pool needs an SSD tier (--ssd-blocks > 0)")
 
     cfg = get_config("smollm-360m").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     # ---- build the disaggregated cluster ----
     n_p, n_d = 2, 2
+    directory = None
+    if args.global_pool:
+        from repro.core.directory import GlobalBlockDirectory
+        directory = GlobalBlockDirectory()
     # --ssd-dir without --ssd-blocks raises in HostKVPool (a store nothing
     # can reach is a config error, not a silent flat pool)
     pools = [HostKVPool(capacity_blocks=args.dram_blocks,
                         ssd_capacity_blocks=args.ssd_blocks,
                         ssd_dir=(os.path.join(args.ssd_dir, f"p{i}")
-                                 if args.ssd_dir else None))
+                                 if args.ssd_dir else None),
+                        directory=directory, node_id=i)
              for i in range(n_p)]
+    if directory is not None:
+        from repro.serving.engine import connect_pools
+        connect_pools(pools)
     pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256,
                          ssd_mode=args.ssd_mode)
            for i in range(n_p)]
@@ -78,7 +101,7 @@ def main():
         for p in P:
             msg.add_ssd_channel(p.iid, InstanceSpec().hw.ssd_read_bw)
     conductor = Conductor(P, D, msg, ttft_slo=30.0, tbt_slo=0.1,
-                          strategy=args.strategy)
+                          strategy=args.strategy, directory=directory)
 
     # ---- workload: session-structured trace, scaled to smoke size ----
     trace = generate_trace(TraceSpec(
@@ -123,6 +146,18 @@ def main():
             pres = pws[pi](tokens)
             stats["reused"] += pres.reused_blocks
             stats["computed"] += pres.prompt_len - 512 * pres.reused_blocks
+            # close the modeled-vs-measured loop: feed the store's measured
+            # read EMA back into the Conductor's arm prices (CostModel) and
+            # the Messenger's SSD channel bandwidth. The channel bw must be
+            # in the COST MODEL's byte units (the conductor prices 70B-sized
+            # blocks; the engine stores reduced-model blocks), so one
+            # modeled block load costs exactly one measured read
+            store = pools[pi].store
+            if store is not None and store.read_s_ema is not None:
+                P[pi].cost.calibrate_ssd_read(store.read_s_ema)
+                msg.set_ssd_bw(P[pi].iid,
+                               P[pi].cost.kv_bytes(BLOCK_TOKENS)
+                               / store.read_s_ema)
             dws[di].join(req.req_id, pres,
                          max_new=min(args.max_new, max(req.output_length, 2)))
             active[req.req_id] = di
@@ -147,6 +182,19 @@ def main():
           f"computed {stats['computed']} tokens, "
           f"hot-spot migrations: {stats['migrations']}")
     print(f"conductor migrations (metadata): {conductor.n_migrations}")
+    if directory is not None:
+        d = directory.stats()
+        fetched = sum(p.peer_blocks_fetched for p in pools)
+        failures = sum(p.peer_fetch_failures for p in pools)
+        reasons: dict = {}
+        for p in pools:
+            for k, v in p.fallback_reasons.items():
+                reasons[k] = reasons.get(k, 0) + v
+        print(f"global pool: directory {d['keys']} keys "
+              f"({d['dram_claims']} dram / {d['ssd_claims']} ssd claims), "
+              f"conductor peer-SSD arms won {conductor.n_peer_ssd_loads}, "
+              f"engine fetched {fetched} peer blocks "
+              f"({failures} failures{', ' + str(reasons) if reasons else ''})")
     if args.ssd_blocks:
         print(f"conductor SSD prefix loads: {conductor.n_ssd_loads}")
         for i, pool in enumerate(pools):

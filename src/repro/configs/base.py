@@ -86,6 +86,10 @@ class ClusterSpec:
     decode_policy: str = "min_tbt"
     balancing_threshold: float = 1.3
     layerwise_prefill: bool = True
+    #: share one GlobalBlockDirectory across prefill pools (the Figure-3
+    #: cluster-wide pool: demoted blocks become peer-SSD-fetchable). Only
+    #: meaningful when the cache is tiered; flat pools have no SSD tier.
+    global_pool: bool = True
     t_d: float = 10.0              # predictive admission's uniform decode time
     seed: int = 0
     inst_spec: Optional[object] = None

@@ -4,6 +4,7 @@ overload admission (§7), and the discrete-event cluster simulator (§8)."""
 from repro.core.cache import (CachePool, StateCache, cache_hit_analysis,
                               kv_block_bytes, ssm_state_bytes)
 from repro.core.tiered import TierPrefix, TieredCachePool
+from repro.core.directory import GlobalBlockDirectory
 from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
 from repro.core.costmodel import CostModel, Hardware, InstanceSpec, V5E
 from repro.core.messenger import Messenger

@@ -8,6 +8,7 @@ TTFT — and commits the best one. The built-in arms are
   * peer fetch (cache balancing):    T_transfer + T_queue + T_prefill(len, best_prefix)
   * SSD load (compute-vs-load):      max(T_queue, T_ssd_load) + T_prefill(len, tier_prefix)
   * overlap (why-not-both):          max(T_queue + T_head, T_ssd_load) + T_suffix
+  * peer SSD (global pool):          max(T_queue, T_peer_ssd + T_hop) + T_prefill(len, ext_prefix)
 
 The SSD load is *prefetched*: it starts immediately on the node's SSD read
 channel and overlaps the queue wait, so only the slower of queue-drain and
@@ -94,6 +95,7 @@ class Decision:
     migrated_blocks: int = 0            # hot-spot replication volume
     transfer_from: Optional[int] = None
     ssd_blocks: int = 0                 # prefix blocks loaded from local SSD
+    peer_ssd_blocks: int = 0            # prefix blocks fetched off a peer SSD
     ssd_load_time: float = 0.0          # committed load duration incl. channel
                                         # backlog (overlaps the queue wait)
     compute_time: float = 0.0           # prefill busy-time the arm charges
@@ -124,7 +126,8 @@ class Conductor:
                  ttft_slo: float, tbt_slo: float,
                  balancing_threshold: float = 1.3,
                  strategy: str = "kvcache", decode_policy: str = "min_tbt",
-                 accounting: str = "pending", rng=None) -> None:
+                 accounting: str = "pending", rng=None,
+                 directory=None) -> None:
         self.P = prefills
         self.D = decodes
         self.messenger = messenger
@@ -133,7 +136,8 @@ class Conductor:
         import random as _random
         self.ctx = PolicyContext(messenger=messenger,
                                  balancing_threshold=balancing_threshold,
-                                 rng=rng or _random.Random(0))
+                                 rng=rng or _random.Random(0),
+                                 directory=directory)
         self.strategy = strategy
         self.prefill_policy = get_policy("prefill", strategy)(self.ctx)
         self.decode_policy = get_policy("decode", decode_policy)(self.ctx)
@@ -142,6 +146,8 @@ class Conductor:
         self.migrated_bytes = 0.0
         self.n_ssd_loads = 0
         self.ssd_loaded_bytes = 0.0
+        self.n_peer_ssd_loads = 0
+        self.peer_ssd_bytes = 0.0
 
     @property
     def threshold(self) -> float:
@@ -200,6 +206,10 @@ class Conductor:
             self.n_ssd_loads += 1
             self.ssd_loaded_bytes += inst.cost.kv_bytes(
                 arm.ssd_blocks * BLOCK_TOKENS)
+        if arm.peer_ssd_blocks:
+            self.n_peer_ssd_loads += 1
+            self.peer_ssd_bytes += inst.cost.kv_bytes(
+                arm.peer_ssd_blocks * BLOCK_TOKENS)
 
         # queue the prefill work (cache inserts happen at completion in the
         # simulator; here we update the pool optimistically so back-to-back
@@ -221,5 +231,6 @@ class Conductor:
                         transfer_from=arm.transfer_from.iid
                         if arm.transfer_from else None,
                         ssd_blocks=arm.ssd_blocks,
+                        peer_ssd_blocks=arm.peer_ssd_blocks,
                         ssd_load_time=arm.ssd_load_time,
                         compute_time=arm.compute_time, arm_kind=arm.kind)

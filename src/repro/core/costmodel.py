@@ -57,6 +57,7 @@ class CostModel:
         self.kv_token_bytes = (2 * cfg.attention_layers * cfg.n_kv_heads
                                * cfg.head_dim * 2)  # bf16 K+V per token
         self.weight_bytes = self.n_params_active * 2  # bf16
+        self._ssd_s_per_token = None   # measured override (calibrate_ssd_read)
 
     # ---- prefill (compute-bound, Figure 2 left) ----
     def prefill_flops(self, L: int, prefix: int = 0) -> float:
@@ -128,9 +129,34 @@ class CostModel:
 
     def ssd_load_time(self, tokens: int) -> float:
         """Local SSD→DRAM/HBM load of a demoted prefix (the 'load' arm of
-        the compute-vs-load decision)."""
+        the compute-vs-load decision). Prefers the MEASURED per-block read
+        time when ``calibrate_ssd_read`` has fed one back (closing the
+        modeled-vs-measured loop the paper closes with offline data)."""
+        if self._ssd_s_per_token is not None:
+            return tokens * self._ssd_s_per_token
         return self.kv_bytes(tokens) / self.inst.hw.ssd_read_bw
+
+    def calibrate_ssd_read(self, seconds_per_block: float,
+                           block_tokens: int = 512) -> None:
+        """Pin the SSD-load arm's price to a measured seconds-per-block
+        (e.g. ``SSDBlockStore``'s read EMA); every later ``ssd_load_time``
+        — and therefore every simulator/Conductor arm priced off it —
+        uses the measured value instead of the spec-sheet bandwidth."""
+        if seconds_per_block <= 0:
+            raise ValueError("seconds_per_block must be positive")
+        self._ssd_s_per_token = seconds_per_block / block_tokens
+
+    @property
+    def ssd_calibrated(self) -> bool:
+        return self._ssd_s_per_token is not None
 
     def ssd_write_time(self, tokens: int) -> float:
         """Demotion write-back DRAM→SSD."""
         return self.kv_bytes(tokens) / self.inst.hw.ssd_write_bw
+
+    def peer_ssd_load_time(self, tokens: int) -> float:
+        """Cross-node prefix fetch off a PEER's SSD (the global pool's
+        fourth arm): the peer's SSD read followed by the network hop.
+        ``Messenger.estimate_peer_ssd`` is the backlog-aware version; this
+        is the channel-free fallback price."""
+        return self.ssd_load_time(tokens) + self.transfer_time(tokens)

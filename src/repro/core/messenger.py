@@ -17,6 +17,9 @@ Nodes with a tiered DRAM+SSD pool additionally register an *SSD channel*
 serialises SSD→DRAM prefix loads. Its backlog feeds the Conductor's
 estimate for the third TTFT arm (load-from-SSD), so a node whose SSD is
 busy loading one long prefix correctly looks expensive for the next one.
+A cross-node peer-SSD fetch (the global pool's fourth arm) composes two
+pipes serially — the owner's SSD read channel, then the owner's egress
+link — via ``estimate_peer_ssd``/``enqueue_peer_ssd``.
 """
 from __future__ import annotations
 
@@ -85,3 +88,32 @@ class Messenger:
     def enqueue_ssd(self, node, nbytes: float, now: float) -> float:
         """Commit an SSD load; returns its completion TIME."""
         return self._commit(self.ssd_links[node], nbytes, now)
+
+    def set_ssd_bw(self, node, read_bw: float) -> None:
+        """Recalibrate a node's SSD read channel to a MEASURED bandwidth
+        (the serving engine feeds ``SSDBlockStore``'s read EMA back so the
+        Conductor's load-arm estimates track reality, not the spec sheet)."""
+        link = self.ssd_links.get(node)
+        if link is None:
+            self.add_ssd_channel(node, read_bw)
+        else:
+            link.bw = read_bw
+
+    # ---- cross-node SSD fetch (global pool: peer SSD read + egress hop) ----
+    def estimate_peer_ssd(self, node, nbytes: float, now: float) -> float:
+        """Predicted duration of fetching bytes OFF a peer's SSD: the
+        peer's SSD read channel drains first, then the peer's egress link
+        carries the bytes — two FIFO pipes composed serially, each with
+        its current backlog."""
+        link = self.ssd_links.get(node)
+        if link is None:
+            return float("inf")     # peer has no SSD tier
+        t_read = self._estimate(link, nbytes, now)
+        net = self.links[node]
+        t_net = max(net.busy_until - (now + t_read), 0.0) + nbytes / net.bw
+        return t_read + t_net
+
+    def enqueue_peer_ssd(self, node, nbytes: float, now: float) -> float:
+        """Commit a peer-SSD fetch; returns its completion TIME."""
+        done_read = self._commit(self.ssd_links[node], nbytes, now)
+        return self._commit(self.links[node], nbytes, done_read)

@@ -20,7 +20,9 @@ from repro.core.policies.admission import (AdmissionPolicy, BaselineAdmission,
 from repro.core.policies.routing import (CacheAwareRouting, KVCacheRouting,
                                          LoadBalanceRouting, RandomRouting,
                                          find_best_prefix, peer_fetch_arm,
-                                         recompute_arm, ssd_load_arm)
+                                         peer_ssd_arm, recompute_arm,
+                                         ssd_load_arm)
 from repro.core.policies.load_aware import LoadAwareRouting
 from repro.core.policies.why_not_both import WhyNotBothRouting
-from repro.core.policies.decode import KVPressureDecode, MinTBTDecode
+from repro.core.policies.decode import (KVPressureDecode, MinTBTDecode,
+                                        SessionAffinityDecode)

@@ -56,7 +56,7 @@ class Arm:
     ``max(queue drained, data landed)``. ``None`` means nothing to do.
     Committing may fill ``ssd_load_time`` (the committed channel time).
     """
-    kind: str                       # "recompute" | "peer_fetch" | "ssd_load" | "overlap"
+    kind: str                       # "recompute" | "peer_fetch" | "ssd_load" | "overlap" | "peer_ssd"
     instance: "PrefillInstance"
     ttft: float
     compute_time: float
@@ -64,6 +64,7 @@ class Arm:
     migrate_blocks: int = 0         # hot-spot replication volume
     transfer_from: Optional["PrefillInstance"] = None
     ssd_blocks: int = 0             # prefix blocks loaded from local SSD
+    peer_ssd_blocks: int = 0        # prefix blocks fetched off a PEER's SSD
     ssd_load_time: float = 0.0      # filled by commit for SSD-loading arms
     score: Optional[float] = None   # selection key; None -> ttft
     commit: Optional[Callable[[float], float]] = None
@@ -79,10 +80,17 @@ class Arm:
 
 @dataclass
 class PolicyContext:
-    """Everything a policy may consult besides the instances themselves."""
+    """Everything a policy may consult besides the instances themselves.
+
+    ``directory`` is the cluster's ``GlobalBlockDirectory`` when the
+    shared KVCache pool is enabled (None otherwise); routing policies use
+    it to propose the peer-SSD fetch arm. Reads only — commits go through
+    the messenger/pools like every other arm side effect.
+    """
     messenger: "Messenger"
     balancing_threshold: float = 1.3
     rng: random.Random = field(default_factory=lambda: random.Random(0))
+    directory: Optional[object] = None   # GlobalBlockDirectory | None
 
 
 class PrefillPolicy(Protocol):

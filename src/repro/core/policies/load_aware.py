@@ -53,4 +53,7 @@ class LoadAwareRouting(CacheAwareRouting):
             for ssd in self._ssd_arms(inst, req, now):
                 ssd.score = ssd.ttft + penalty
                 arms.append(ssd)
+            for pa in self._peer_ssd_arms(inst, req, now, instances):
+                pa.score = pa.ttft + penalty
+                arms.append(pa)
         return arms

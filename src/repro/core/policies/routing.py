@@ -2,9 +2,11 @@
 baselines, ported onto the Arm/registry API.
 
 * ``kvcache`` — full Algorithm 1 (cache-aware + cache load balancing +
-  hot-spot migration), plus the SSD load arm on tiered pools.
+  hot-spot migration), plus the SSD load arm on tiered pools and the
+  peer-SSD fetch arm when the cluster runs a ``GlobalBlockDirectory``.
 * ``cache_aware`` — §6.1 only: always the local prefix, never migrate
-  (the Figure 8 "cache-aware" baseline). SSD arm still applies.
+  (the Figure 8 "cache-aware" baseline). SSD arm still applies; peer
+  arms never do (they are transfers).
 * ``load_balance`` — least-loaded prefill instance, prefix incidental.
 * ``random`` — uniform random instance.
 
@@ -103,6 +105,68 @@ def ssd_load_arm(ctx: PolicyContext, inst, req, now: float) -> Optional[Arm]:
     return arm
 
 
+def peer_ssd_arm(ctx: PolicyContext, inst, req, now: float,
+                 instances) -> Optional[Arm]:
+    """Arm 4 — the global pool: the chain extends past this instance's
+    local residency onto a PEER's SSD (``GlobalBlockDirectory``). The
+    fetch is priced as the peer's SSD read + the network hop, prefetched
+    like the local SSD arm (it overlaps the queue wait), and the blocks
+    REPLICATE here at commit — the peer keeps its copy, exactly like
+    hot-spot migration."""
+    if ctx.directory is None:
+        return None
+    tier_prefix = getattr(inst.pool, "tier_prefix", None)
+    tp = tier_prefix(req.hash_ids) if tier_prefix is not None else None
+    local = tp.total if tp is not None else inst.pool.prefix_len(req.hash_ids)
+    k, peer_iid = ctx.directory.best_ssd_extension(
+        req.hash_ids, local, exclude={inst.iid})
+    if k == 0:
+        return None
+    peer = next((p for p in instances if p.iid == peer_iid), None)
+    if peer is None:
+        return None                 # directory names a node we can't route to
+    nbytes = inst.cost.kv_bytes(k * BLOCK_TOKENS)
+    if ctx.messenger.has_ssd_channel(peer_iid):
+        t_fetch = ctx.messenger.estimate_peer_ssd(peer_iid, nbytes, now)
+    else:
+        t_fetch = inst.cost.peer_ssd_load_time(k * BLOCK_TOKENS)
+    # the local prefix's own SSD span still has to load locally
+    n_local_ssd = tp.ssd if tp is not None else 0
+    t_local = 0.0
+    local_bytes = inst.cost.kv_bytes(n_local_ssd * BLOCK_TOKENS)
+    if n_local_ssd:
+        if ctx.messenger.has_ssd_channel(inst.iid):
+            t_local = ctx.messenger.estimate_ssd(inst.iid, local_bytes, now)
+        else:
+            t_local = inst.cost.ssd_load_time(n_local_ssd * BLOCK_TOKENS)
+    prefix = local + k
+    t_prefill = inst.cost.prefill_time(req.input_length, prefix * BLOCK_TOKENS)
+    arm = Arm("peer_ssd", inst,
+              max(inst.queue_time(now), t_fetch, t_local) + t_prefill,
+              t_prefill, prefix_blocks=prefix, ssd_blocks=n_local_ssd,
+              peer_ssd_blocks=k, transfer_from=peer)
+
+    def commit(now: float) -> float:
+        done = ctx.messenger.enqueue_peer_ssd(peer_iid, nbytes, now) \
+            if ctx.messenger.has_ssd_channel(peer_iid) \
+            else now + inst.cost.peer_ssd_load_time(k * BLOCK_TOKENS)
+        if n_local_ssd:
+            if ctx.messenger.has_ssd_channel(inst.iid):
+                done = max(done, ctx.messenger.enqueue_ssd(
+                    inst.iid, local_bytes, now))
+            else:
+                done = max(done, now + inst.cost.ssd_load_time(
+                    n_local_ssd * BLOCK_TOKENS))
+        arm.ssd_load_time = done - now
+        # replicate the fetched span into the local pool (the Conductor's
+        # generic lookup/insert only covers locally-resident prefixes)
+        inst.pool.insert(req.hash_ids[local:prefix], start_pos=local)
+        return done
+
+    arm.commit = commit
+    return arm
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -135,6 +199,13 @@ class CacheAwareRouting(_RoutingPolicy):
         arm = ssd_load_arm(self.ctx, inst, req, now)
         return [arm] if arm is not None else []
 
+    def _peer_ssd_arms(self, inst, req, now, instances) -> list[Arm]:
+        """Global-pool arm (needs ctx.directory); shared by the
+        transfer-proposing subclasses — CacheAwareRouting itself stays
+        transfer-free per §6.1."""
+        arm = peer_ssd_arm(self.ctx, inst, req, now, instances)
+        return [arm] if arm is not None else []
+
     def propose(self, req, instances, now):
         arms = []
         for inst in instances:
@@ -147,7 +218,8 @@ class CacheAwareRouting(_RoutingPolicy):
 class KVCacheRouting(CacheAwareRouting):
     """Full Algorithm 1: each instance proposes EITHER local recompute or
     fetch-the-best-peer-prefix, gated by the balancing threshold (line 8),
-    plus the SSD arm on tiered pools."""
+    plus the SSD arm on tiered pools and the peer-SSD arm when a global
+    block directory is wired in."""
 
     def propose(self, req, instances, now):
         block_keys = req.hash_ids
@@ -163,4 +235,5 @@ class KVCacheRouting(CacheAwareRouting):
                 arms.append(peer_fetch_arm(self.ctx, inst, req, now,
                                            best_len, best_inst, prefix_len))
             arms.extend(self._ssd_arms(inst, req, now))
+            arms.extend(self._peer_ssd_arms(inst, req, now, instances))
         return arms

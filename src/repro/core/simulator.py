@@ -51,6 +51,7 @@ class ReqRecord:
     done: float = -1.0
     prefix_blocks: int = 0
     ssd_blocks: int = 0            # prefix blocks loaded from local SSD
+    peer_ssd_blocks: int = 0       # prefix blocks fetched off a peer's SSD
     ssd_load_time: float = 0.0     # seconds spent on the SSD read channel
 
     @property
@@ -68,6 +69,7 @@ class SimResult:
     load_samples: list              # (t, prefill_load, decode_load)
     n_migrations: int = 0
     n_ssd_loads: int = 0            # compute-vs-load chose 'load'
+    n_peer_ssd_loads: int = 0       # global pool chose a peer-SSD fetch
 
     # ---- aggregates ----
     def completed(self):
@@ -262,13 +264,22 @@ class MooncakeCluster:
         if spec.cache.tiered:
             for p in self.prefills:
                 self.messenger.add_ssd_channel(p.iid, inst.hw.ssd_read_bw)
+        # the Figure-3 global pool: one directory spanning every prefill
+        # instance's tiers, so a block demoted on node A proposes a
+        # peer-SSD fetch arm for a request routed to node B
+        self.directory = None
+        if spec.cache.tiered and spec.global_pool:
+            from repro.core.directory import GlobalBlockDirectory
+            self.directory = GlobalBlockDirectory()
+            for p in self.prefills:
+                self.directory.bind(p.iid, p.pool)
         import random
         self.conductor = Conductor(
             self.prefills, self.decodes, self.messenger,
             ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
             balancing_threshold=spec.balancing_threshold,
             strategy=spec.strategy, decode_policy=spec.decode_policy,
-            rng=random.Random(spec.seed))
+            rng=random.Random(spec.seed), directory=self.directory)
         # forward spec knobs any registered admission policy declares
         # (predictive's t_d, and user policies subclassing it)
         import inspect
@@ -306,6 +317,7 @@ class MooncakeCluster:
             rec.accepted = True
             rec.prefix_blocks = dec.prefix_blocks
             rec.ssd_blocks = dec.ssd_blocks
+            rec.peer_ssd_blocks = dec.peer_ssd_blocks
             rec.ssd_load_time = dec.ssd_load_time
             p, d = dec.prefill, dec.decode
             # prefill completion (the conductor queued the work already;
@@ -376,7 +388,8 @@ class MooncakeCluster:
         return SimResult(records=records, duration=t_end,
                          load_samples=load_samples,
                          n_migrations=self.conductor.n_migrations,
-                         n_ssd_loads=self.conductor.n_ssd_loads)
+                         n_ssd_loads=self.conductor.n_ssd_loads,
+                         n_peer_ssd_loads=self.conductor.n_peer_ssd_loads)
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,10 @@ Tier-event hooks: a byte-holder (``HostKVPool`` with a file-backed
 when a block changes tier or leaves the hierarchy, with ``on_demote``
 guaranteed to run while the caller still holds the DRAM bytes — so the
 hook can stage the write-back — and ``on_drop`` when the bytes may be
-freed. All default to ``None`` (the simulator's metadata-only use).
+freed. ``on_insert(key, tier)`` fires when a FRESH block enters the
+hierarchy (normally DRAM; "ssd" on the pinned-full straight-to-SSD path)
+so a ``GlobalBlockDirectory`` can track DRAM residency too. All default
+to ``None`` (the simulator's metadata-only use).
 """
 from __future__ import annotations
 
@@ -90,6 +93,7 @@ class TieredCachePool(CachePool):
         self.on_demote = None       # fn(key) — DRAM bytes still readable
         self.on_promote = None      # fn(key, count_read)
         self.on_drop = None         # fn(key) — bytes may be freed
+        self.on_insert = None       # fn(key, tier) — fresh block entered
 
     # ---- residency ----------------------------------------------------
     def __contains__(self, key: int) -> bool:
@@ -234,12 +238,16 @@ class TieredCachePool(CachePool):
                     self._drop(ssd_evicted)
                     if placed:
                         self._account_ssd_write()
+                        if self.on_insert is not None:
+                            self.on_insert(h, "ssd")
                         continue
                 break
             meta = BlockMeta(key=h, position=start_pos + i,
                              size_bytes=self.block_bytes)
             self.blocks[h] = meta
             self.policy.on_insert(h, meta)
+            if self.on_insert is not None:
+                self.on_insert(h, "dram")
         dropped, self._dropped = self._dropped, []
         return dropped
 

@@ -7,7 +7,10 @@ Runs the REAL engines (reduced model on CPU): a PrefillWorker with the
 host-DRAM KVCache pool (prefix reuse + chunked incremental prefill) feeds
 a continuous-batching DecodeWorker — the executable §3 workflow. With
 --trace, request arrival order/lengths/prefix structure come from a
-Mooncake-format trace (hash chains realised to actual tokens).
+Mooncake-format trace (hash chains realised to actual tokens). With
+--peer-ssd-dir, blocks a PREVIOUS run demoted to its SSD store become
+cross-node-fetchable through a shared GlobalBlockDirectory (the global
+pool, across launcher runs — same seed ⇒ same hash chains).
 """
 from __future__ import annotations
 
@@ -33,6 +36,12 @@ def main(argv=None) -> int:
                     choices=("blocking", "overlap"),
                     help="how SSD-resident prefixes load: synchronously, or "
                          "overlapped with head-chunk recompute (§5.2)")
+    ap.add_argument("--peer-ssd-dir", default=None,
+                    help="a PEER node's SSD store directory (e.g. left by a "
+                         "previous run): its blocks join a shared "
+                         "GlobalBlockDirectory and local misses resolve to "
+                         "cross-node fetches — the Figure-3 global pool "
+                         "across launcher runs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -47,9 +56,21 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    directory = peer_pool = None
+    if args.peer_ssd_dir:
+        from repro.core.directory import GlobalBlockDirectory
+        directory = GlobalBlockDirectory()
+        # restart recovery re-indexes the peer's flushed blocks; bind()
+        # publishes them, so this run's misses can fetch across "nodes"
+        peer_pool = HostKVPool(capacity_blocks=8, ssd_capacity_blocks=None,
+                               ssd_dir=args.peer_ssd_dir,
+                               directory=directory, node_id=1)
     pool = HostKVPool(capacity_blocks=args.pool_blocks,
                       ssd_capacity_blocks=args.ssd_blocks,
-                      ssd_dir=args.ssd_dir)
+                      ssd_dir=args.ssd_dir,
+                      directory=directory, node_id=0)
+    if peer_pool is not None:
+        pool.add_peer(1, peer_pool)
     pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
                        ssd_mode=args.ssd_mode)
 
@@ -101,6 +122,12 @@ def main(argv=None) -> int:
               f"flushes, {s['layer_reads']} layer reads, "
               f"{s['read_failures']} read failures; overlapped "
               f"{st['overlapped_requests']} prefills")
+    if peer_pool is not None:
+        print(f"global pool: fetched {pool.peer_blocks_fetched} blocks off "
+              f"the peer store ({pool.peer_fetch_failures} failures"
+              f"{', fallbacks ' + str(pool.fallback_reasons) if pool.fallback_reasons else ''}); "
+              f"directory {directory.stats()}")
+        peer_pool.close()
     pool.close()
     return 0
 

@@ -1,8 +1,9 @@
 """Serving substrate: paged device KV cache, chunked-prefill +
 continuous-batching engines, CPP pipelined prefill (§5.1), layer-wise
 prefill semantics (§5.2)."""
-from repro.serving.engine import (DecodeWorker, HostKVPool, PrefillResult,
-                                  PrefillWorker, StateCheckpointWorker,
+from repro.serving.engine import (DecodeWorker, FetchPlan, HostKVPool,
+                                  PeerSource, PrefillResult, PrefillWorker,
+                                  StateCheckpointWorker, connect_pools,
                                   prefix_hash_ids)
 from repro.serving.layerwise import occupation_cost, schedule
 from repro.serving.paged_cache import (PagedKVCache, assign_seq, free_seq,

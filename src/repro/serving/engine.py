@@ -45,9 +45,15 @@ def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
 class FetchPlan:
     """Side-effect-free snapshot of a hash chain's residency: which prefix
     blocks are resident and in which tier. The engine plans the §5.2
-    load-vs-compute split off this, then commits via ``finish_fetch``."""
+    load-vs-compute split off this, then commits via ``finish_fetch``.
+
+    With a ``GlobalBlockDirectory`` a miss can resolve to a PEER node
+    (tier ``"peer"``); ``sources[i]`` then names the owning node. The
+    directory is advisory — every peer block re-verifies at fetch time
+    and a stale entry degrades to recompute, never to wrong bytes."""
     hash_ids: list[int]
-    tiers: list[str]                # per resident prefix block: dram | ssd
+    tiers: list[str]                # per resident block: dram | ssd | peer
+    sources: Optional[list] = None  # per block: owner node id (peer only)
 
     @property
     def n_resident(self) -> int:
@@ -57,8 +63,70 @@ class FetchPlan:
     def has_ssd(self) -> bool:
         return "ssd" in self.tiers
 
+    @property
+    def has_remote(self) -> bool:
+        return "peer" in self.tiers
+
+    def source(self, i: int):
+        return self.sources[i] if self.sources is not None else None
+
     def truncate(self, n: int) -> "FetchPlan":
-        return FetchPlan(self.hash_ids, self.tiers[:n])
+        return FetchPlan(self.hash_ids, self.tiers[:n],
+                         None if self.sources is None else self.sources[:n])
+
+
+class PeerSource:
+    """Read-side adapter over a remote ``HostKVPool`` — the in-process
+    stand-in for the Messenger's cross-node block channel.
+
+    ``read_layer`` serves a peer's block from its DRAM bytes or its
+    checksummed store (store reads CRC-verify per layer, so a torn or
+    corrupt remote slot returns ``None`` exactly like a local one).
+    Failures record a reason per key (``peer_unreachable`` — the node
+    died; ``stale_directory`` — the peer no longer holds the block;
+    ``verify_failed`` — bytes present but integrity-rejected) so the
+    fetching pool can log WHY it fell back to recompute and self-heal the
+    directory.
+    """
+
+    def __init__(self, node, pool) -> None:
+        self.node = node
+        self.pool = pool
+        self.reasons: dict[int, str] = {}
+
+    @property
+    def n_layers(self) -> int:
+        if self.pool is None or not self.pool.alive:
+            return 0
+        store = self.pool.store
+        if store is not None and store.n_layers:
+            return store.n_layers
+        for kv in self.pool.data.values():
+            return kv[0].shape[0]
+        return 0
+
+    def note_empty(self, key: int) -> None:
+        """Classify a fetch that never started: a dead peer vs an alive
+        peer with nothing to serve (the directory entry was stale)."""
+        self.reasons.setdefault(
+            key, "peer_unreachable" if self.pool is None
+            or not self.pool.alive else "stale_directory")
+
+    def read_layer(self, key: int, layer: int):
+        if self.pool is None or not self.pool.alive:
+            self.reasons[key] = "peer_unreachable"
+            return None
+        kv = self.pool.data.get(key)
+        if kv is not None:
+            return np.asarray(kv[0][layer]), np.asarray(kv[1][layer])
+        store = self.pool.store
+        if store is None or key not in store:
+            self.reasons[key] = "stale_directory"
+            return None
+        pair = store.read_layer(key, layer)
+        if pair is None:
+            self.reasons[key] = "verify_failed"
+        return pair
 
 
 class HostKVPool:
@@ -78,6 +146,16 @@ class HostKVPool:
       path the ``PrefillWorker`` overlaps with head recompute (§5.2).
       A block whose on-disk bytes fail verification is discarded from the
       hierarchy and silently becomes a miss — never wrong bytes.
+
+    With a shared ``GlobalBlockDirectory`` (+ ``node_id`` and peers wired
+    via ``add_peer``/``connect_pools``) the pool joins the Figure-3
+    cluster-wide pool: its tier moves publish to the directory, and
+    ``plan_fetch`` resolves local misses to a peer's DRAM or SSD. Peer
+    blocks stream through the same ``AsyncPrefetcher`` layer-major queue,
+    verify before their metadata enters the local hierarchy, and on ANY
+    failure (dead peer, stale directory entry, corrupt remote slot) the
+    run truncates to recompute with the reason recorded in
+    ``fallback_reasons`` — wrong bytes are impossible.
     """
 
     def __init__(self, capacity_blocks: Optional[int] = None,
@@ -86,7 +164,7 @@ class HostKVPool:
                  ssd_dir: Optional[str] = None,
                  ssd_read_bw: Optional[float] = None,
                  ssd_write_bw: Optional[float] = None,
-                 spec=None) -> None:
+                 spec=None, directory=None, node_id=None) -> None:
         from repro.configs.base import CacheTierSpec
         if spec is None:
             spec = CacheTierSpec(
@@ -98,6 +176,13 @@ class HostKVPool:
         self.data: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self.store = None
         self.prefetcher = None
+        self.directory = directory
+        self.node_id = node_id
+        self.peers: dict = {}           # node id -> peer HostKVPool
+        self.alive = True               # kill() = failure-injection switch
+        self.peer_blocks_fetched = 0
+        self.peer_fetch_failures = 0
+        self.fallback_reasons: dict[str, int] = {}
         self._inflight: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         if spec.ssd_dir is not None and not spec.tiered:
             raise ValueError(
@@ -124,6 +209,24 @@ class HostKVPool:
                     self.store.delete(e)
                 if not placed:
                     self.store.delete(key)
+        # join the global pool AFTER recovery so bind() seeds recovered
+        # blocks too; chaining preserves the byte-holder hooks above
+        if directory is not None and hasattr(self.meta, "on_demote"):
+            directory.bind(node_id, self.meta)
+
+    # ---- global pool membership ----------------------------------------
+    def add_peer(self, node_id, pool: "HostKVPool") -> None:
+        """Make a remote pool fetchable (in-process Messenger stand-in)."""
+        self.peers[node_id] = pool
+
+    def kill(self) -> None:
+        """Failure injection: model this node dying — peers' reads against
+        it fail with ``peer_unreachable`` from now on. Local state is left
+        intact so tests can assert nothing was served from a dead node."""
+        self.alive = False
+
+    def _note_fallback(self, reason: str) -> None:
+        self.fallback_reasons[reason] = self.fallback_reasons.get(reason, 0) + 1
 
     # ---- tier-event hooks (file-backed mode only) ----------------------
     def _on_demote(self, key: int) -> None:
@@ -149,61 +252,155 @@ class HostKVPool:
 
     # ---- fetch protocol ------------------------------------------------
     def plan_fetch(self, hash_ids: list[int]) -> FetchPlan:
-        """Residency snapshot of the chain's prefix (no side effects)."""
+        """Residency snapshot of the chain's prefix (no side effects).
+        Local misses consult the global directory: a block a reachable
+        peer claims extends the plan with tier ``"peer"``."""
         rt = getattr(self.meta, "resident_tier", None)
         tiers: list[str] = []
+        sources: list = []
         for h in hash_ids:
             t = rt(h) if rt is not None \
                 else ("dram" if h in self.meta else None)
+            src = None
+            if t is None and self.directory is not None and self.peers:
+                owner = self.directory.pick_owner(
+                    h, exclude=(self.node_id,), among=self.peers)
+                if owner is not None:
+                    t, src = "peer", owner[0]
             if t is None:
                 break
             tiers.append(t)
-        return FetchPlan(list(hash_ids), tiers)
+            sources.append(src)
+        return FetchPlan(list(hash_ids), tiers, sources)
 
     def start_prefetch(self, plan: FetchPlan, from_block: int = 0):
-        """Enqueue async layer-wise loads of the plan's SSD blocks at
-        index ≥ ``from_block``; returns a PrefetchHandle (or None)."""
+        """Enqueue async layer-wise loads of the plan's SSD and peer
+        blocks at index ≥ ``from_block``; returns a PrefetchHandle (or
+        None). Peer blocks stream through the same layer-major queue,
+        read off the owning node via a ``PeerSource``."""
         if self.prefetcher is None:
             return None
-        keys = [h for h, t in zip(plan.hash_ids[from_block:plan.n_resident],
-                                  plan.tiers[from_block:]) if t == "ssd"]
-        return self.prefetcher.fetch(keys) if keys else None
+        keys: list[int] = []
+        sources: dict = {}
+        peer_srcs: dict = {}
+        for i in range(from_block, plan.n_resident):
+            h, t = plan.hash_ids[i], plan.tiers[i]
+            if t == "ssd":
+                keys.append(h)
+            elif t == "peer":
+                node = plan.source(i)
+                if node not in peer_srcs:
+                    peer_srcs[node] = PeerSource(node, self.peers.get(node))
+                keys.append(h)
+                sources[h] = peer_srcs[node]
+        if not keys:
+            return None
+        handle = self.prefetcher.fetch(keys, sources)
+        handle.sources = sources        # finish_fetch reads failure reasons
+        return handle
+
+    def _remote_block(self, src: PeerSource, key: int):
+        """Synchronous whole-block peer read (the blocking path)."""
+        L = src.n_layers
+        if L == 0:
+            src.note_empty(key)
+            return None
+        ks, vs = [], []
+        for layer in range(L):
+            pair = src.read_layer(key, layer)
+            if pair is None:
+                return None
+            ks.append(pair[0])
+            vs.append(pair[1])
+        return np.stack(ks), np.stack(vs)
+
+    def _take_peer_block(self, i: int, h: int, kv, node) -> bool:
+        """Install a VERIFIED peer block: bytes first, then metadata (the
+        hierarchy never claims bytes it can't serve). Returns False when
+        the local hierarchy has no room — treated as a fetch failure.
+        Mirrors ``put``'s byte accounting: eviction victims free their
+        bytes, and a pinned-full-DRAM insert that lands straight in the
+        SSD tier writes the bytes through to the store."""
+        self.data[h] = (np.asarray(kv[0]), np.asarray(kv[1]))
+        evicted = self.meta.insert([h], start_pos=i)
+        for e in evicted:
+            self.data.pop(e, None)      # file-backed: on_drop already freed
+        if h not in self.meta:
+            self.data.pop(h, None)
+            self._note_fallback("no_local_room")
+            return False
+        rt = getattr(self.meta, "resident_tier", None) \
+            if self.store is not None else None
+        if rt is not None and rt(h) == "ssd":
+            blk = self.data.pop(h)
+            if h not in self.store:     # landed straight in the SSD tier
+                self.store.put(h, *blk)
+        self.peer_blocks_fetched += 1
+        return True
 
     def finish_fetch(self, plan: FetchPlan, handle=None,
                      from_block: int = 0) -> int:
         """Verify + install bytes for plan blocks [from_block:], promote
         their metadata, and return how many CONSECUTIVE blocks from
         ``from_block`` are usable. A block that fails verification is
-        discarded from the hierarchy and truncates the usable run — the
-        caller recomputes from there (crash safety: stale/torn SSD state
-        degrades to recompute, never to wrong KV)."""
+        discarded from the hierarchy (peer blocks: the stale directory
+        claim is withdrawn) and truncates the usable run — the caller
+        recomputes from there, with the reason in ``fallback_reasons``
+        (crash safety: stale/torn/remote-dead state degrades to
+        recompute, never to wrong KV)."""
         if handle is not None:
             handle.wait()               # §5.2 wait-before-attend barrier
+        h_sources = getattr(handle, "sources", None) or {}
         n_ok = 0
+        local_seg: list[int] = []
         for i in range(from_block, plan.n_resident):
             h, tier = plan.hash_ids[i], plan.tiers[i]
             if tier == "dram":
                 if h in self.data or self.store is None:
                     n_ok += 1
+                    local_seg.append(h)
                     continue
                 self.meta.discard(h)    # metadata claimed bytes we lost
                 break
+            if tier == "peer":
+                node = plan.source(i)
+                src = h_sources.get(h)
+                kv = handle.result(h) if handle is not None else None
+                if kv is None:
+                    if src is None:
+                        src = PeerSource(node, self.peers.get(node))
+                    kv = self._remote_block(src, h)
+                if kv is None:
+                    reason = (src.reasons.get(h) if src is not None
+                              else None) or "peer_fetch_failed"
+                    self._note_fallback(reason)
+                    self.peer_fetch_failures += 1
+                    if self.directory is not None and reason in (
+                            "stale_directory", "verify_failed"):
+                        self.directory.unregister(h, node)  # self-heal
+                    break
+                if not self._take_peer_block(i, h, kv, node):
+                    break
+                n_ok += 1
+                continue
+            # tier == "ssd" — the local store path
             kv = handle.result(h) if handle is not None else None
             if kv is None and self.store is not None:
                 kv = self.store.read_block(h)
             if kv is None:
                 self.meta.discard(h)
+                self._note_fallback("local_verify_failed")
                 break
             self._inflight[h] = kv
             n_ok += 1
-        seg = plan.hash_ids[from_block:from_block + n_ok]
-        if seg:
-            self.meta.touch_keys(seg)   # promotions consume _inflight
+            local_seg.append(h)
+        if local_seg:
+            self.meta.touch_keys(local_seg)  # promotions consume _inflight
         self._inflight.clear()
         return n_ok
 
     def match_prefix(self, hash_ids: list[int]) -> int:
-        if self.store is None:
+        if self.store is None and not self.peers:
             return self.meta.lookup(hash_ids)
         n = self.finish_fetch(self.plan_fetch(hash_ids))
         self.meta.misses += len(hash_ids) - n
@@ -259,6 +456,16 @@ class HostKVPool:
             self.store.close()
 
 
+def connect_pools(pools: list["HostKVPool"]) -> None:
+    """Cross-register every pool as a peer of every other (the in-process
+    stand-in for Messenger endpoints). Pools must carry distinct
+    ``node_id``s and share one ``GlobalBlockDirectory``."""
+    for a in pools:
+        for b in pools:
+            if a is not b:
+                a.add_peer(b.node_id, b)
+
+
 @dataclass
 class PrefillResult:
     first_token: int
@@ -268,6 +475,7 @@ class PrefillResult:
     reused_blocks: int
     new_blocks: int
     ssd_blocks: int = 0         # prefix blocks loaded off the SSD store
+    peer_blocks: int = 0        # prefix blocks fetched off a PEER's pool
     overlapped: bool = False    # head recompute ∥ tail SSD load was used
 
 
@@ -299,7 +507,7 @@ class PrefillWorker:
             lambda p, t, c: decode_step(p, t, c, cfg))
         self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0,
                           ssd_loaded_blocks=0, overlapped_requests=0,
-                          fallback_blocks=0)
+                          fallback_blocks=0, peer_blocks=0)
         self._t_block_ema: Optional[float] = None  # measured s / 512-tok blk
 
     def _note_compute(self, tokens: int, dt: float) -> None:
@@ -322,11 +530,12 @@ class PrefillWorker:
             if n_res * BLOCK_TOKENS >= S:    # full hit: keep a tail to
                 n_res = max((S - 1) // BLOCK_TOKENS, 0)  # recompute logits
             plan = plan.truncate(n_res)
-            if plan.has_ssd:
+            if plan.has_ssd or plan.has_remote:
                 return self._prefill_overlapped(tokens, hash_ids, plan)
 
         # blocking path: flat pool, legacy tiered pool, or synchronous
-        # file-backed loads (ssd_mode="blocking")
+        # file-backed/peer loads (ssd_mode="blocking")
+        peer0 = self.pool.peer_blocks_fetched
         n_hit = self.pool.match_prefix(hash_ids)
         prefix_tokens = n_hit * BLOCK_TOKENS
         if prefix_tokens >= S:           # full hit: recompute last block's
@@ -370,12 +579,14 @@ class PrefillWorker:
             sl = slice(n_hit * BLOCK_TOKENS, n_total * BLOCK_TOKENS)
             self.pool.put(hash_ids[n_hit:], k_full[:, sl], v_full[:, sl],
                           start_pos=n_hit)
+        n_peer = self.pool.peer_blocks_fetched - peer0
         self.stats["reused_blocks"] += n_hit
         self.stats["computed_tokens"] += S - prefix_tokens
         self.stats["requests"] += 1
+        self.stats["peer_blocks"] += n_peer
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=n_hit,
-                             new_blocks=n_total - n_hit)
+                             new_blocks=n_total - n_hit, peer_blocks=n_peer)
 
     def _prefill_overlapped(self, tokens: np.ndarray, hash_ids: list[int],
                             plan: FetchPlan) -> PrefillResult:
@@ -391,9 +602,14 @@ class PrefillWorker:
         cfg = self.cfg
         S = len(tokens)
         n = plan.n_resident
+        peer0 = self.pool.peer_blocks_fetched
         tl = self.pool.est_block_read_s()
         tc = self._t_block_ema if self._t_block_ema is not None else tl
-        ov = overlap_split(plan.tiers, tc, tl)
+        # peer blocks are loads for the split search (the local read EMA
+        # is the available per-block load estimate; the network hop of an
+        # in-process peer is free, so it errs mildly toward recompute)
+        ov = overlap_split(["dram" if t == "dram" else "ssd"
+                            for t in plan.tiers], tc, tl)
         s, d0 = ov.split, ov.dram_head
         handle = self.pool.start_prefetch(plan, from_block=s)
         if d0:
@@ -458,16 +674,19 @@ class PrefillWorker:
                           v_full[:, sl], start_pos=usable)
 
         reused = d0 + n_tail
+        n_peer = self.pool.peer_blocks_fetched - peer0
         self.stats["reused_blocks"] += reused
         self.stats["computed_tokens"] += S - reused * B
         self.stats["requests"] += 1
         self.stats["ssd_loaded_blocks"] += n_tail
         self.stats["overlapped_requests"] += 1
         self.stats["fallback_blocks"] += n - usable
+        self.stats["peer_blocks"] += n_peer
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=reused,
                              new_blocks=len(hash_ids) - reused,
-                             ssd_blocks=n_tail, overlapped=True)
+                             ssd_blocks=n_tail, peer_blocks=n_peer,
+                             overlapped=True)
 
 
 @dataclass

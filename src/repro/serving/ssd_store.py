@@ -133,6 +133,13 @@ class SSDBlockStore:
         """Payload bytes of one block (k + v, all layers)."""
         return 2 * self.n_layers * self._layer_bytes if self._shape else 0
 
+    @property
+    def read_s_ema(self) -> Optional[float]:
+        """Measured seconds-per-block read EMA (None until the first
+        blocking read) — what closes the modeled-vs-measured loop: feed it
+        to ``CostModel.calibrate_ssd_read`` / ``Messenger.set_ssd_bw``."""
+        return self._read_s_ema
+
     def est_block_read_s(self, default_bw: float = 500e6) -> float:
         """Expected seconds to read one block: measured EMA when we have
         one, else the throttle bandwidth, else a SATA-class default."""
@@ -421,6 +428,13 @@ class AsyncPrefetcher:
     ``fetch(keys)`` enqueues layer 0 of every block, then layer 1, … so
     arrival order matches the §5.2 load stream; the caller overlaps its
     head-chunk recompute and joins on ``PrefetchHandle.wait()``.
+
+    ``sources`` maps a key to an alternative read source — any object
+    with ``n_layers`` and ``read_layer(key, layer)`` — which is how a
+    peer node's store streams through the SAME layer-major queue as local
+    blocks (the global pool's cross-node fetch path). Keys whose source
+    reports zero layers (e.g. a peer that never wrote a block) fail
+    immediately rather than hanging the handle.
     """
 
     def __init__(self, store: SSDBlockStore) -> None:
@@ -430,16 +444,25 @@ class AsyncPrefetcher:
                                         name="kv-prefetch")
         self._thread.start()
 
-    def fetch(self, keys: list[int]) -> PrefetchHandle:
+    def fetch(self, keys: list[int],
+              sources: Optional[dict] = None) -> PrefetchHandle:
         h = PrefetchHandle(keys=list(keys))
-        L = self.store.n_layers
-        if L == 0 or not keys:
+        tasks = []
+        for key in keys:
+            src = (sources or {}).get(key, self.store)
+            L = src.n_layers
+            if L == 0:
+                h.failed.add(key)
+                continue
+            tasks.append((key, src, L))
+        if not tasks:
             h._done.set()
             return h
-        h._remaining = L * len(keys)
-        for layer in range(L):
-            for key in keys:
-                self._q.put((h, key, layer, L))
+        h._remaining = sum(L for _, _, L in tasks)
+        for layer in range(max(L for _, _, L in tasks)):
+            for key, src, L in tasks:
+                if layer < L:
+                    self._q.put((h, key, layer, L, src))
         return h
 
     def _run(self) -> None:
@@ -447,12 +470,12 @@ class AsyncPrefetcher:
             task = self._q.get()
             if task is None:
                 return
-            h, key, layer, L = task
+            h, key, layer, L, src = task
             if key in h.failed:          # skip remaining layers of a bad blk
                 h._deliver(key, layer, None, L)
                 continue
             try:
-                pair = self.store.read_layer(key, layer)
+                pair = src.read_layer(key, layer)
             except Exception:            # never let the thread die mid-fetch
                 pair = None
             h._deliver(key, layer, pair, L)

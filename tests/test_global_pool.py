@@ -1,0 +1,636 @@
+"""Global KVCache pool: directory invariants, peer-SSD routing arm, and
+the failure-injection suite for cross-node handoff (ISSUE 4).
+
+The invariant under test throughout: the directory is ADVISORY. Peers may
+die mid-transfer, remote slots may be torn or corrupt, directory entries
+may point at evicted slots, and blocks may demote while a fetch is in
+flight — every case must degrade to recompute with CORRECT bytes and a
+recorded fallback reason. No test may ever observe wrong bytes: decode
+output in a two-instance engine is asserted bit-exact vs DRAM-only.
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.cache import CachePool
+from repro.core.conductor import Conductor, DecodeInstance, PrefillInstance
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.directory import GlobalBlockDirectory
+from repro.core.messenger import Messenger
+from repro.core.policies import get_policy, list_policies
+from repro.core.policies.base import PolicyContext
+from repro.core.policies.routing import ssd_load_arm
+from repro.core.tiered import TieredCachePool
+from repro.core.trace import BLOCK_TOKENS, Request
+
+CFG_NAME = "llama2-70b"
+
+
+def _cost():
+    from repro.configs.base import get_config
+    return CostModel(get_config(CFG_NAME), InstanceSpec())
+
+
+def _req(rid=0, n_blocks=8, out=64):
+    return Request(req_id=rid, timestamp=0,
+                   input_length=n_blocks * BLOCK_TOKENS, output_length=out,
+                   hash_ids=list(range(n_blocks)))
+
+
+# ---------------------------------------------------------------------------
+# directory unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_register_is_at_most_once_per_node_key():
+    d = GlobalBlockDirectory()
+    d.register(1, "a", "dram")
+    d.register(1, "a", "ssd")           # tier move, not a second owner
+    assert d.holders(1) == {"a": "ssd"}
+    d.register(1, "b", "dram")
+    assert d.holders(1) == {"a": "ssd", "b": "dram"}
+    assert len(d) == 1
+
+
+def test_unregister_and_drop_node_leave_no_danglers():
+    d = GlobalBlockDirectory()
+    for k in (1, 2, 3):
+        d.register(k, "a", "ssd")
+    d.register(2, "b", "dram")
+    assert d.unregister(1, "a") and not d.unregister(1, "a")
+    assert d.nodes_with(1) == []
+    assert d.drop_node("a") == 2
+    assert d.holders(2) == {"b": "dram"}
+    assert len(d) == 1                  # keys with zero owners disappear
+
+
+def test_pick_owner_prefers_dram_and_is_deterministic():
+    d = GlobalBlockDirectory()
+    d.register(5, 2, "ssd")
+    d.register(5, 3, "dram")
+    d.register(5, 1, "dram")
+    assert d.pick_owner(5) == (1, "dram")       # dram first, smallest id
+    assert d.pick_owner(5, exclude=(1,)) == (3, "dram")
+    assert d.pick_owner(5, among=(2,)) == (2, "ssd")
+    assert d.pick_owner(5, among=()) is None
+    with pytest.raises(ValueError, match="tier"):
+        d.register(5, 1, "tape")
+
+
+def test_best_ssd_extension_single_source_run():
+    d = GlobalBlockDirectory()
+    for k in (0, 1, 2):
+        d.register(k, "a", "ssd")
+    d.register(0, "b", "ssd")
+    d.register(3, "b", "ssd")
+    k, node = d.best_ssd_extension([0, 1, 2, 3, 4], start=0)
+    assert (k, node) == (3, "a")        # the longest single-node run wins
+    assert d.best_ssd_extension([0, 1, 2], start=0,
+                                exclude={"a", "b"}) == (0, None)
+    assert d.best_ssd_extension([9], start=0) == (0, None)
+    assert d.best_ssd_extension([0], start=5) == (0, None)
+
+
+# ---------------------------------------------------------------------------
+# property tests: directory vs a reference model, and vs a bound pool
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(0, 2)), min_size=0, max_size=60))
+def test_directory_matches_reference_model(ops):
+    """register/unregister/drop interleavings vs a dict-of-dicts model:
+    at-most-once per (node, key), and lookups never name a dropped node."""
+    d = GlobalBlockDirectory()
+    model: dict = {}
+    for op, key, node in ops:
+        if op == 0:
+            d.register(key, node, "dram")
+            model.setdefault(key, {})[node] = "dram"
+        elif op == 1:
+            d.register(key, node, "ssd")
+            model.setdefault(key, {})[node] = "ssd"
+        elif op == 2:
+            d.unregister(key, node)
+            model.get(key, {}).pop(node, None)
+        else:
+            d.drop_node(node)
+            for h in model.values():
+                h.pop(node, None)
+        model = {k: h for k, h in model.items() if h}
+        assert d.holders(key) == model.get(key, {})
+        for t in (None, "dram", "ssd"):
+            assert d.nodes_with(key, t) == sorted(
+                n for n, tier in model.get(key, {}).items()
+                if t is None or tier == t)
+    assert d.snapshot() == model
+
+
+@settings(max_examples=60)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 9)),
+                min_size=0, max_size=50))
+def test_bound_pool_view_stays_consistent(ops):
+    """Random demote/promote/drop/insert traffic through a bound
+    TieredCachePool: the directory's view of the node equals the pool's
+    actual residency after EVERY operation (hooks can't drift)."""
+    d = GlobalBlockDirectory()
+    pool = TieredCachePool(3, 5)
+    d.bind("n0", pool)
+    for op, key in ops:
+        if op == 0:
+            pool.insert([key])
+        elif op == 1:
+            pool.lookup([key])          # SSD hits promote
+        elif op == 2:
+            pool.discard(key)
+        else:
+            pool.insert([key, (key + 1) % 10])
+        view = {k: h["n0"] for k, h in d.snapshot().items() if "n0" in h}
+        actual = {k: "dram" for k in pool.blocks}
+        actual.update({k: "ssd" for k in pool.ssd.blocks})
+        assert view == actual
+
+
+def test_bind_seeds_existing_residency_and_chains_hooks():
+    pool = TieredCachePool(2, 4)
+    demoted, dropped = [], []
+    pool.on_demote = demoted.append
+    pool.on_drop = dropped.append
+    pool.insert([1, 2, 3])              # 1 demoted to SSD (cap 2)
+    d = GlobalBlockDirectory()
+    d.bind("x", pool)
+    assert d.holders(1) == {"x": "ssd"}
+    assert d.holders(2) == {"x": "dram"}
+    pool.insert([4])                    # demotes another block
+    assert demoted == [1, 2], "bind must preserve pre-existing hooks"
+    assert d.nodes_with(2) == ["x"] and d.holders(2) == {"x": "ssd"}
+
+
+# ---------------------------------------------------------------------------
+# the peer-SSD routing arm (simulator side)
+# ---------------------------------------------------------------------------
+
+def make_global_cluster(strategy="kvcache", ttft_slo=30.0):
+    """Two prefill instances sharing a directory: B holds chain [0..6)
+    with the head [0,1,2] demoted to its SSD (via the real demotion
+    path, so the directory learned it); A is cold and its queue is free
+    while B's is jammed — the regime where A fetching B's SSD prefix
+    beats both A-recompute and anything on B."""
+    d = GlobalBlockDirectory()
+    P = [PrefillInstance(iid=i, pool=TieredCachePool(64, 512), cost=_cost())
+         for i in range(2)]
+    # B's pool: insert 6, then cap-3 churn demotes the head
+    pb = TieredCachePool(3, 512)
+    P[1] = PrefillInstance(iid=1, pool=pb, cost=_cost())
+    for p in P:
+        d.bind(p.iid, p.pool)
+    pb.insert(range(6))                 # LRU: 0,1,2 demote to SSD
+    assert pb.tier_prefix(list(range(6))).ssd == 3
+    D = [DecodeInstance(iid=100, cost=_cost())]
+    msg = Messenger([0, 1, 100], bw=100e9)
+    for p in P:
+        msg.add_ssd_channel(p.iid, 6e9)
+    P[1].queue_free_at = 25.0           # jam B
+    c = Conductor(P, D, msg, ttft_slo=ttft_slo, tbt_slo=0.1,
+                  strategy=strategy, directory=d)
+    return c, P, D, d
+
+
+def snapshot(c, d):
+    return (
+        tuple((p.queue_free_at, p.total_busy, p.n_scheduled,
+               tuple(sorted(p.pool.blocks)),
+               tuple(sorted(getattr(p.pool, "ssd", p.pool).blocks)))
+              for p in c.P),
+        tuple((dd.pending, dd.pending_tokens, dd.n_scheduled) for dd in c.D),
+        tuple(sorted((k, l.busy_until, l.n_transfers)
+                     for k, l in c.messenger.links.items())),
+        tuple(sorted((k, l.busy_until, l.n_transfers)
+                     for k, l in c.messenger.ssd_links.items())),
+        (c.n_migrations, c.n_ssd_loads, c.n_peer_ssd_loads),
+        d.snapshot(),
+    )
+
+
+@pytest.mark.parametrize("strategy", ["kvcache", "why_not_both",
+                                      "load_aware"])
+def test_peer_ssd_arm_proposed_and_pure(strategy):
+    c, P, D, d = make_global_cluster(strategy)
+    before = snapshot(c, d)
+    arms = c.propose(_req(), now=0.0)
+    peer = [a for a in arms if a.kind == "peer_ssd"]
+    assert peer, f"{strategy} must propose the peer-SSD arm"
+    a = min(peer, key=lambda a: a.ttft)
+    assert a.instance is P[0] and a.transfer_from is P[1]
+    assert a.peer_ssd_blocks == 3 and a.prefix_blocks == 3
+    assert snapshot(c, d) == before, "propose must not mutate state"
+    arms2 = c.propose(_req(), now=0.0)
+    assert [x.ttft for x in arms] == [x.ttft for x in arms2]
+
+
+def test_peer_ssd_commit_happens_once_and_replicates():
+    c, P, D, d = make_global_cluster()
+    dec = c.schedule(_req(), now=0.0)
+    assert dec.accepted and dec.arm_kind == "peer_ssd"
+    assert dec.prefill is P[0] and dec.peer_ssd_blocks == 3
+    assert c.n_peer_ssd_loads == 1
+    # the fetched span REPLICATED into A (B keeps its SSD copy), and the
+    # directory learned A's new DRAM residency through the bound hooks
+    assert P[0].pool.prefix_len(list(range(8))) == 8
+    assert d.holders(0)[0] == "dram" and d.holders(0)[1] == "ssd"
+    # both of B's pipes carried the fetch: SSD read, then the egress hop
+    assert c.messenger.ssd_links[1].n_transfers == 1
+    assert c.messenger.links[1].n_transfers == 1
+    assert dec.ssd_load_time > 0.0
+
+
+def test_peer_ssd_reject_leaves_state_untouched():
+    c, P, D, d = make_global_cluster(ttft_slo=1e-12)
+    before = snapshot(c, d)
+    dec = c.schedule(_req(), now=0.0)
+    assert not dec.accepted and dec.reject_reason
+    assert snapshot(c, d) == before
+
+
+def test_no_directory_means_no_peer_arm():
+    c, P, D, d = make_global_cluster()
+    c.ctx.directory = None
+    assert not any(a.kind == "peer_ssd" for a in c.propose(_req(), 0.0))
+
+
+def test_cache_aware_never_proposes_peer_arms():
+    c, P, D, d = make_global_cluster("cache_aware")
+    kinds = {a.kind for a in c.propose(_req(), 0.0)}
+    assert "peer_ssd" not in kinds and "peer_fetch" not in kinds
+
+
+def test_two_node_sim_uses_peer_ssd_and_wins_ttft():
+    """End-to-end deterministic sim: doc revisits on a 2-node cluster —
+    the global pool must engage the peer-SSD arm and not lose p90 TTFT."""
+    from repro.configs.base import CacheTierSpec, ClusterSpec, get_config
+    from repro.core.simulator import MooncakeCluster
+    from repro.core.trace import TraceSpec, generate_trace
+    trace = generate_trace(TraceSpec(
+        n_requests=300, duration_ms=240_000, seed=7, frac_chat=0.25,
+        frac_doc=0.55, frac_oneshot=0.20, doc_len_mu=9.6, doc_len_sigma=0.6))
+    uniq = len({h for r in trace for h in r.hash_ids})
+    dram = max(int(uniq * 0.02), 64)
+    spec = ClusterSpec(n_prefill=2, n_decode=2, tbt_slo=0.2,
+                       cache=CacheTierSpec(dram_blocks=dram,
+                                           ssd_blocks=8 * dram))
+    res = {}
+    for gp in (False, True):
+        res[gp] = MooncakeCluster.from_spec(
+            get_config(CFG_NAME), spec.replace(global_pool=gp)).run(trace)
+    assert res[True].n_peer_ssd_loads > 0
+    assert res[False].n_peer_ssd_loads == 0
+    assert res[True].ttft_p90() <= res[False].ttft_p90()
+    assert any(r.peer_ssd_blocks for r in res[True].records)
+
+
+# ---------------------------------------------------------------------------
+# modeled-vs-measured: the store's read EMA pins simulator arm prices
+# ---------------------------------------------------------------------------
+
+def test_measured_ema_pins_costmodel_and_arm_prices():
+    cost = _cost()
+    spec_sheet = cost.ssd_load_time(1024)
+    measured = 0.004                     # 4 ms per 512-token block
+    cost.calibrate_ssd_read(measured)
+    assert cost.ssd_calibrated
+    assert cost.ssd_load_time(1024) == pytest.approx(2 * measured)
+    assert cost.ssd_load_time(1024) != pytest.approx(spec_sheet)
+    assert cost.peer_ssd_load_time(1024) == pytest.approx(
+        2 * measured + cost.transfer_time(1024))
+    with pytest.raises(ValueError):
+        cost.calibrate_ssd_read(0.0)
+
+    # an SSD-load arm priced WITHOUT a messenger channel must charge the
+    # measured value (the simulator's channel-free fallback path)
+    pool = TieredCachePool(2, 64)
+    pool.insert(range(4))                # head demoted (cap 2)
+    n_ssd = pool.tier_prefix(list(range(4))).ssd
+    assert n_ssd == 2
+    inst = PrefillInstance(iid=0, pool=pool, cost=cost)
+    ctx = PolicyContext(messenger=Messenger([], bw=100e9))
+    r = _req(n_blocks=4)
+    arm = ssd_load_arm(ctx, inst, r, 0.0)
+    assert arm.ttft == pytest.approx(
+        n_ssd * measured + cost.prefill_time(r.input_length, 4 * 512))
+    assert arm.land(0.0) == pytest.approx(n_ssd * measured)
+
+
+def test_messenger_set_ssd_bw_recalibrates_channel():
+    msg = Messenger([0], bw=100e9)
+    msg.add_ssd_channel(0, 6e9)
+    assert msg.estimate_ssd(0, 6e9, 0.0) == pytest.approx(1.0)
+    msg.set_ssd_bw(0, 3e9)               # measured: half the spec sheet
+    assert msg.estimate_ssd(0, 6e9, 0.0) == pytest.approx(2.0)
+    msg.set_ssd_bw(7, 1e9)               # unknown node: channel appears
+    assert msg.has_ssd_channel(7)
+
+
+def test_peer_ssd_messenger_pricing_composes_both_pipes():
+    msg = Messenger([0, 1], bw=10e9)
+    msg.add_ssd_channel(1, 5e9)
+    nbytes = 10e9
+    # idle: read 2s + hop 1s
+    assert msg.estimate_peer_ssd(1, nbytes, 0.0) == pytest.approx(3.0)
+    # backlogged egress that drains DURING the read costs only the excess
+    msg.links[1].busy_until = 1.5
+    assert msg.estimate_peer_ssd(1, nbytes, 0.0) == pytest.approx(3.0)
+    msg.links[1].busy_until = 2.5
+    assert msg.estimate_peer_ssd(1, nbytes, 0.0) == pytest.approx(3.5)
+    assert msg.estimate_peer_ssd(0, nbytes, 0.0) == float("inf")
+    done = msg.enqueue_peer_ssd(1, nbytes, 0.0)
+    assert done == pytest.approx(3.5)
+    assert msg.ssd_links[1].n_transfers == 1
+    assert msg.links[1].n_transfers == 1
+
+
+# ---------------------------------------------------------------------------
+# session_affinity decode policy
+# ---------------------------------------------------------------------------
+
+def test_session_affinity_registered_and_swept():
+    assert "session_affinity" in list_policies("decode")
+
+
+def test_session_affinity_sticks_within_bound_then_degrades():
+    ctx = PolicyContext(messenger=Messenger([0, 1], bw=100e9))
+    pol = get_policy("decode", "session_affinity")(ctx)
+    mk = lambda iid: DecodeInstance(iid=iid, cost=_cost())
+    d0, d1 = mk(0), mk(1)
+    turn1 = Request(req_id=0, timestamp=0, input_length=1024,
+                    output_length=64, hash_ids=[11, 12])
+    pick, tbt = pol.select(turn1, [d0, d1], 0.0)
+    home = pick
+    assert tbt == pick.predicted_tbt(1, 1024 + 64)
+    # next turn extends the chain; mildly disadvantage the home node —
+    # within the 1.5× bound the session must return home anyway
+    other = d1 if home is d0 else d0
+    home.active, home.kv_tokens = 2, 60_000.0
+    turn2 = Request(req_id=1, timestamp=0, input_length=2048,
+                    output_length=64, hash_ids=[11, 12, 13])
+    t_home = home.predicted_tbt(1, 2048 + 64)
+    t_other = other.predicted_tbt(1, 2048 + 64)
+    assert t_other < t_home <= pol.max_tbt_ratio * t_other
+    pick2, tbt2 = pol.select(turn2, [d0, d1], 0.0)
+    assert pick2 is home, "within the bound the session stays home"
+    assert tbt2 == t_home, "returned TBT stays the honest prediction"
+    # overload home past the bound: stickiness must yield to min_tbt
+    home.active, home.kv_tokens = 64, 8_000_000.0
+    turn3 = Request(req_id=2, timestamp=0, input_length=2048,
+                    output_length=64, hash_ids=[11, 12, 13, 14])
+    assert home.predicted_tbt(1, 2048 + 64) \
+        > pol.max_tbt_ratio * other.predicted_tbt(1, 2048 + 64)
+    pick3, _ = pol.select(turn3, [d0, d1], 0.0)
+    assert pick3 is other, "past the bound the session degrades to min_tbt"
+    # a fresh session is unaffected by the old one's map
+    fresh = Request(req_id=3, timestamp=0, input_length=512,
+                    output_length=32, hash_ids=[99])
+    pick4, _ = pol.select(fresh, [d0, d1], 0.0)
+    assert pick4 is other
+
+
+def test_session_affinity_map_is_bounded_lru():
+    ctx = PolicyContext(messenger=Messenger([0, 1], bw=100e9))
+    pol = get_policy("decode", "session_affinity")(ctx)
+    pol.max_tracked_blocks = 8
+    D = [DecodeInstance(iid=0, cost=_cost()),
+         DecodeInstance(iid=1, cost=_cost())]
+    for i in range(20):
+        r = Request(req_id=i, timestamp=0, input_length=512,
+                    output_length=32, hash_ids=[1000 + i])
+        pol.select(r, D, 0.0)
+    assert len(pol._home) == 8, "placement map must stay bounded"
+    assert 1019 in pol._home and 1000 not in pol._home, \
+        "eviction must be LRU (old idle sessions age out first)"
+
+
+def test_session_affinity_ignores_home_without_headroom():
+    ctx = PolicyContext(messenger=Messenger([0, 1], bw=100e9))
+    pol = get_policy("decode", "session_affinity")(ctx)
+    cost = _cost()
+    d0 = DecodeInstance(iid=0, cost=cost)
+    d1 = DecodeInstance(iid=1, cost=cost)
+    r = Request(req_id=0, timestamp=0, input_length=1024, output_length=64,
+                hash_ids=[5])
+    pick, _ = pol.select(r, [d0, d1], 0.0)
+    pick.kv_tokens = cost.decode_capacity_tokens()   # home now VRAM-full
+    r2 = Request(req_id=1, timestamp=0, input_length=1024, output_length=64,
+                 hash_ids=[5, 6])
+    pick2, _ = pol.select(r2, [d0, d1], 0.0)
+    assert pick2 is not pick
+
+
+# ---------------------------------------------------------------------------
+# failure injection: two-instance engine, every case degrades to
+# recompute with CORRECT bytes — decode bit-exact vs DRAM-only
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.transformer import init_params
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    doc = rng.integers(0, cfg.vocab_size, 2 * BLOCK_TOKENS)
+    q1 = np.concatenate([doc, rng.integers(0, cfg.vocab_size, 48)])
+    q2 = np.concatenate([doc, rng.integers(0, cfg.vocab_size, 48)])
+    return cfg, params, q1, q2
+
+
+def _decode_tokens(params, cfg, pres, n=3):
+    from repro.serving.engine import DecodeWorker
+    dw = DecodeWorker(params, cfg, max_batch=1,
+                      max_len=pres.prompt_len + n + 4)
+    dw.join(0, pres, max_new=n)
+    out = [pres.first_token]
+    while dw.n_active:
+        out.extend(tok for _rid, tok, _f in dw.step())
+    return out
+
+
+@pytest.fixture(scope="module")
+def dram_reference(setup):
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, q1, q2 = setup
+    pool = HostKVPool()
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128)
+    pw(q1)
+    return _decode_tokens(params, cfg, pw(q2))
+
+
+def _two_nodes(setup, tmp_path, *, a_dram=1, b_dram=None, ssd_mode="overlap",
+               flush=True, run_cold=True):
+    """Shared-directory A/B pair: cold prefill lands on A (cap ``a_dram``
+    demotes the doc to A's store when 1); returns (dir, pools, workers)."""
+    from repro.serving.engine import HostKVPool, PrefillWorker, connect_pools
+    cfg, params, q1, _ = setup
+    d = GlobalBlockDirectory()
+    pa = HostKVPool(capacity_blocks=a_dram, ssd_capacity_blocks=64,
+                    ssd_dir=str(tmp_path / "a"), writeback_batch=1,
+                    directory=d, node_id=0)
+    pb = HostKVPool(capacity_blocks=b_dram, ssd_capacity_blocks=64,
+                    ssd_dir=str(tmp_path / "b"), directory=d, node_id=1)
+    connect_pools([pa, pb])
+    pw_a = PrefillWorker(params, cfg, pa, prefill_chunk=128,
+                         ssd_mode=ssd_mode)
+    pw_b = PrefillWorker(params, cfg, pb, prefill_chunk=128,
+                         ssd_mode=ssd_mode)
+    if run_cold:
+        pw_a(q1)
+        if flush:
+            pa.store.flush()
+    return d, pa, pb, pw_a, pw_b
+
+
+@pytest.mark.parametrize("mode", ["blocking", "overlap"])
+def test_peer_ssd_handoff_bit_exact(setup, dram_reference, tmp_path, mode):
+    cfg, params, _, q2 = setup
+    d, pa, pb, _, pw_b = _two_nodes(setup, tmp_path / mode, ssd_mode=mode)
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 2 and pres.reused_blocks == 2
+    assert _decode_tokens(params, cfg, pres) == dram_reference
+    assert pb.peer_fetch_failures == 0 and not pb.fallback_reasons
+    # B now owns the blocks too — the directory reflects the replication
+    assert any(t == "dram" for t in d.holders(
+        next(iter(pb.data))).values())
+    pa.close()
+    pb.close()
+
+
+def test_peer_dram_handoff_bit_exact(setup, dram_reference, tmp_path):
+    cfg, params, _, q2 = setup
+    d, pa, pb, _, pw_b = _two_nodes(setup, tmp_path, a_dram=None,
+                                    flush=False)
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 2
+    assert _decode_tokens(params, cfg, pres) == dram_reference
+    assert pa.store.layer_reads == 0, "bytes came off A's DRAM, not disk"
+    pa.close()
+    pb.close()
+
+
+@pytest.mark.parametrize("mode", ["blocking", "overlap"])
+def test_dead_peer_falls_back_to_recompute(setup, dram_reference, tmp_path,
+                                           mode):
+    """Peer dies before the transfer: every read against it fails, the
+    fetch degrades to recompute with the reason recorded."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, _, pw_b = _two_nodes(setup, tmp_path / ("dead_" + mode),
+                                    ssd_mode=mode)
+    pa.kill()
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 0
+    assert _decode_tokens(params, cfg, pres) == dram_reference
+    assert pb.fallback_reasons.get("peer_unreachable", 0) >= 1
+    assert pb.peer_fetch_failures >= 1
+    pa.close()
+    pb.close()
+
+
+def test_peer_dies_mid_transfer_protocol(setup, tmp_path):
+    """Pool-level protocol: the peer dies AFTER the plan resolved to it
+    (the directory still names it) — start/finish must fail every layer
+    and report zero usable blocks, never partial garbage."""
+    from repro.serving.engine import prefix_hash_ids
+    cfg, params, q1, q2 = setup
+    d, pa, pb, _, _ = _two_nodes(setup, tmp_path)
+    hids = prefix_hash_ids(q2)[:2]
+    plan = pb.plan_fetch(hids)
+    assert plan.tiers == ["peer", "peer"]
+    pa.kill()                            # dies between plan and transfer
+    handle = pb.start_prefetch(plan)
+    n = pb.finish_fetch(plan, handle)
+    assert n == 0
+    assert pb.fallback_reasons.get("peer_unreachable", 0) >= 1
+    assert all(h not in pb.data for h in hids), "no partial installs"
+    assert all(h not in pb.meta for h in hids), "no metadata claims"
+    pa.close()
+    pb.close()
+
+
+@pytest.mark.parametrize("mode", ["blocking", "overlap"])
+def test_corrupt_remote_block_falls_back(setup, dram_reference, tmp_path,
+                                         mode):
+    """Torn/corrupt remote slots: the peer's per-layer CRCs reject the
+    bytes; the fetch truncates to recompute — wrong bytes impossible."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, _, pw_b = _two_nodes(setup, tmp_path / ("bad_" + mode),
+                                    ssd_mode=mode)
+    with open(pa.store.path, "r+b") as f:    # corrupt EVERY on-disk block
+        size = os.path.getsize(pa.store.path)
+        f.seek(pa.store._hdr_size + 11)
+        f.write(b"\xde\xad\xbe\xef")
+        if size > pa.store._slot_size:
+            f.truncate(size - pa.store._slot_size // 2)   # torn tail slot
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 0
+    assert _decode_tokens(params, cfg, pres) == dram_reference
+    assert pb.fallback_reasons, "a reject reason must be recorded"
+    assert set(pb.fallback_reasons) <= {"verify_failed", "stale_directory",
+                                        "peer_unreachable"}
+    pa.close()
+    pb.close()
+
+
+def test_stale_directory_entry_heals_and_recomputes(setup, dram_reference,
+                                                    tmp_path):
+    """Directory points at an evicted slot: A freed the block's slot but
+    the (stale) plan still names A — fetch fails with stale_directory,
+    the bogus claim is withdrawn, decode stays bit-exact."""
+    from repro.serving.engine import prefix_hash_ids
+    cfg, params, _, q2 = setup
+    d, pa, pb, _, pw_b = _two_nodes(setup, tmp_path)
+    hids = prefix_hash_ids(q2)
+    plan = pb.plan_fetch(hids[:2])
+    assert plan.has_remote
+    for h in hids[:2]:                   # slots evicted behind the plan
+        pa.store.delete(h)
+    n = pb.finish_fetch(plan)
+    assert n == 0
+    assert pb.fallback_reasons.get("stale_directory", 0) >= 1
+    assert 0 not in d.holders(hids[0]), "the stale claim must be withdrawn"
+    pres = pw_b(q2)                      # full revisit now recomputes
+    assert _decode_tokens(params, cfg, pres) == dram_reference
+    pa.close()
+    pb.close()
+
+
+def test_demote_during_fetch_still_serves_correct_bytes(setup, tmp_path):
+    """Concurrent demote-during-fetch: the plan resolved to A's DRAM, then
+    A demotes the blocks to its store mid-flight. The peer read falls
+    through DRAM→store and must deliver the SAME bytes (or fail clean —
+    never wrong bytes). Here the staged store copy serves them."""
+    from repro.serving.engine import prefix_hash_ids
+    cfg, params, q1, q2 = setup
+    d, pa, pb, _, _ = _two_nodes(setup, tmp_path, a_dram=None, flush=False)
+    hids = prefix_hash_ids(q2)[:2]
+    expected = {h: (pa.data[h][0].copy(), pa.data[h][1].copy())
+                for h in hids}
+    plan = pb.plan_fetch(hids)
+    assert plan.tiers == ["peer", "peer"]
+    for h in hids:                       # A's DRAM churns mid-fetch
+        pa.meta._evict(h)
+    assert all(h not in pa.data for h in hids)
+    handle = pb.start_prefetch(plan)
+    n = pb.finish_fetch(plan, handle)
+    assert n == 2
+    gk, gv = pb.get(hids)
+    assert np.array_equal(gk, np.concatenate(
+        [expected[h][0] for h in hids], axis=1))
+    assert np.array_equal(gv, np.concatenate(
+        [expected[h][1] for h in hids], axis=1))
+    pa.close()
+    pb.close()
+

@@ -30,6 +30,7 @@ CFG = get_config("llama2-70b")
 
 PREFILL_POLICIES = list_policies("prefill")
 ADMISSION_POLICIES = list_policies("admission")
+DECODE_POLICIES = list_policies("decode")
 
 
 def make_cluster(strategy="kvcache", n_p=3, n_d=2, *, ttft_slo=30.0,
@@ -185,6 +186,42 @@ def test_flat_pool_still_schedules(strategy):
     c, P, D = make_cluster(strategy, tiered=False)
     dec = c.schedule(req(), now=0.0)
     assert dec.accepted and dec.ssd_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# invariants over every registered decode policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dec", DECODE_POLICIES)
+def test_decode_select_is_pure_and_honest(dec):
+    """select() must not mutate cluster state, must be repeatable, must
+    only pick instances with VRAM headroom, and must return the pick's
+    honest predicted TBT (stateful policies like session_affinity may
+    keep internal memory, but repeated selection stays stable)."""
+    c, P, D = make_cluster()
+    D[0].active, D[0].kv_tokens = 2, 60_000.0
+    D[1].pending, D[1].pending_tokens = 1, 30_000.0
+    pol = get_policy("decode", dec)(c.ctx)
+    before = snapshot(c)
+    r = req()
+    tokens = r.input_length + r.output_length
+    pick1, tbt1 = pol.select(r, D, 0.0)
+    pick2, tbt2 = pol.select(r, D, 0.0)
+    assert pick1 is pick2 and tbt1 == tbt2, "selection must be stable"
+    assert snapshot(c) == before, "select must not mutate cluster state"
+    assert pick1.vram_ok(tokens)
+    assert tbt1 == pick1.predicted_tbt(1, tokens, include_pending=True)
+
+
+@pytest.mark.parametrize("dec", DECODE_POLICIES)
+def test_decode_policy_runs_end_to_end(dec):
+    reqs = generate_trace(TraceSpec(n_requests=150, duration_ms=60_000,
+                                    seed=4))
+    spec = ClusterSpec(n_prefill=2, n_decode=2, decode_policy=dec)
+    res = MooncakeCluster.from_spec(CFG, spec).run(reqs)
+    assert res.completed(), f"{dec} must complete requests"
+    for r in res.completed():
+        assert r.ttft >= 0.0
 
 
 # ---------------------------------------------------------------------------
