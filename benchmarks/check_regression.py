@@ -54,6 +54,13 @@ GATED_TABLES: dict[str, tuple[tuple[str, ...], float, float]] = {
         ("avg_ttft_s", "ttft_p90_s", "completed", "rejected", "ssd_loads",
          "peer_ssd_loads"),
         0.02, 0.01),
+    # paged substrate capacity counts are exact (seeded workload, integer
+    # page accounting); the paged_decode_engine table is wall-clock and
+    # asserts its own orderings (join/step/bit-exactness) in-process
+    "paged_decode_capacity": (
+        ("dense_fit", "paged_fit", "fit_ratio", "logical_pages",
+         "physical_pages"),
+        0.0, 0.0),
 }
 
 

@@ -29,7 +29,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_cache_policy, bench_cpp, bench_e2e,
                             bench_global_pool, bench_kernels,
-                            bench_layerwise, bench_overload, bench_policies,
+                            bench_layerwise, bench_overload,
+                            bench_paged_decode, bench_policies,
                             bench_scheduling, bench_ssd_store,
                             bench_stage_model, bench_tiered_cache)
     benches = {
@@ -37,6 +38,7 @@ def main(argv=None) -> int:
         "tiered_cache": bench_tiered_cache.main,     # DRAM+SSD hierarchy
         "ssd_store": bench_ssd_store.main,           # file-backed tier (§5.2)
         "global_pool": bench_global_pool.main,       # cross-node peer handoff
+        "paged_decode": bench_paged_decode.main,     # block-table substrate
         "stage_model": bench_stage_model.main,       # Figure 2
         "layerwise": bench_layerwise.main,           # Figure 7
         "scheduling": bench_scheduling.main,         # Figure 8

@@ -61,6 +61,15 @@ def main():
                          "instances' pools: blocks demoted on one node are "
                          "peer-fetchable from the other, and the Conductor "
                          "prices the peer-SSD arm (requires --ssd-blocks)")
+    ap.add_argument("--decode-substrate", default="paged",
+                    choices=("paged", "dense"),
+                    help="decode KV substrate: block-table pages shared "
+                         "prefill→decode (zero-copy join, prefix-sharing "
+                         "slots), or the dense per-slot arena (the "
+                         "bit-exactness oracle)")
+    ap.add_argument("--device-pages", type=int, default=0,
+                    help="device page-pool size (0 = sized from the decode "
+                         "workers' slot budget)")
     args = ap.parse_args()
 
     if args.global_pool and not args.ssd_blocks:
@@ -86,10 +95,23 @@ def main():
     if directory is not None:
         from repro.serving.engine import connect_pools
         connect_pools(pools)
+    # ONE device page pool for the whole in-process cluster (the HBM the
+    # paged substrate pages live in): prefill workers stage fresh KV into
+    # it and decode workers adopt the runs — the zero-copy §3 handoff
+    max_batch, max_len, page_tokens = 4, 2048, 64
+    page_pool = None
+    from repro.serving.engine import paged_supported
+    if args.decode_substrate == "paged" and paged_supported(cfg):
+        from repro.serving.paged_cache import DevicePagePool
+        per_seq = (max_len + page_tokens - 1) // page_tokens
+        n_pages = args.device_pages or 1 + (n_d * max_batch + n_p) * per_seq
+        page_pool = DevicePagePool(cfg, n_pages=n_pages,
+                                   page_tokens=page_tokens)
     pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256,
-                         ssd_mode=args.ssd_mode)
+                         ssd_mode=args.ssd_mode, page_pool=page_pool)
            for i in range(n_p)]
-    dws = [DecodeWorker(params, cfg, max_batch=4, max_len=2048)
+    dws = [DecodeWorker(params, cfg, max_batch=max_batch, max_len=max_len,
+                        substrate=args.decode_substrate, page_pool=page_pool)
            for _ in range(n_d)]
 
     cost = lambda: CostModel(get_config("llama2-70b"), InstanceSpec())
@@ -143,7 +165,10 @@ def main():
                     dstp.put(req.hash_ids[:hit], k, v)
                     stats["migrations"] += 1
             tokens = realize_request_tokens(req, cfg.vocab_size)
-            pres = pws[pi](tokens)
+            # session key = chain root: turns of one session extend the same
+            # chain, so the incremental hasher re-hashes only the suffix
+            pres = pws[pi](tokens,
+                           session=req.hash_ids[0] if req.hash_ids else None)
             stats["reused"] += pres.reused_blocks
             stats["computed"] += pres.prompt_len - 512 * pres.reused_blocks
             # close the modeled-vs-measured loop: feed the store's measured
@@ -181,6 +206,18 @@ def main():
           f"({512 * stats['reused']} tokens skipped), "
           f"computed {stats['computed']} tokens, "
           f"hot-spot migrations: {stats['migrations']}")
+    hashed = sum(pw.hasher.blocks_hashed for pw in pws)
+    memo = sum(pw.hasher.memo_hits for pw in pws)
+    print(f"prefix hashing: {hashed} blocks SHA'd, {memo} session memo hits")
+    if page_pool is not None:
+        ps = page_pool.stats
+        zc = sum(dw.stats["zero_copy_joins"] for dw in dws)
+        print(f"paged substrate: {page_pool.n_pages} pages "
+              f"({page_pool.page_tokens} tok), {page_pool.used_pages} held, "
+              f"{ps['pages_written']} written, {ps['shared_adoptions']} "
+              f"shared-prefix adoptions, {ps['cow_copies']} COW copies, "
+              f"{ps['registry_evictions']} registry evictions; "
+              f"{zc} zero-copy joins")
     print(f"conductor migrations (metadata): {conductor.n_migrations}")
     if directory is not None:
         d = directory.stats()

@@ -1,2 +1,4 @@
-from repro.kernels.paged_attention.ops import paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (paged_decode_attention,
+                                               paged_decode_attention_layers)
+from repro.kernels.paged_attention.ref import (paged_attention_layers_ref,
+                                               paged_attention_ref)

@@ -104,3 +104,92 @@ def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
         interpret=interpret,
     )(block_table, seq_lens, qg, k_pages, v_pages)
     return out.reshape(B, H, D)
+
+
+def _paged_kernel_layers(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page: int, scale: float,
+                         n_pages: int):
+    b = pl.program_id(1)
+    ip = pl.program_id(3)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)           # (group, D)
+    k = k_ref[0, 0, :, 0, :].astype(jnp.float32)     # (page, D)
+    v = v_ref[0, 0, :, 0, :].astype(jnp.float32)
+
+    pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos < lens_ref[b]                        # (1, page)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)                 # (group, page)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        den = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_layers(qs, k_pages, v_pages, block_table, seq_lens, *,
+                           interpret: bool = False):
+    """Batched-over-layers entry: qs (L, B, H, D) against the stacked
+    (L, P, page, KV, D) page store, one block table shared by all layers.
+    Grid (L, B, KV, n_pages) — each layer's page gather rides the same
+    scalar-prefetched table, so L layers launch as ONE kernel instead of
+    L dispatches (the microbench / layer-parallel entry; the scanned
+    decode path calls the per-layer ``paged_attention`` inside its scan).
+    """
+    L, B, H, D = qs.shape
+    _, P, page, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    group = H // KV
+    qg = qs.reshape(L, B, KV, group, D)
+
+    kernel = functools.partial(_paged_kernel_layers, page=page,
+                               scale=1.0 / (D ** 0.5), n_pages=max_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, B, KV, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, group, D),
+                         lambda l, b, h, ip, tbl, lens: (l, b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, 1, D),
+                         lambda l, b, h, ip, tbl, lens:
+                         (l, tbl[b, ip], 0, h, 0)),
+            pl.BlockSpec((1, 1, page, 1, D),
+                         lambda l, b, h, ip, tbl, lens:
+                         (l, tbl[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, group, D),
+                               lambda l, b, h, ip, tbl, lens:
+                               (l, b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, B, KV, group, D), qs.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(L, B, H, D)

@@ -3,17 +3,45 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention as _kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref as _ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention as _kernel, paged_attention_layers as _kernel_layers)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_layers_ref as _ref_layers, paged_attention_ref as _ref)
+
+
+def _kernel_ok(q_heads: int, kv_heads: int, qh2kv, window: int) -> bool:
+    """The Pallas grid packs grouped GQA only: divisible heads, no padded
+    query-head remap, full attention. Everything else takes the oracle."""
+    return qh2kv is None and window == 0 and q_heads % kv_heads == 0
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           qh2kv=None, window: int = 0,
                            use_pallas: bool = False,
                            interpret: bool | None = None):
     """q: (B, H, D) over one layer's paged KV → (B, H, D)."""
-    if not use_pallas:
-        return _ref(q, k_pages, v_pages, block_table, seq_lens)
+    if not use_pallas or not _kernel_ok(q.shape[1], k_pages.shape[2],
+                                        qh2kv, window):
+        return _ref(q, k_pages, v_pages, block_table, seq_lens,
+                    qh2kv=qh2kv, window=window)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     return _kernel(q, k_pages, v_pages, block_table, seq_lens,
                    interpret=interpret)
+
+
+def paged_decode_attention_layers(qs, k_pages, v_pages, block_table,
+                                  seq_lens, *, qh2kv=None, window: int = 0,
+                                  use_pallas: bool = False,
+                                  interpret: bool | None = None):
+    """Batched-over-layers variant: qs (L, B, H, D) over the stacked
+    (L, P, page, KV, D) store → (L, B, H, D). One kernel launch covers
+    every layer (microbench / layer-parallel callers)."""
+    if not use_pallas or not _kernel_ok(qs.shape[2], k_pages.shape[3],
+                                        qh2kv, window):
+        return _ref_layers(qs, k_pages, v_pages, block_table, seq_lens,
+                           qh2kv=qh2kv, window=window)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _kernel_layers(qs, k_pages, v_pages, block_table, seq_lens,
+                          interpret=interpret)

@@ -1,10 +1,46 @@
-"""Pure-jnp oracle for paged decode attention."""
+"""Pure-jnp oracle for paged decode attention.
+
+The numerics deliberately mirror ``models.layers._attend``'s decode path
+(fp32 logits, -1e30 masking, fp32 softmax, probabilities cast to the
+value dtype before the PV contraction) so the engine's paged substrate is
+bit-comparable with the dense arena it replaces: the only difference
+between the two is WHERE the KV bytes live, never how they are reduced.
+
+Two head layouts:
+
+* grouped GQA (``qh2kv is None``): requires H % KV == 0; query head h
+  attends kv head h // (H // KV) — the layout the Pallas kernel packs.
+* explicit map (``qh2kv`` = (H,) int32): arbitrary query-head → kv-head
+  assignment, covering archs whose padded query heads are not divisible
+  by KV (smollm 16→5); mirrors the dense path's ``qh2kv_map`` expansion.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import nn
+
+NEG_INF = -1e30
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
+def _linearise(pages, block_table):
+    """(P, page, KV, D) pages + (B, max_pages) table -> (B, S, KV, D)."""
+    g = pages[block_table]              # (B, max_pages, page, KV, D)
+    B = g.shape[0]
+    return g.reshape(B, g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def _valid_mask(S, seq_lens, window):
+    """Mirror ``decode_attention``'s mask: slots < len valid; a linear
+    cache of a windowed arch masks slots older than the window."""
+    clen = jnp.asarray(seq_lens)[:, None]            # (B, 1)
+    valid = jnp.arange(S)[None, :] < jnp.minimum(clen, S)
+    if window and S > window:
+        valid &= jnp.arange(S)[None, :] >= clen - window
+    return valid                                      # (B, S)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
+                        qh2kv=None, window: int = 0):
     """One-token GQA attention over paged KV.
 
     q:          (B, H, D) — the current token's queries
@@ -12,27 +48,48 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
     v_pages:    (P, page, KV, D)
     block_table:(B, max_pages) int32 page ids (0 = null page)
     seq_lens:   (B,) int32 valid tokens per sequence
+    qh2kv:      optional (H,) query-head → kv-head map (padded GQA)
+    window:     sliding-window size (0 = full attention)
     Returns (B, H, D) in q.dtype.
     """
     B, H, D = q.shape
-    P, page, KV, _ = k_pages.shape
-    max_pages = block_table.shape[1]
-    group = H // KV
+    KV = k_pages.shape[2]
+    scale = 1.0 / (D ** 0.5)
 
-    k = k_pages[block_table]         # (B, max_pages, page, KV, D)
-    v = v_pages[block_table]
-    S = max_pages * page
-    k = k.transpose(0, 3, 1, 2, 4).reshape(B, KV, S, D)
-    v = v.transpose(0, 3, 1, 2, 4).reshape(B, KV, S, D)
+    k = _linearise(k_pages, block_table)              # (B, S, KV, D)
+    v = _linearise(v_pages, block_table)
+    S = k.shape[1]
+    valid = _valid_mask(S, seq_lens, window)
 
-    qg = q.reshape(B, KV, group, D).astype(jnp.float32)
-    logits = jnp.einsum("bkgd,bksd->bkgs", qg,
-                        k.astype(jnp.float32)) / (D ** 0.5)
-    valid = jnp.arange(S)[None, :] < seq_lens[:, None]       # (B, S)
-    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
-    m = logits.max(-1, keepdims=True)
-    p = jnp.exp(logits - m)
-    p = jnp.where(jnp.isfinite(logits), p, 0.0)
-    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
-    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
-    return out.reshape(B, H, D).astype(q.dtype)
+    if qh2kv is not None:                             # expanded-head path
+        k = jnp.take(k, qh2kv, axis=2)                # (B, S, H, D)
+        v = jnp.take(v, qh2kv, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q[:, None], k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+        probs = nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+        return out[:, 0]
+
+    assert H % KV == 0, (
+        f"H={H} not divisible by KV={KV}: pass qh2kv for padded GQA")
+    g = H // KV
+    qg = q.reshape(B, 1, KV, g, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, 1, H, D)[:, 0]
+
+
+def paged_attention_layers_ref(qs, k_pages, v_pages, block_table, seq_lens,
+                               *, qh2kv=None, window: int = 0):
+    """Batched-over-layers oracle: qs (L, B, H, D) against the stacked
+    (L, P, page, KV, D) page store; one block table / seq_lens shared by
+    every layer. Returns (L, B, H, D)."""
+    import jax
+    return jax.vmap(
+        lambda q, kp, vp: paged_attention_ref(
+            q, kp, vp, block_table, seq_lens, qh2kv=qh2kv, window=window)
+    )(qs, k_pages, v_pages)

@@ -42,6 +42,12 @@ def main(argv=None) -> int:
                          "GlobalBlockDirectory and local misses resolve to "
                          "cross-node fetches — the Figure-3 global pool "
                          "across launcher runs")
+    ap.add_argument("--decode-substrate", default="paged",
+                    choices=("paged", "dense"),
+                    help="decode KV substrate: block-table pages with "
+                         "zero-copy prefill→decode handoff and refcounted "
+                         "prefix sharing (default), or the dense per-slot "
+                         "arena (bit-exactness oracle)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -71,8 +77,16 @@ def main(argv=None) -> int:
                       directory=directory, node_id=0)
     if peer_pool is not None:
         pool.add_peer(1, peer_pool)
+    max_len = 2048
+    page_pool = None
+    from repro.serving.engine import paged_supported
+    if args.decode_substrate == "paged" and paged_supported(cfg):
+        from repro.serving.paged_cache import DevicePagePool
+        per_seq = max_len // 64
+        page_pool = DevicePagePool(
+            cfg, n_pages=1 + (args.max_batch + 1) * per_seq, page_tokens=64)
     pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
-                       ssd_mode=args.ssd_mode)
+                       ssd_mode=args.ssd_mode, page_pool=page_pool)
 
     if args.trace:
         reqs = load_trace(args.trace, limit=args.requests)
@@ -86,8 +100,8 @@ def main(argv=None) -> int:
         r.input_length = min(r.input_length, 1536)
         r.hash_ids = r.hash_ids[:max(r.input_length // 512, 1)]
 
-    max_len = 2048
-    dw = DecodeWorker(params, cfg, max_batch=args.max_batch, max_len=max_len)
+    dw = DecodeWorker(params, cfg, max_batch=args.max_batch, max_len=max_len,
+                      substrate=args.decode_substrate, page_pool=page_pool)
     t0 = time.time()
     done, total_new = 0, 0
     queue = list(reqs)
@@ -96,7 +110,7 @@ def main(argv=None) -> int:
         while queue and dw.n_active < args.max_batch:
             r = queue.pop(0)
             toks = realize_request_tokens(r, cfg.vocab_size)
-            pres = pw(toks)
+            pres = pw(toks, session=r.hash_ids[0] if r.hash_ids else None)
             dw.join(r.req_id, pres, max_new=min(args.max_new,
                                                 max(r.output_length, 2)))
             outputs[r.req_id] = [pres.first_token]
@@ -115,6 +129,14 @@ def main(argv=None) -> int:
           f"pool: {pool.n_blocks} blocks resident, "
           f"prefix reuse {st['reused_blocks']} blocks "
           f"({512 * st['reused_blocks']} tokens skipped)")
+    if page_pool is not None:
+        ps = page_pool.stats
+        print(f"paged substrate: {page_pool.used_pages}/{page_pool.n_pages} "
+              f"pages held, {ps['pages_written']} written, "
+              f"{ps['shared_adoptions']} shared-prefix adoptions, "
+              f"{ps['cow_copies']} COW, {dw.stats['zero_copy_joins']} "
+              f"zero-copy joins; hasher: {pw.hasher.blocks_hashed} blocks "
+              f"SHA'd, {pw.hasher.memo_hits} memo hits")
     if pool.store is not None:
         s = pool.store.stats()
         print(f"ssd store: {s['blocks']} blocks on disk "

@@ -351,6 +351,68 @@ def attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     return y, (k_cache, v_cache)
 
 
+def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
+                          k_pages, v_pages, block_table, seq_lens,
+                          use_pallas: bool = False,
+                          window_override: Optional[int] = None):
+    """Decode attention sub-block over one layer's PAGED KV store (§3
+    step 4 on the block-table substrate): norm → qkv → rope at each
+    slot's depth → scatter the new token's K/V into the slot's current
+    tail page → attend through the block table (``paged_decode_attention``
+    — Pallas on TPU, the dense-numerics oracle here).
+
+    x: (B, 1, D); k_pages/v_pages: (P, page, KV, Dh);
+    block_table: (B, max_pages) int32; seq_lens: (B,) tokens already
+    written per slot (the new token lands at that position, exactly like
+    the dense path's ``cache_len``). Returns (y, (k_pages, v_pages)).
+
+    The engine guarantees host-side that every active slot's write-target
+    page is exclusively owned (copy-on-write happens before the step), so
+    the scatter never mutates a page another slot can read.
+    """
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    B, S, _ = x.shape
+    assert S == 1, "paged decode is one token per slot per step"
+    Hp, KV, Dh = cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if window_override is None else window_override
+    grouped = GROUPED_ATTN and Hp == cfg.n_heads and Hp % KV == 0
+    qh2kv = None if grouped else qh2kv_map(cfg.n_heads, KV, Hp)
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, Hp, Dh)
+    if cfg.attn_bias:
+        q = q + p["bq"].reshape(1, 1, Hp, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k = (h @ p["wk"]).reshape(B, S, KV, Dh)
+    v = (h @ p["wv"]).reshape(B, S, KV, Dh)
+    if cfg.attn_bias:
+        k = k + p["bk"].reshape(1, 1, KV, Dh)
+        v = v + p["bv"].reshape(1, 1, KV, Dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    pos = jnp.asarray(seq_lens)
+    positions = jnp.broadcast_to(pos[:, None], (B, S))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # scatter the new K/V row into each slot's tail page (inactive slots
+    # target the null page 0 — always masked, never read)
+    pt = k_pages.shape[1]
+    pidx = jnp.clip(pos // pt, 0, block_table.shape[1] - 1)
+    pids = block_table[jnp.arange(B), pidx]
+    offs = pos % pt
+    k_pages = k_pages.at[pids, offs].set(k[:, 0])
+    v_pages = v_pages.at[pids, offs].set(v[:, 0])
+
+    o = paged_decode_attention(q[:, 0], k_pages, v_pages, block_table,
+                               pos + 1, qh2kv=qh2kv, window=window,
+                               use_pallas=use_pallas)
+    y = o.reshape(B, S, Hp * Dh) @ p["wo"]
+    return y, (k_pages, v_pages)
+
+
 # ---------------------------------------------------------------------------
 # dense MLP
 # ---------------------------------------------------------------------------

@@ -563,3 +563,47 @@ def decode_step(params, tokens, caches: Caches, cfg: ModelConfig,
                  enc_kv=caches.enc_kv,
                  length=caches.length + tokens.shape[1])
     return logits, new
+
+
+def decode_step_paged(params, tokens, k_pages, v_pages, block_table,
+                      seq_lens, cfg: ModelConfig, dist: Dist = NO_DIST, *,
+                      use_pallas: bool = False, window_override=None):
+    """One continuous-batching decode iteration over the PAGED substrate.
+
+    tokens: (B, 1); k_pages/v_pages: (L, P, page, KV, Dh) — the shared
+    device page store, stacked on the layer axis so it rides the layer
+    scan as xs exactly like the dense arena does; block_table: (B,
+    max_pages) int32 (0-padded with the null page); seq_lens: (B,) tokens
+    already written per slot. Returns (logits (B, 1, V), k_pages,
+    v_pages) — the block table and lengths are host-managed by the
+    engine (growth, COW, slot free), not traced state.
+
+    Supports uniform attention stacks only (the engine's serving archs);
+    hybrid/SSM/encoder models keep the dense path.
+    """
+    from repro.models.layers import paged_attention_block
+    assert cfg.attention_layers == cfg.n_layers and not cfg.encoder_layers, \
+        "paged decode supports uniform attention stacks"
+    use_moe = cfg.moe is not None and cfg.moe.every == 1
+    x = _embed(params, tokens, cfg)
+    x = dist.constrain(x, dist.residual_spec(x.shape[1]))
+    p_f = params["moe"] if use_moe else params["mlp"]
+
+    def block(carry, xs_):
+        x, aux = carry
+        p_a, p_fl, kp, vp = xs_
+        y, (kp, vp) = paged_attention_block(
+            x, p_a, cfg, dist, k_pages=kp, v_pages=vp,
+            block_table=block_table, seq_lens=seq_lens,
+            use_pallas=use_pallas, window_override=window_override)
+        x = x + y
+        y, a = _ffn(x, p_fl, p_fl, cfg, dist, use_moe)
+        x = x + y
+        x = dist.constrain(x, dist.residual_spec(x.shape[1]))
+        return (x, aux + a), (kp, vp)
+
+    (x, aux), (kps, vps) = jax.lax.scan(
+        block, (x, 0.0), (params["attn"], p_f, k_pages, v_pages))
+    h = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = _logits_at(params, h, cfg)
+    return logits, kps, vps

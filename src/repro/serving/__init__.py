@@ -3,9 +3,9 @@ continuous-batching engines, CPP pipelined prefill (§5.1), layer-wise
 prefill semantics (§5.2)."""
 from repro.serving.engine import (DecodeWorker, FetchPlan, HostKVPool,
                                   PeerSource, PrefillResult, PrefillWorker,
-                                  StateCheckpointWorker, connect_pools,
-                                  prefix_hash_ids)
+                                  PrefixHasher, StateCheckpointWorker,
+                                  connect_pools, prefix_hash_ids, stage_run)
 from repro.serving.layerwise import occupation_cost, schedule
-from repro.serving.paged_cache import (PagedKVCache, assign_seq, free_seq,
-                                       gather_kv, grow_seq, init_paged_cache,
-                                       write_kv)
+from repro.serving.paged_cache import (DevicePagePool, PagedKVCache,
+                                       assign_seq, free_seq, gather_kv,
+                                       grow_seq, init_paged_cache, write_kv)

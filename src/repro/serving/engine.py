@@ -26,7 +26,8 @@ from repro.core.cache import CachePool
 from repro.core.trace import BLOCK_TOKENS
 from repro.models.layers import DTYPE
 from repro.models.transformer import (Caches, KVCache, decode_step,
-                                      init_caches, prefill)
+                                      decode_step_paged, init_caches,
+                                      prefill)
 
 
 def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
@@ -39,6 +40,62 @@ def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
         h.update(np.ascontiguousarray(tokens[i * block:(i + 1) * block]).tobytes())
         out.append(int.from_bytes(h.copy().digest()[:8], "little"))
     return out
+
+
+class PrefixHasher:
+    """Incremental chained block hasher with a per-session memo.
+
+    ``prefix_hash_ids`` recomputes the full SHA-256 chain per request —
+    O(prompt) crypto hashing even when turn t+1 of a session merely
+    extends turn t's prompt. The memo keeps, per session, the hasher
+    STATE after the deepest previously-hashed block plus the exact tokens
+    it commits to; a revisit verifies the prefix with one array compare
+    (memcmp speed, ~an order of magnitude cheaper than SHA-256) and
+    SHA-hashes only the suffix blocks. A diverging prefix falls back to
+    the full chain and replaces the memo — ids are always identical to
+    ``prefix_hash_ids``.
+    """
+
+    def __init__(self, block: int = BLOCK_TOKENS,
+                 capacity_sessions: int = 256) -> None:
+        from collections import OrderedDict
+        self.block = block
+        self.capacity = capacity_sessions
+        # session -> (committed tokens, ids, sha256 state after deepest
+        # block), LRU-bounded: each entry pins O(prompt) host tokens
+        self._memo: "OrderedDict" = OrderedDict()
+        self.blocks_hashed = 0
+        self.memo_hits = 0
+
+    def hash_ids(self, tokens: np.ndarray, session=None) -> list[int]:
+        block = self.block
+        n_full = len(tokens) // block
+        out: list[int] = []
+        h = hashlib.sha256()
+        start = 0
+        if session is not None:
+            m = self._memo.get(session)
+            if m is not None:
+                mtok, mids, mh = m
+                d = len(mids)
+                if d <= n_full and np.array_equal(
+                        np.asarray(tokens[:d * block]), mtok):
+                    out = list(mids)
+                    h = mh.copy()
+                    start = d
+                    self.memo_hits += 1
+        for i in range(start, n_full):
+            h.update(np.ascontiguousarray(
+                tokens[i * block:(i + 1) * block]).tobytes())
+            out.append(int.from_bytes(h.copy().digest()[:8], "little"))
+        self.blocks_hashed += n_full - start
+        if session is not None and n_full:
+            self._memo[session] = (
+                np.asarray(tokens[:n_full * block]).copy(), list(out), h)
+            self._memo.move_to_end(session)
+            while len(self._memo) > self.capacity:
+                self._memo.popitem(last=False)
+        return out
 
 
 @dataclass
@@ -477,6 +534,68 @@ class PrefillResult:
     ssd_blocks: int = 0         # prefix blocks loaded off the SSD store
     peer_blocks: int = 0        # prefix blocks fetched off a PEER's pool
     overlapped: bool = False    # head recompute ∥ tail SSD load was used
+    skipped_blocks: int = 0     # DRAM blocks chunk-skipped mid-head-span
+    hash_ids: Optional[list] = None   # the request's prefix chain
+    pages: Optional[list] = None      # staged device page run (paged substrate)
+    page_pool: Optional[object] = None  # the DevicePagePool holding ``pages``
+    page_gens: Optional[list] = None  # allocation generations at staging time
+    _pages_adopted: bool = False      # first join takes the staging reference
+
+    def release_pages(self) -> None:
+        """Drop the staging reference of a result that will never be
+        joined (e.g. the request was cancelled after prefill). The first
+        ``DecodeWorker.join`` normally consumes it; calling this after a
+        join is a no-op."""
+        if self.pages is not None and self.page_pool is not None \
+                and not self._pages_adopted:
+            self.page_pool.release(self.pages)
+            self._pages_adopted = True
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """The paged decode substrate covers uniform attention-only stacks;
+    hybrid/SSM/encoder archs keep the dense arena. Drivers use this to
+    decide whether to build a ``DevicePagePool`` at all (staging into a
+    pool no decode worker will ever adopt from just leaks pages)."""
+    return cfg.attention_layers == cfg.n_layers and not cfg.encoder_layers
+
+
+def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
+              v_full: np.ndarray, S: int) -> Optional[list[int]]:
+    """Stage a request's KV into a ``DevicePagePool`` page run (§3 step 2:
+    fresh pages written layer-stacked; step 1: registered prefix runs
+    ADOPTED — the physical pages are shared with every slot on the same
+    hash chain, no bytes move). Full 512-token blocks register under
+    their chain hash for later requests; the partial tail gets private
+    pages. The caller owns one reference per returned page. Returns None
+    (nothing held) if the pool can't fit the run even after evicting
+    registry-only runs."""
+    if pool is None:
+        return None
+    B = BLOCK_TOKENS
+    n_full = len(hash_ids)
+    held: list[int] = []
+    try:
+        adopted, pages = pool.adopt_chain(hash_ids)
+        held = list(pages)
+        for i in range(adopted, n_full):
+            run = pool.alloc(pool.pages_per_block)
+            held += run
+            pool.write_run(run, k_full[:, i * B:(i + 1) * B],
+                           v_full[:, i * B:(i + 1) * B])
+            pool.register_block(hash_ids[i], run)
+            pages += run
+        tail = S - n_full * B
+        if tail > 0:
+            run = pool.alloc(pool.pages_for(tail))
+            held += run
+            pool.write_run(run, k_full[:, n_full * B:S],
+                           v_full[:, n_full * B:S])
+            pages += run
+        return pages
+    except MemoryError:
+        pool.release(held)
+        return None
 
 
 class PrefillWorker:
@@ -494,20 +613,24 @@ class PrefillWorker:
     """
 
     def __init__(self, params, cfg: ModelConfig, pool: HostKVPool, *,
-                 prefill_chunk: int = 1024, ssd_mode: str = "overlap") -> None:
+                 prefill_chunk: int = 1024, ssd_mode: str = "overlap",
+                 page_pool=None) -> None:
         assert ssd_mode in ("blocking", "overlap"), ssd_mode
         self.params = params
         self.cfg = cfg
         self.pool = pool
         self.chunk = prefill_chunk
         self.ssd_mode = ssd_mode
+        self.page_pool = page_pool      # shared DevicePagePool (paged handoff)
+        self.hasher = PrefixHasher()
         self._prefill = jax.jit(
             lambda p, t, off: prefill(p, t, cfg, q_offset=off))
         self._extend = jax.jit(
             lambda p, t, c: decode_step(p, t, c, cfg))
         self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0,
                           ssd_loaded_blocks=0, overlapped_requests=0,
-                          fallback_blocks=0, peer_blocks=0)
+                          fallback_blocks=0, peer_blocks=0,
+                          skipped_blocks=0, page_oom=0)
         self._t_block_ema: Optional[float] = None  # measured s / 512-tok blk
 
     def _note_compute(self, tokens: int, dt: float) -> None:
@@ -517,12 +640,28 @@ class PrefillWorker:
         self._t_block_ema = per_block if self._t_block_ema is None \
             else 0.7 * self._t_block_ema + 0.3 * per_block
 
-    def __call__(self, tokens: np.ndarray) -> PrefillResult:
+    def _stage(self, hash_ids, k_full, v_full, S) -> Optional[list[int]]:
+        pages = stage_run(self.page_pool, hash_ids, k_full, v_full, S)
+        if pages is None and self.page_pool is not None:
+            self.stats["page_oom"] += 1
+        return pages
+
+    def _stage_result(self, hash_ids, k_full, v_full, S) -> dict:
+        """PrefillResult kwargs for the staged page run (+ generation
+        snapshot so late re-joins can detect recycled pages)."""
+        pages = self._stage(hash_ids, k_full, v_full, S)
+        return dict(
+            hash_ids=hash_ids, pages=pages, page_pool=self.page_pool,
+            page_gens=None if pages is None
+            else self.page_pool.gens_of(pages))
+
+    def __call__(self, tokens: np.ndarray,
+                 session=None) -> PrefillResult:
         cfg = self.cfg
         assert cfg.attention_layers == cfg.n_layers, \
             "PrefillWorker KV path supports uniform attention stacks"
         S = len(tokens)
-        hash_ids = prefix_hash_ids(tokens)
+        hash_ids = self.hasher.hash_ids(tokens, session=session)
 
         if self.ssd_mode == "overlap" and self.pool.prefetcher is not None:
             plan = self.pool.plan_fetch(hash_ids)
@@ -586,7 +725,8 @@ class PrefillWorker:
         self.stats["peer_blocks"] += n_peer
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=n_hit,
-                             new_blocks=n_total - n_hit, peer_blocks=n_peer)
+                             new_blocks=n_total - n_hit, peer_blocks=n_peer,
+                             **self._stage_result(hash_ids, k_full, v_full, S))
 
     def _prefill_overlapped(self, tokens: np.ndarray, hash_ids: list[int],
                             plan: FetchPlan) -> PrefillResult:
@@ -628,15 +768,43 @@ class PrefillWorker:
                                      length=jnp.asarray(d0 * B, jnp.int32))
             pos = d0 * B
 
-        # head recompute, overlapping the prefetch thread's layer loads
+        # head assembly, overlapping the prefetch thread's layer loads:
+        # DRAM blocks interleaved inside [d0, s) are chunk-SKIPPED — their
+        # KV is set straight into the arena from the pool — and only the
+        # non-resident runs between them recompute (incremental prefill
+        # resumes after each assembled run, so attention still sees every
+        # prior token)
         logits = None
+        head_tokens = 0                 # tokens actually recomputed
         t0 = time.monotonic()
-        for lo in range(pos, s * B, self.chunk):
-            hi = min(lo + self.chunk, s * B)
-            logits, caches = self._extend(self.params, t[:, lo:hi], caches)
+        i = d0
+        while i < s:
+            if plan.tiers[i] == "dram":
+                j = i
+                while j < s and plan.tiers[j] == "dram":
+                    j += 1
+                k_np, v_np = self.pool.get(hash_ids[i:j])
+                self.pool.meta.touch_keys(hash_ids[i:j])
+                kv = caches.kv
+                kv = KVCache(
+                    k=kv.k.at[:, 0, i * B:j * B].set(jnp.asarray(k_np)),
+                    v=kv.v.at[:, 0, i * B:j * B].set(jnp.asarray(v_np)))
+                caches = caches._replace(
+                    kv=kv, length=jnp.asarray(j * B, jnp.int32))
+            else:
+                j = i
+                while j < s and plan.tiers[j] != "dram":
+                    j += 1
+                for lo in range(i * B, j * B, self.chunk):
+                    hi = min(lo + self.chunk, j * B)
+                    logits, caches = self._extend(self.params, t[:, lo:hi],
+                                                  caches)
+                head_tokens += (j - i) * B
+            i = j
         if logits is not None:
             jax.block_until_ready(logits)
         dt_head = time.monotonic() - t0
+        n_skip = ov.head_skipped
 
         # §5.2 barrier: verify + install the loaded tail
         n_tail = self.pool.finish_fetch(plan, handle, from_block=s)
@@ -650,7 +818,11 @@ class PrefillWorker:
             caches = caches._replace(kv=kv,
                                      length=jnp.asarray(usable * B, jnp.int32))
 
-        # uncached suffix (+ any blocks lost to verification failures)
+        # uncached suffix (+ any blocks lost to verification failures).
+        # Always non-empty — the caller truncates full-hit plans so that
+        # n_resident·B < S — which guarantees the logits below come from
+        # position S-1 even when the head walk ended in a DRAM assembly.
+        assert usable * B < S, (usable, S)
         t1 = time.monotonic()
         for lo in range(usable * B, S, self.chunk):
             hi = min(lo + self.chunk, S)
@@ -659,21 +831,30 @@ class PrefillWorker:
         k_full = np.asarray(caches.kv.k[:, 0])
         v_full = np.asarray(caches.kv.v[:, 0])
         dt_suffix = time.monotonic() - t1
-        self._note_compute((s * B - pos) + (S - usable * B),
+        self._note_compute(head_tokens + (S - usable * B),
                            dt_head + dt_suffix)
 
-        # store-back: the recomputed head span and the fresh suffix blocks
+        # store-back: the RECOMPUTED head runs (chunk-skipped DRAM blocks
+        # are already pool-resident) and the fresh suffix blocks
         n_total = len(hash_ids)
-        if s > d0:
-            sl = slice(d0 * B, s * B)
-            self.pool.put(hash_ids[d0:s], k_full[:, sl], v_full[:, sl],
-                          start_pos=d0)
+        i = d0
+        while i < s:
+            if plan.tiers[i] == "dram":
+                i += 1
+                continue
+            j = i
+            while j < s and plan.tiers[j] != "dram":
+                j += 1
+            sl = slice(i * B, j * B)
+            self.pool.put(hash_ids[i:j], k_full[:, sl], v_full[:, sl],
+                          start_pos=i)
+            i = j
         if n_total > usable:
             sl = slice(usable * B, n_total * B)
             self.pool.put(hash_ids[usable:n_total], k_full[:, sl],
                           v_full[:, sl], start_pos=usable)
 
-        reused = d0 + n_tail
+        reused = d0 + n_skip + n_tail
         n_peer = self.pool.peer_blocks_fetched - peer0
         self.stats["reused_blocks"] += reused
         self.stats["computed_tokens"] += S - reused * B
@@ -682,11 +863,13 @@ class PrefillWorker:
         self.stats["overlapped_requests"] += 1
         self.stats["fallback_blocks"] += n - usable
         self.stats["peer_blocks"] += n_peer
+        self.stats["skipped_blocks"] += n_skip
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=reused,
                              new_blocks=len(hash_ids) - reused,
                              ssd_blocks=n_tail, peer_blocks=n_peer,
-                             overlapped=True)
+                             overlapped=True, skipped_blocks=n_skip,
+                             **self._stage_result(hash_ids, k_full, v_full, S))
 
 
 @dataclass
@@ -704,52 +887,196 @@ class _Slot:
 class DecodeWorker:
     """§3 step 4: continuous batching with per-slot cache depths.
 
-    Fixed ``max_batch`` slots share a dense (B, max_len) KV arena; slots
-    join/leave at iteration boundaries. ``step()`` is one iteration: every
-    active slot emits one token.
+    Two substrates share the slot/iteration machinery:
+
+    * ``substrate="paged"`` (default): slots attend a block-table paged
+      KV store (``DevicePagePool`` — shared with the prefill worker(s),
+      the process stand-in for a node's HBM). ``join()`` ADOPTS the
+      request's staged page run into the slot's block table — a host-side
+      list splice, no full-depth device copy — and slots whose chains
+      share a prefix share physical pages (refcounted; copy-on-write if a
+      slot must append into a shared partial tail page). ``step()`` runs
+      ``paged_decode_attention`` per layer over the live page span (the
+      table is sliced to the deepest active slot, padded to a power of
+      two to bound recompiles) instead of dense attention over
+      ``max_len``.
+    * ``substrate="dense"``: the original (L, B, max_len) arena — kept as
+      the bit-exactness oracle and for archs the paged path doesn't cover
+      (hybrid/SSM/encoder stacks).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int,
-                 max_len: int) -> None:
+                 max_len: int, substrate: str = "paged",
+                 page_pool=None, page_tokens: int = 64,
+                 use_pallas: bool = False) -> None:
+        if substrate == "paged" and not paged_supported(cfg):
+            substrate = "dense"     # non-uniform stacks keep the arena
+        assert substrate in ("paged", "dense"), substrate
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
-        self.caches = init_caches(cfg, max_batch, max_len)
-        self.caches = self.caches._replace(
-            length=jnp.zeros((max_batch,), jnp.int32))
+        self.substrate = substrate
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self._step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+        self.stats = dict(zero_copy_joins=0, staged_joins=0, steps=0)
+        if substrate == "paged":
+            from repro.serving.paged_cache import DevicePagePool
+            if page_pool is None:
+                # standalone sizing: every slot at full depth + one extra
+                # sequence of staging headroom (registry runs are evictable
+                # on top, so this bound holds under sharing too)
+                per_seq = (max_len + page_tokens - 1) // page_tokens
+                page_pool = DevicePagePool(
+                    cfg, n_pages=1 + (max_batch + 1) * per_seq,
+                    page_tokens=page_tokens)
+            self.page_pool = page_pool
+            pt = page_pool.page_tokens
+            self.max_pages = (max_len + pt - 1) // pt
+            self.block_table = np.zeros((max_batch, self.max_pages), np.int32)
+            self.seq_lens = np.zeros(max_batch, np.int32)
+            self.n_pages_slot = np.zeros(max_batch, np.int32)
+            self.caches = None
+            self._step_paged = jax.jit(
+                lambda p, t, kp, vp, tbl, lens: decode_step_paged(
+                    p, t, kp, vp, tbl, lens, cfg, use_pallas=use_pallas))
+        else:
+            self.page_pool = None
+            self.caches = init_caches(cfg, max_batch, max_len)
+            self.caches = self.caches._replace(
+                length=jnp.zeros((max_batch,), jnp.int32))
+            self._step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
 
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    # ---- paged-substrate plumbing --------------------------------------
+    def _adopt_pages(self, pres: PrefillResult) -> list[int]:
+        """Take a reference on the request's page run: zero-copy when the
+        prefill staged into OUR pool (first join consumes the staging
+        reference; later joins of the same result share the run —
+        n-best/beam fan-out), else stage a copy from the dense KV."""
+        pp = self.page_pool
+        if pres.pages is not None and pres.page_pool is pp:
+            pages = list(pres.pages)
+            if pres._pages_adopted:
+                # late share (n-best): the staging reference is gone, so the
+                # run is only alive through earlier joiners — verify no page
+                # was freed + recycled in between (never retain someone
+                # else's KV)
+                if pp.gens_of(pages) != pres.page_gens:
+                    raise RuntimeError(
+                        "stale page run: this PrefillResult's pages were "
+                        "released (its joined slots finished) and re-used; "
+                        "re-prefill instead of re-joining")
+                pp.retain(pages)
+            else:
+                pres._pages_adopted = True
+            self.stats["zero_copy_joins"] += 1
+            return pages
+        hash_ids = pres.hash_ids if pres.hash_ids is not None else []
+        pages = stage_run(pp, hash_ids, pres.kv_k, pres.kv_v,
+                          pres.prompt_len)
+        if pages is None:
+            raise MemoryError("device page pool cannot hold the request")
+        self.stats["staged_joins"] += 1
+        return pages
+
+    def _free_slot_pages(self, slot: int) -> None:
+        n = int(self.n_pages_slot[slot])
+        self.page_pool.release([int(p) for p in self.block_table[slot, :n]])
+        self.block_table[slot] = 0
+        self.seq_lens[slot] = 0
+        self.n_pages_slot[slot] = 0
+
     def join(self, req_id: int, pres: PrefillResult, max_new: int) -> int:
-        """Load a prefilled request's KV into a free slot (§3: 'load the
-        KVCache and add the request to the continuous batching process')."""
+        """Add a prefilled request to the continuous batch (§3: 'load the
+        KVCache and add the request to the continuous batching process').
+        Paged substrate: adoption of the staged page run — no dense
+        full-depth copy."""
         slot = next(i for i, s in enumerate(self.slots) if s is None)
         L = pres.prompt_len
-        if self.caches.kv is not None:
-            kv = self.caches.kv
-            kv = KVCache(
-                k=kv.k.at[:, slot, :L].set(jnp.asarray(pres.kv_k[:, :L])),
-                v=kv.v.at[:, slot, :L].set(jnp.asarray(pres.kv_v[:, :L])))
-            self.caches = self.caches._replace(kv=kv)
-        self.caches = self.caches._replace(
-            length=self.caches.length.at[slot].set(L))
+        if self.substrate == "paged":
+            if L + max_new > self.max_len:
+                raise ValueError(
+                    f"prompt ({L}) + max_new ({max_new}) exceeds max_len "
+                    f"({self.max_len}) — the slot would outgrow its block "
+                    f"table mid-decode")
+            pages = self._adopt_pages(pres)
+            assert len(pages) <= self.max_pages, \
+                f"prompt needs {len(pages)} pages > max_len's {self.max_pages}"
+            self.block_table[slot, :len(pages)] = pages
+            self.block_table[slot, len(pages):] = 0
+            self.n_pages_slot[slot] = len(pages)
+            self.seq_lens[slot] = L
+        else:
+            if self.caches.kv is not None:
+                kv = self.caches.kv
+                kv = KVCache(
+                    k=kv.k.at[:, slot, :L].set(jnp.asarray(pres.kv_k[:, :L])),
+                    v=kv.v.at[:, slot, :L].set(jnp.asarray(pres.kv_v[:, :L])))
+                self.caches = self.caches._replace(kv=kv)
+            self.caches = self.caches._replace(
+                length=self.caches.length.at[slot].set(L))
         self.tokens = self.tokens.at[slot, 0].set(pres.first_token)
         self.slots[slot] = _Slot(req_id=req_id, prompt_len=L, max_new=max_new,
                                  emitted=[pres.first_token])
         return slot
+
+    def _prepare_writes(self, active: list[int]) -> None:
+        """Host-side bookkeeping before a step: give every active slot an
+        exclusively-owned page at its write position — a fresh page at a
+        page boundary, copy-on-write if the tail page is shared."""
+        pp = self.page_pool
+        pt = pp.page_tokens
+        for i in active:
+            pidx = int(self.seq_lens[i]) // pt
+            if pidx >= self.max_pages:   # join() bounds L+max_new, so this
+                raise RuntimeError(      # is a programming error, not load
+                    f"slot {i} outgrew its block table (len "
+                    f"{int(self.seq_lens[i])} of max_len {self.max_len})")
+            if pidx == int(self.n_pages_slot[i]):
+                (pg,) = pp.alloc(1)
+                self.block_table[i, pidx] = pg
+                self.n_pages_slot[i] += 1
+            else:
+                pid = int(self.block_table[i, pidx])
+                new = pp.make_writable(pid)
+                if new != pid:
+                    self.block_table[i, pidx] = new
 
     def step(self) -> list[tuple[int, int, bool]]:
         """One continuous-batching iteration.
         Returns [(req_id, token, finished)] for active slots."""
         if self.n_active == 0:
             return []
-        logits, self.caches = self._step(self.params, self.tokens, self.caches)
+        self.stats["steps"] += 1
+        if self.substrate == "paged":
+            pp = self.page_pool
+            pt = pp.page_tokens
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+            self._prepare_writes(active)
+            # live page span: deepest active slot, padded to a power of two
+            # so the jitted step sees at most log2(max_pages) shapes
+            need = max(int(self.seq_lens[i]) // pt + 1 for i in active)
+            width = 1
+            while width < need:
+                width *= 2
+            width = min(width, self.max_pages)
+            # .copy(): jax CPU zero-copies 2-D numpy buffers, and the host
+            # tables mutate (growth/COW/length bumps) while the async step
+            # still reads them — hand jit a frozen snapshot
+            tbl = jnp.asarray(self.block_table[:, :width].copy())
+            lens = jnp.asarray(self.seq_lens.copy())
+            logits, kp, vp = self._step_paged(
+                self.params, self.tokens, pp.k_pages, pp.v_pages, tbl, lens)
+            pp.k_pages, pp.v_pages = kp, vp
+            for i in active:
+                self.seq_lens[i] += 1
+        else:
+            logits, self.caches = self._step(self.params, self.tokens,
+                                             self.caches)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         out = []
@@ -761,8 +1088,11 @@ class DecodeWorker:
             if s.done:
                 out.append((s.req_id, tok, True))
                 self.slots[i] = None
-                self.caches = self.caches._replace(
-                    length=self.caches.length.at[i].set(0))
+                if self.substrate == "paged":
+                    self._free_slot_pages(i)
+                else:
+                    self.caches = self.caches._replace(
+                        length=self.caches.length.at[i].set(0))
             else:
                 out.append((s.req_id, tok, False))
         return out

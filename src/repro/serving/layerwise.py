@@ -100,9 +100,13 @@ def occupation_cost(cfg: ModelConfig, input_tokens: int, *,
 @dataclass
 class ChunkOverlapPlan:
     """Per-chunk load-vs-compute schedule for a tiered prefix (§5.2 grafted
-    onto Jin et al.'s split): recompute blocks [dram_head, split) on the
-    accelerator WHILE blocks [split, n) stream from SSD layer-by-layer,
-    then compute the uncached suffix once both land.
+    onto Jin et al.'s split): recompute the non-DRAM blocks of
+    [dram_head, split) on the accelerator WHILE blocks [split, n) stream
+    from SSD layer-by-layer, then compute the uncached suffix once both
+    land. DRAM blocks interleaved inside the head span are ASSEMBLED from
+    the pool (chunk-skipping), not recomputed: the incremental-prefill
+    loop sets their KV into the cache arena and resumes compute after
+    them, so only the truly non-resident chunks cost FLOPs.
 
     ``t_overlapped``/``t_blocking`` cover the prefix phase only (the suffix
     cost is identical in both schedules and cancels out of the compare).
@@ -110,10 +114,12 @@ class ChunkOverlapPlan:
     split: int                 # first block index loaded (not recomputed)
     n_resident: int
     dram_head: int
-    t_head: float              # recompute time of blocks [dram_head, split)
+    t_head: float              # recompute time of non-DRAM in [dram_head, split)
     t_load: float              # load time of SSD blocks in [split, n)
     t_blocking: float          # load ALL SSD blocks, no overlap
     t_overlapped: float        # max(t_head, t_load)
+    head_recompute: int = 0    # non-DRAM blocks recomputed in the head span
+    head_skipped: int = 0      # DRAM blocks assembled mid-span (not recomputed)
 
     @property
     def predicted_speedup(self) -> float:
@@ -127,9 +133,9 @@ def overlap_split(tiers: list[str], t_compute_block: float,
 
     ``tiers`` is the per-block residency ("dram"/"ssd") of the prefix
     chain, as ``HostKVPool.plan_fetch`` reports it. Candidate split s lies
-    in [dram_head, n]: the engine recomputes blocks [dram_head, s)
-    wholesale (interleaved DRAM blocks inside the span are recomputed too
-    — chunked attention can't skip the middle of a sequence) and loads the
+    in [dram_head, n]: the engine recomputes the NON-DRAM blocks of
+    [dram_head, s) — DRAM blocks inside the span are chunk-skipped
+    (assembled from the pool at memcpy cost, priced free) — and loads the
     SSD blocks in [s, n). The pick minimises max(head recompute, tail
     load); s = dram_head degenerates to the blocking all-load schedule and
     s = n to pure recompute, so the chosen split is never predicted-slower
@@ -144,16 +150,22 @@ def overlap_split(tiers: list[str], t_compute_block: float,
         ssd_after[s] = ssd_after[s + 1] + (tiers[s] == "ssd")
     t_blocking = ssd_after[d0] * t_load_block
     best = None
+    nondram = 0                     # non-DRAM blocks in [d0, s)
     for s in range(d0, n + 1):
-        t_head = (s - d0) * t_compute_block
+        t_head = nondram * t_compute_block
         t_load = ssd_after[s] * t_load_block
         t_ov = max(t_head, t_load)
         if best is None or t_ov < best[0]:
-            best = (t_ov, s, t_head, t_load)
-    t_ov, s, t_head, t_load = best if best is not None else (0.0, d0, 0., 0.)
+            best = (t_ov, s, t_head, t_load, nondram)
+        if s < n:
+            nondram += tiers[s] != "dram"
+    t_ov, s, t_head, t_load, rec = best if best is not None \
+        else (0.0, d0, 0., 0., 0)
+    skipped = sum(1 for t in tiers[d0:s] if t == "dram")
     return ChunkOverlapPlan(split=s, n_resident=n, dram_head=d0,
                             t_head=t_head, t_load=t_load,
-                            t_blocking=t_blocking, t_overlapped=t_ov)
+                            t_blocking=t_blocking, t_overlapped=t_ov,
+                            head_recompute=rec, head_skipped=skipped)
 
 
 def verify_stream_order(cfg: ModelConfig, params, tokens) -> bool:

@@ -11,7 +11,21 @@ Layout (per attention layer stacked on a leading axis):
 Page allocation is host-side (a free list); attention over pages is the
 ``paged_attention`` kernel (Pallas) or its jnp oracle. ``page_tokens`` is
 the on-device granularity and the pool's 512-token block is a multiple of
-it, so a pool block maps to an integer number of pages.
+it, so a pool block maps to an integer page run.
+
+Two tiers of API live here:
+
+* the original functional ``PagedKVCache`` helpers (``assign_seq`` /
+  ``grow_seq`` / ``write_kv`` / ``gather_kv``) — a self-contained paged
+  cache whose block table and pages move together;
+* ``DevicePagePool`` — the engine's substrate: ONE page store shared by
+  every worker in the process (the stand-in for a node's HBM), with
+  per-page refcounts, a block-hash → page-run registry so slots that hit
+  the same prefix chain share physical pages, copy-on-write for shared
+  partial tail pages, and LRU eviction of registry-only runs under
+  allocation pressure. ``PrefillWorker`` stages fresh KV into pages and
+  ``DecodeWorker.join`` adopts the run into its block table — the
+  zero-copy prefill→decode handoff.
 """
 from __future__ import annotations
 
@@ -23,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.trace import BLOCK_TOKENS
 from repro.models.layers import DTYPE
 
 
@@ -127,7 +142,11 @@ def write_kv(cache: PagedKVCache, slot: int, start: int,
              k_new: jax.Array, v_new: jax.Array) -> PagedKVCache:
     """Write (L, S, KV, Dh) new KV of one sequence into its pages,
     starting at token offset ``start``. Host loop over touched pages
-    (S and the table are known host-side at engine level)."""
+    (S and the table are known host-side at engine level).
+
+    A write that runs past the slot's assigned pages (page-table entry 0,
+    the reserved null page) raises instead of silently corrupting page 0:
+    callers must ``assign_seq``/``grow_seq`` first."""
     pt = cache.page_tokens
     table = np.asarray(cache.block_table)
     S = k_new.shape[1]
@@ -137,7 +156,17 @@ def write_kv(cache: PagedKVCache, slot: int, start: int,
         page_idx = tok // pt
         off = tok % pt
         n = min(pt - off, start + S - tok)   # stop at the page boundary
+        if page_idx >= table.shape[1]:
+            raise IndexError(
+                f"write_kv overruns the block table: token {tok} needs page "
+                f"index {page_idx} but the table holds {table.shape[1]} "
+                f"pages per sequence (grow max_seq or shorten the write)")
         pid = int(table[slot, page_idx])
+        if pid == 0:
+            raise IndexError(
+                f"write_kv into unassigned page: slot {slot} token {tok} "
+                f"maps to table entry {page_idx} = 0 (the null page) — "
+                f"assign_seq/grow_seq the sequence before writing")
         src = slice(tok - start, tok - start + n)
         k_pages = jax.lax.dynamic_update_slice(
             k_pages, k_new[:, src][:, None],
@@ -153,13 +182,232 @@ def write_kv(cache: PagedKVCache, slot: int, start: int,
 def gather_kv(cache: PagedKVCache, max_tokens: int):
     """Materialise per-sequence contiguous KV (L, B, max_tokens, KV, Dh)
     from pages via the block table — the pure-jnp paged read used by the
-    engine on CPU (the Pallas kernel fuses this gather with attention)."""
+    engine on CPU (the Pallas kernel fuses this gather with attention).
+
+    ``max_tokens`` that is not a multiple of ``page_tokens`` rounds UP to
+    whole pages and the surplus tail tokens are sliced off — previously
+    the partial page was silently dropped."""
     pt = cache.page_tokens
-    n = max_tokens // pt
+    n = (max_tokens + pt - 1) // pt
     tbl = cache.block_table[:, :n]                     # (B, n)
     k = cache.k_pages[:, tbl]                          # (L, B, n, pt, KV, Dh)
     v = cache.v_pages[:, tbl]
     L, B = k.shape[0], k.shape[1]
-    k = k.reshape(L, B, n * pt, *k.shape[4:])
-    v = v.reshape(L, B, n * pt, *v.shape[4:])
+    k = k.reshape(L, B, n * pt, *k.shape[4:])[:, :, :max_tokens]
+    v = v.reshape(L, B, n * pt, *v.shape[4:])[:, :, :max_tokens]
     return k, v
+
+
+# ---------------------------------------------------------------------------
+# shared device page pool (the engine's paged decode substrate)
+# ---------------------------------------------------------------------------
+
+class DevicePagePool:
+    """One process-wide paged KV store: the stand-in for a serving node's
+    HBM that both ``PrefillWorker`` (writes fresh pages, §3 step 2) and
+    ``DecodeWorker`` (attends them through block tables, §3 step 4) share.
+
+    * ``k_pages``/``v_pages``: (L, P, page_tokens, KV, Dh); page 0 is the
+      reserved null page (block tables pad with it, reads of it are
+      always masked).
+    * per-page REFCOUNTS (host side): a page is held by the hash-run
+      registry and/or by block-table rows / staged prefill results.
+      ``release`` at refcount 0 returns it to the free list; below 0
+      raises (double-free guard).
+    * REGISTRY: pool block hash → integer page run (``BLOCK_TOKENS`` is a
+      multiple of ``page_tokens``). Slots whose chains share a prefix
+      adopt the SAME physical pages — the device-side analogue of the
+      DRAM pool's prefix reuse. Registry-only runs (refcount 1) are
+      evicted LRU under allocation pressure; runs referenced by a live
+      slot are pinned.
+    * COPY-ON-WRITE: ``make_writable`` copies a shared page before a slot
+      appends into it; full prefix pages are never written during decode,
+      so in practice COW only triggers at a shared partial tail page
+      (e.g. one ``PrefillResult`` joined into several slots).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int,
+                 page_tokens: int = 64) -> None:
+        if BLOCK_TOKENS % page_tokens:
+            raise ValueError(
+                f"page_tokens={page_tokens} must divide the pool block "
+                f"({BLOCK_TOKENS} tokens) so a block maps to a page run")
+        La, KV, Dh = cfg.attention_layers, cfg.n_kv_heads, cfg.head_dim
+        self.cfg = cfg
+        self.page_tokens = page_tokens
+        self.k_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
+        self.v_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
+        self.free: list[int] = list(range(n_pages - 1, 0, -1))
+        self.refs = np.zeros(n_pages, np.int32)      # page 0 stays 0 forever
+        self.gens = np.zeros(n_pages, np.int64)      # bumped per allocation:
+        self.runs: dict[int, list[int]] = {}         # detects stale page runs
+        self._lru: list[int] = []                    # registry recency order
+        self.stats = dict(pages_written=0, shared_adoptions=0, cow_copies=0,
+                          registry_evictions=0, alloc_failures=0)
+
+    # ---- geometry ------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def pages_per_block(self) -> int:
+        return BLOCK_TOKENS // self.page_tokens
+
+    def pages_for(self, n_tokens: int) -> int:
+        return (n_tokens + self.page_tokens - 1) // self.page_tokens
+
+    @property
+    def used_pages(self) -> int:
+        return int((self.refs > 0).sum())
+
+    # ---- refcounted allocation ----------------------------------------
+    def _evictable(self) -> list[int]:
+        """Registered block hashes held ONLY by the registry, LRU first."""
+        return [h for h in self._lru
+                if all(self.refs[p] == 1 for p in self.runs[h])]
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` fresh pages (refcount 1 each), evicting registry-only
+        runs LRU when the free list runs short. Raises ``MemoryError``
+        (taking nothing) if pressure can't be relieved."""
+        if len(self.free) < n:
+            for h in self._evictable():
+                self.unregister(h)
+                if len(self.free) >= n:
+                    break
+        if len(self.free) < n:
+            self.stats["alloc_failures"] += 1
+            raise MemoryError(
+                f"device page pool OOM: want {n} pages, "
+                f"free {len(self.free)} of {self.n_pages - 1}")
+        pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+            self.gens[p] += 1
+        return pages
+
+    def gens_of(self, pages: list[int]) -> list[int]:
+        """Allocation generations of a page run — a holder snapshots them
+        and re-checks before taking late references (a freed-and-realloc'd
+        page must read as STALE, never as someone else's KV)."""
+        return [int(self.gens[p]) for p in pages]
+
+    def retain(self, pages: list[int]) -> None:
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise RuntimeError(f"retain of unowned page {p}")
+            self.refs[p] += 1
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            if p == 0:
+                continue                    # null-page padding in tables
+            if self.refs[p] <= 0:
+                raise RuntimeError(f"double free of page {p}")
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self.free.append(p)
+
+    # ---- block-hash registry (cross-slot prefix sharing) ---------------
+    def register_block(self, hash_id: int, pages: list[int]) -> None:
+        """Publish a full block's page run for later chains to adopt.
+        The registry holds one reference of its own."""
+        assert len(pages) == self.pages_per_block
+        if hash_id in self.runs:            # racing identical prefills
+            return
+        self.retain(pages)
+        self.runs[hash_id] = list(pages)
+        self._lru.append(hash_id)
+
+    def unregister(self, hash_id: int) -> None:
+        pages = self.runs.pop(hash_id, None)
+        if pages is None:
+            return
+        self._lru.remove(hash_id)
+        self.release(pages)
+        self.stats["registry_evictions"] += 1
+
+    def lookup_chain(self, hash_ids: list[int]) -> int:
+        """Deepest consecutive registered prefix (no side effects)."""
+        n = 0
+        for h in hash_ids:
+            if h not in self.runs:
+                break
+            n += 1
+        return n
+
+    def adopt_chain(self, hash_ids: list[int]) -> tuple[int, list[int]]:
+        """Retain + return the page runs of the chain's registered prefix:
+        (n_blocks_adopted, flat page ids). The caller owns one reference
+        per page; physical pages are SHARED with every other adopter."""
+        n = self.lookup_chain(hash_ids)
+        pages: list[int] = []
+        for h in hash_ids[:n]:
+            run = self.runs[h]
+            self.retain(run)
+            pages.extend(run)
+            self._lru.remove(h)             # touch recency
+            self._lru.append(h)
+        if n:
+            self.stats["shared_adoptions"] += n
+        return n, pages
+
+    # ---- device writes -------------------------------------------------
+    def write_run(self, pages: list[int], k: np.ndarray,
+                  v: np.ndarray) -> None:
+        """Scatter (L, T, KV, Dh) KV into ``pages`` (T ≤ len(pages)·page).
+        One fused indexed update per array; a partial tail page is
+        zero-padded (fresh pages, nothing to preserve)."""
+        pt = self.page_tokens
+        L, T = k.shape[0], k.shape[1]
+        n = len(pages)
+        assert T <= n * pt, (T, n, pt)
+        pad = n * pt - T
+        k = jnp.asarray(k, self.k_pages.dtype)
+        v = jnp.asarray(v, self.v_pages.dtype)
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        idx = jnp.asarray(pages, jnp.int32)
+        shape = (L, n, pt) + k.shape[2:]
+        self.k_pages = self.k_pages.at[:, idx].set(k.reshape(shape))
+        self.v_pages = self.v_pages.at[:, idx].set(v.reshape(shape))
+        self.stats["pages_written"] += n
+
+    def make_writable(self, page: int) -> int:
+        """Copy-on-write: return a page id safe to append into. A page
+        with a single owner is returned as-is; a shared page is copied to
+        a fresh page (the caller must drop its reference to the old id
+        and point its table at the new one)."""
+        if self.refs[page] == 1:
+            return page
+        (new,) = self.alloc(1)
+        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, page])
+        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, page])
+        self.release([page])
+        self.stats["cow_copies"] += 1
+        return new
+
+    # ---- host-side reads (oracle/debug) --------------------------------
+    def read_seq(self, pages: list[int], n_tokens: int):
+        """Gather one sequence's contiguous (L, n_tokens, KV, Dh) KV."""
+        idx = jnp.asarray(pages, jnp.int32)
+        L = self.k_pages.shape[0]
+        k = self.k_pages[:, idx]            # (L, n, pt, KV, Dh)
+        v = self.v_pages[:, idx]
+        k = k.reshape(L, -1, *k.shape[3:])[:, :n_tokens]
+        v = v.reshape(L, -1, *v.shape[3:])[:, :n_tokens]
+        return np.asarray(k), np.asarray(v)
+
+    def check_leaks(self) -> None:
+        """Invariant: every non-free page is referenced and vice versa
+        (property tests call this after each op)."""
+        free = set(self.free)
+        assert 0 not in free
+        for p in range(1, self.n_pages):
+            if p in free:
+                assert self.refs[p] == 0, f"freed page {p} still referenced"
+            else:
+                assert self.refs[p] > 0, f"page {p} leaked (no ref, not free)"
+        assert len(free) == len(self.free), "free list duplicates"

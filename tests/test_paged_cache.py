@@ -67,6 +67,39 @@ def test_oom_raises():
         assign_seq(cache, 0, 16 * 10)
 
 
+def test_gather_kv_non_multiple_max_tokens_keeps_tail():
+    """max_tokens not a multiple of page_tokens must round UP to whole
+    pages and slice, not silently truncate the partial page."""
+    cache = init_paged_cache(CFG, batch=1, n_pages=16, page_tokens=16,
+                             max_seq=64)
+    cache = assign_seq(cache, 0, 40)
+    L, KV, Dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    k = jax.random.normal(jax.random.PRNGKey(2), (L, 40, KV, Dh),
+                          jnp.bfloat16)
+    cache = write_kv(cache, 0, 0, k, -k)
+    kg, vg = gather_kv(cache, 40)              # 2.5 pages
+    assert kg.shape[2] == 40
+    np.testing.assert_array_equal(np.asarray(kg[:, 0]), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(vg[:, 0]), np.asarray(-k))
+
+
+def test_write_kv_overrun_raises_not_corrupts():
+    """A write past the assigned pages must raise, not scribble on the
+    null page (entry 0)."""
+    cache = init_paged_cache(CFG, batch=1, n_pages=16, page_tokens=16,
+                             max_seq=64)
+    cache = assign_seq(cache, 0, 20)           # 2 pages assigned
+    L, KV, Dh = CFG.n_layers, CFG.n_kv_heads, CFG.head_dim
+    k = jnp.ones((L, 20, KV, Dh), jnp.bfloat16)
+    null_before = np.asarray(cache.k_pages[:, 0])
+    with pytest.raises(IndexError):
+        write_kv(cache, 0, 30, k, k)           # runs into table entry 0
+    np.testing.assert_array_equal(np.asarray(cache.k_pages[:, 0]),
+                                  null_before)
+    with pytest.raises(IndexError):            # past the table itself
+        write_kv(cache, 0, 60, k, k)
+
+
 @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 60)),
                 min_size=1, max_size=12))
 @settings(max_examples=40, deadline=None)

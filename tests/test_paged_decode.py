@@ -1,0 +1,496 @@
+"""Paged decode substrate: kernel-vs-oracle parity, page refcount/COW
+properties, zero-copy prefill→decode handoff, incremental prefix hashing,
+and chunk-skipping overlap assembly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # sandboxed env: vendored shim (seeded random)
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core.trace import BLOCK_TOKENS
+from repro.kernels.paged_attention.kernel import (paged_attention,
+                                                  paged_attention_layers)
+from repro.kernels.paged_attention.ref import (paged_attention_layers_ref,
+                                               paged_attention_ref)
+from repro.serving.engine import (DecodeWorker, HostKVPool, PrefillWorker,
+                                  PrefixHasher, prefix_hash_ids)
+from repro.serving.paged_cache import DevicePagePool
+
+CFG = get_config("smollm-360m").reduced()
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = __import__("repro.models.transformer",
+                        fromlist=["init_params"]).init_params(CFG, KEY)
+    return CFG, params
+
+
+# ---------------------------------------------------------------- kernel ----
+
+def _rand_paged(B, H, KV, D, P, page, mp, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.bfloat16)
+    kp = jax.random.normal(ks[1], (P, page, KV, D), jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (P, page, KV, D), jnp.bfloat16)
+    return q, kp, vp
+
+
+@pytest.mark.parametrize("lens", [
+    [1, 64, 65, 128],          # ragged incl. exact page boundaries
+    [63, 64, 127, 256],        # page-1 / page / page·2-1 / max
+    [10, 10, 10, 10],
+])
+def test_kernel_oracle_parity_ragged_and_boundary(lens):
+    B, H, KV, D, P, page, mp = 4, 8, 2, 64, 32, 64, 4
+    q, kp, vp = _rand_paged(B, H, KV, D, P, page, mp)
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.integers(1, P, (B, mp)), jnp.int32)
+    out = paged_attention(q, kp, vp, table,
+                          jnp.asarray(lens, jnp.int32), interpret=True)
+    ref = paged_attention_ref(q, kp, vp, table,
+                              jnp.asarray(lens, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_kernel_oracle_parity_null_page():
+    """Rows padded with the null page (id 0) beyond their used span must
+    agree — the masked tail never contributes, whatever page 0 holds."""
+    B, H, KV, D, P, page, mp = 2, 4, 4, 64, 16, 64, 4
+    q, kp, vp = _rand_paged(B, H, KV, D, P, page, mp)
+    kp = kp.at[0].set(1e4)     # poison the null page
+    vp = vp.at[0].set(-1e4)
+    table = jnp.asarray([[3, 0, 0, 0], [5, 7, 0, 0]], jnp.int32)
+    lens = jnp.asarray([40, 100], jnp.int32)
+    out = paged_attention(q, kp, vp, table, lens, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, table, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+def test_batched_over_layers_entry_matches_per_layer():
+    L, B, H, KV, D, P, page, mp = 3, 2, 8, 2, 64, 16, 64, 2
+    ks = jax.random.split(KEY, 3)
+    qs = jax.random.normal(ks[0], (L, B, H, D), jnp.bfloat16)
+    kp = jax.random.normal(ks[1], (L, P, page, KV, D), jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (L, P, page, KV, D), jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.integers(1, P, (B, mp)), jnp.int32)
+    lens = jnp.asarray([70, 128], jnp.int32)
+    out = paged_attention_layers(qs, kp, vp, table, lens, interpret=True)
+    per_layer = jnp.stack([
+        paged_attention(qs[l], kp[l], vp[l], table, lens, interpret=True)
+        for l in range(L)])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(per_layer, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    ref = paged_attention_layers_ref(qs, kp, vp, table, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_ref_qh2kv_matches_manual_expansion():
+    """The padded-GQA oracle (explicit query→kv map) equals attention over
+    manually expanded pages."""
+    B, H, KV, D, P, page, mp = 2, 6, 2, 32, 8, 16, 2
+    q, kp, vp = _rand_paged(B, H, KV, D, P, page, mp, seed=5)
+    qh2kv = jnp.asarray([0, 0, 0, 1, 1, 0], jnp.int32)  # padded head -> kv 0
+    table = jnp.asarray([[2, 3], [4, 0]], jnp.int32)
+    lens = jnp.asarray([20, 9], jnp.int32)
+    out = paged_attention_ref(q, kp, vp, table, lens, qh2kv=qh2kv)
+    kp_x = jnp.take(kp, qh2kv, axis=2)     # (P, page, H, D)
+    vp_x = jnp.take(vp, qh2kv, axis=2)
+    ref = paged_attention_ref(q, kp_x, vp_x, table, lens)  # grouped H==KV
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+# ------------------------------------------------------------ page pool ----
+
+def _tiny_pool(n_pages=24, page_tokens=64):
+    return DevicePagePool(CFG, n_pages=n_pages, page_tokens=page_tokens)
+
+
+def _rand_kv(n_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    L, KV, Dh = CFG.attention_layers, CFG.n_kv_heads, CFG.head_dim
+    k = rng.standard_normal((L, n_tokens, KV, Dh)).astype(np.float32)
+    return k, -k
+
+
+def test_page_tokens_must_divide_block():
+    with pytest.raises(ValueError):
+        DevicePagePool(CFG, n_pages=8, page_tokens=96)
+
+
+def test_double_free_raises():
+    pool = _tiny_pool()
+    run = pool.alloc(2)
+    pool.release(run)
+    with pytest.raises(RuntimeError):
+        pool.release(run)
+    pool.check_leaks()
+
+
+def test_registry_adopt_shares_physical_pages():
+    pool = _tiny_pool(n_pages=24)
+    k, v = _rand_kv(BLOCK_TOKENS)
+    run = pool.alloc(pool.pages_per_block)
+    pool.write_run(run, k, v)
+    pool.register_block(1234, run)
+    n_free0 = len(pool.free)
+    n, pages = pool.adopt_chain([1234, 999])
+    assert n == 1 and pages == run
+    assert len(pool.free) == n_free0        # no new pages for the adopter
+    pool.release(pages)
+    pool.release(run)                        # the staging reference
+    pool.check_leaks()
+    # registry still holds the run; eviction under pressure frees it
+    pool.alloc(len(pool.free) + pool.pages_per_block)
+    assert 1234 not in pool.runs
+    assert pool.stats["registry_evictions"] == 1
+
+
+def test_registry_eviction_pins_live_runs():
+    pool = _tiny_pool(n_pages=1 + 2 * 8)
+    k, v = _rand_kv(BLOCK_TOKENS)
+    run = pool.alloc(pool.pages_per_block)
+    pool.write_run(run, k, v)
+    pool.register_block(7, run)             # run refs: staging + registry
+    with pytest.raises(MemoryError):        # live ref pins the run
+        pool.alloc(2 * pool.pages_per_block)
+    pool.release(run)                       # drop staging ref -> evictable
+    pool.alloc(2 * pool.pages_per_block)    # now eviction makes room
+    assert 7 not in pool.runs
+
+
+def test_cow_never_mutates_shared_page():
+    pool = _tiny_pool()
+    k, v = _rand_kv(64, seed=3)
+    run = pool.alloc(1)
+    pool.write_run(run, k, v)
+    pool.retain(run)                        # second owner -> shared
+    before = np.asarray(pool.k_pages[:, run[0]]).copy()
+    new = pool.make_writable(run[0])
+    assert new != run[0]
+    pool.k_pages = pool.k_pages.at[:, new, 0].set(99.0)  # append-style write
+    np.testing.assert_array_equal(np.asarray(pool.k_pages[:, run[0]]), before)
+    np.testing.assert_array_equal(                      # copy carried bytes
+        np.asarray(pool.k_pages[:, new, 1:]), before[:, 1:])
+    assert pool.refs[run[0]] == 1 and pool.refs[new] == 1
+    pool.release([new])
+    pool.release(run)
+    pool.check_leaks()
+
+
+def test_exclusive_page_skips_cow():
+    pool = _tiny_pool()
+    run = pool.alloc(1)
+    assert pool.make_writable(run[0]) == run[0]
+    assert pool.stats["cow_copies"] == 0
+    pool.release(run)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 6)),
+                min_size=1, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_alloc_retain_release_conserve_pages(ops):
+    """Random alloc/retain/release cycles: every page is either free or
+    referenced, never both, never leaked (op 0 alloc, 1 retain, 2 release)."""
+    pool = _tiny_pool(n_pages=16)
+    held: list[list[int]] = []
+    for op, n in ops:
+        if op == 0:
+            try:
+                held.append(pool.alloc(n))
+            except MemoryError:
+                pass
+        elif op == 1 and held:
+            run = held[n % len(held)]
+            pool.retain(run)
+            held.append(list(run))
+        elif op == 2 and held:
+            pool.release(held.pop(n % len(held)))
+        pool.check_leaks()
+        n_held = sum(len(r) for r in held)
+        assert int(pool.refs.sum()) == n_held
+    for run in held:
+        pool.release(run)
+    pool.check_leaks()
+    assert len(pool.free) == pool.n_pages - 1
+
+
+# ------------------------------------------------- engine: paged decode ----
+
+def test_paged_matches_dense_with_prefix_sharing(setup):
+    """Continuous batching over the paged substrate — zero-copy joins,
+    shared prefix pages — emits exactly the dense arena's tokens."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab_size, 1024)
+    reqs = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, n)])
+            for n in (96, 64, 200)]
+
+    pool = HostKVPool()
+    pp = DevicePagePool(cfg, n_pages=1 + 5 * 32, page_tokens=64)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256, page_pool=pp)
+    dw = DecodeWorker(params, cfg, max_batch=4, max_len=2048,
+                      substrate="paged", page_pool=pp)
+    pool_d = HostKVPool()
+    pw_d = PrefillWorker(params, cfg, pool_d, prefill_chunk=256)
+    dw_d = DecodeWorker(params, cfg, max_batch=4, max_len=2048,
+                        substrate="dense")
+
+    outs, outs_d = {}, {}
+    for i, t in enumerate(reqs):
+        r = pw(t)
+        assert r.pages is not None
+        dw.join(i, r, max_new=6)
+        outs[i] = [r.first_token]
+        rd = pw_d(t)
+        dw_d.join(i, rd, max_new=6)
+        outs_d[i] = [rd.first_token]
+    while dw.n_active or dw_d.n_active:
+        for rid, tok, _ in dw.step():
+            outs[rid].append(tok)
+        for rid, tok, _ in dw_d.step():
+            outs_d[rid].append(tok)
+    assert outs == outs_d
+    assert dw.stats["zero_copy_joins"] == 3      # adoption, no dense copy
+    assert pp.stats["shared_adoptions"] >= 2     # reqs 2,3 shared 2 blocks
+    pp.check_leaks()
+
+
+def test_slots_leaving_release_pages(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    pool = HostKVPool()
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128)
+    dw = DecodeWorker(params, cfg, max_batch=2, max_len=512,
+                      substrate="paged")
+    pp = dw.page_pool
+    for i in range(3):                      # more requests than slots
+        r = pw(rng.integers(0, cfg.vocab_size, 80 + 40 * i))
+        dw.join(i, r, max_new=2)
+        while dw.n_active == dw.max_batch:
+            dw.step()
+    while dw.n_active:
+        dw.step()
+    pp.check_leaks()
+    # only registry-held runs may remain; they are evictable
+    for h, run in pp.runs.items():
+        assert all(pp.refs[p] == 1 for p in run)
+
+
+def test_multi_join_cow_bit_exact(setup):
+    """One PrefillResult joined into two slots (n-best fan-out): the slots
+    share every page incl. the partial tail; the first append COWs and
+    both decode exactly like the lone sequential oracle."""
+    from repro.models.transformer import (decode_step, init_caches,
+                                          init_params, prefill)
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    t = rng.integers(0, cfg.vocab_size, 600)
+    pool = HostKVPool()
+    pp = DevicePagePool(cfg, n_pages=1 + 4 * 16, page_tokens=64)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256, page_pool=pp)
+    dw = DecodeWorker(params, cfg, max_batch=4, max_len=1024,
+                      substrate="paged", page_pool=pp)
+    r = pw(t)
+    dw.join(0, r, max_new=5)
+    dw.join(1, r, max_new=5)
+    outs = {0: [r.first_token], 1: [r.first_token]}
+    while dw.n_active:
+        for rid, tok, _ in dw.step():
+            outs[rid].append(tok)
+    assert outs[0] == outs[1]
+    assert dw.stats["zero_copy_joins"] == 2
+    assert pp.stats["cow_copies"] >= 1
+    pp.check_leaks()
+
+    logits, caches = jax.jit(lambda p, t_: prefill(p, t_, cfg))(
+        params, jnp.asarray(t[None]))
+    full = init_caches(cfg, 1, 1024)
+    S = len(t)
+    full = full._replace(kv=full.kv._replace(
+        k=full.kv.k.at[:, :, :S].set(caches.kv.k),
+        v=full.kv.v.at[:, :, :S].set(caches.kv.v)), length=caches.length)
+    tok = int(jnp.argmax(logits[0]))
+    ref = [tok]
+    step = jax.jit(lambda p, t_, c: decode_step(p, t_, c, cfg))
+    for _ in range(4):
+        lg, full = step(params, jnp.asarray([[tok]], jnp.int32), full)
+        tok = int(jnp.argmax(lg[0, -1]))
+        ref.append(tok)
+    assert outs[0] == ref
+
+
+def test_rejoin_after_release_raises_not_corrupts(setup):
+    """Joining a PrefillResult AFTER its joined slot finished (staging
+    reference long gone, tail pages recycled) must raise, never attend
+    another request's recycled pages."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    pool = HostKVPool()
+    pp = DevicePagePool(cfg, n_pages=1 + 4 * 8, page_tokens=64)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128, page_pool=pp)
+    dw = DecodeWorker(params, cfg, max_batch=2, max_len=512,
+                      substrate="paged", page_pool=pp)
+    r1 = pw(rng.integers(0, cfg.vocab_size, 100))
+    dw.join(0, r1, max_new=2)
+    while dw.n_active:
+        dw.step()                        # slot done -> r1's pages released
+    r2 = pw(rng.integers(0, cfg.vocab_size, 100))   # recycles the pages
+    dw.join(1, r2, max_new=2)
+    with pytest.raises(RuntimeError):
+        dw.join(0, r1, max_new=2)        # stale run must be refused
+    pp.check_leaks()
+
+
+def test_release_pages_for_never_joined_result(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(12)
+    pool = HostKVPool()
+    pp = DevicePagePool(cfg, n_pages=1 + 2 * 8, page_tokens=64)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128, page_pool=pp)
+    r = pw(rng.integers(0, cfg.vocab_size, 100))
+    held = pp.used_pages
+    assert held > 0
+    r.release_pages()                    # cancelled before any join
+    r.release_pages()                    # idempotent
+    pp.check_leaks()
+    assert pp.used_pages < held
+
+
+def test_join_rejects_prompt_that_would_outgrow_table(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    pool = HostKVPool()
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128)
+    dw = DecodeWorker(params, cfg, max_batch=1, max_len=512,
+                      substrate="paged")
+    r = pw(rng.integers(0, cfg.vocab_size, 510))
+    with pytest.raises(ValueError):      # 510 + 8 > 512
+        dw.join(0, r, max_new=8)
+    dw.join(0, r, max_new=2)             # 510 + 2 fits exactly
+    while dw.n_active:
+        dw.step()
+    dw.page_pool.check_leaks()
+
+
+# ------------------------------------------------- incremental hashing ----
+
+def test_prefix_hasher_matches_reference():
+    rng = np.random.default_rng(7)
+    t = rng.integers(0, 50000, 1700)
+    assert PrefixHasher().hash_ids(t) == prefix_hash_ids(t)
+
+
+def test_prefix_hasher_session_hashes_only_suffix():
+    rng = np.random.default_rng(8)
+    turn1 = rng.integers(0, 50000, 1024)            # 2 blocks
+    turn2 = np.concatenate([turn1, rng.integers(0, 50000, 1024)])  # +2
+    h = PrefixHasher()
+    ids1 = h.hash_ids(turn1, session="s")
+    assert h.blocks_hashed == 2
+    ids2 = h.hash_ids(turn2, session="s")
+    assert h.blocks_hashed == 4                     # only the suffix hashed
+    assert h.memo_hits == 1
+    assert ids2[:2] == ids1
+    assert ids2 == prefix_hash_ids(turn2)
+
+
+def test_prefix_hasher_divergence_falls_back():
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 50000, 1024)
+    b = a.copy()
+    b[10] += 1                                      # diverge in block 0
+    h = PrefixHasher()
+    h.hash_ids(a, session="s")
+    ids_b = h.hash_ids(b, session="s")
+    assert h.memo_hits == 0
+    assert ids_b == prefix_hash_ids(b)
+    # memo replaced: a third call extending b resumes from b's chain
+    c = np.concatenate([b, rng.integers(0, 50000, 512)])
+    assert h.hash_ids(c, session="s") == prefix_hash_ids(c)
+    assert h.memo_hits == 1
+
+
+def test_prefix_hasher_memo_is_bounded():
+    rng = np.random.default_rng(14)
+    h = PrefixHasher(capacity_sessions=4)
+    for s in range(10):
+        h.hash_ids(rng.integers(0, 50000, 512), session=s)
+    assert len(h._memo) == 4
+    assert list(h._memo) == [6, 7, 8, 9]     # LRU: oldest sessions evicted
+
+
+# --------------------------------------------- chunk-skipping assembly ----
+
+def test_chunk_skipping_bit_exact_and_fewer_tokens(setup, tmp_path):
+    """A fragmented chain (DRAM blocks interleaved past SSD ones inside
+    the head span) assembles the DRAM blocks from the pool instead of
+    recomputing them: bit-exact first token, strictly fewer computed
+    tokens, skipped blocks counted."""
+    from repro.models.transformer import prefill
+    cfg, params = setup
+    rng = np.random.default_rng(10)
+    t = rng.integers(0, cfg.vocab_size, 6 * 512 + 100)
+
+    pool = HostKVPool(capacity_blocks=2, ssd_capacity_blocks=16,
+                      ssd_dir=str(tmp_path), writeback_batch=1)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
+                       ssd_mode="overlap")
+    r1 = pw(t)                          # cold: blocks 0-5 inserted; DRAM
+    first_cold = r1.first_token         # holds the 2 most recent (4, 5)
+    ids = prefix_hash_ids(t)
+    pool.meta.touch_keys(ids[2:4])      # promote 2,3 -> 4,5 demote: the
+    tiers = [pool.meta.resident_tier(h) for h in ids]  # chain fragments
+    d0 = 0
+    while d0 < len(tiers) and tiers[d0] == "dram":
+        d0 += 1
+    assert any(x == "dram" for x in tiers[d0:]), f"not fragmented: {tiers}"
+    assert any(x == "ssd" for x in tiers[max(i for i, x in enumerate(tiers)
+                                             if x == "dram"):]), tiers
+
+    # expensive loads + ~free compute -> the split recomputes every SSD
+    # block, chunk-skipping the DRAM blocks embedded in the span
+    pool.store._read_s_ema = 10.0
+    pw._t_block_ema = 1e-6
+    computed0 = pw.stats["computed_tokens"]
+    r2 = pw(t)
+    assert r2.first_token == first_cold
+    logits, _ = jax.jit(lambda p, t_: prefill(p, t_, cfg))(
+        params, jnp.asarray(t[None]))
+    assert r2.first_token == int(jnp.argmax(logits[0]))
+
+    assert r2.skipped_blocks >= 1       # DRAM blocks mid-span not recomputed
+    computed = pw.stats["computed_tokens"] - computed0
+    # wholesale head recompute (the pre-chunk-skipping schedule) computes
+    # every head-span block, skipped ones included
+    wholesale = len(t) - (r2.reused_blocks - r2.skipped_blocks) * 512
+    assert computed < wholesale         # strictly fewer than wholesale
+    assert computed == len(t) - r2.reused_blocks * 512
+    pool.close()
+
+
+def test_overlap_split_prices_skipped_dram_free():
+    from repro.serving.layerwise import overlap_split
+    # ssd ssd dram dram ssd: with cheap compute the whole span recomputes
+    # EXCEPT the dram blocks, which are skipped
+    ov = overlap_split(["ssd", "ssd", "dram", "dram", "ssd"], 0.1, 10.0)
+    assert ov.split == 5
+    assert ov.head_recompute == 3
+    assert ov.head_skipped == 2
+    assert ov.t_head == pytest.approx(0.3)
