@@ -1,0 +1,313 @@
+"""Serving loop vs phase-at-a-time driver — sustained mixed-load goodput.
+
+The loop bench makes the ISSUE's headline claim executable: at EQUAL
+hardware (one prefill worker, one decode batch) and an equal TBT budget,
+the always-on ``ServingLoop`` — prefill split into chunks interleaved
+between continuous-batching decode steps — must sustain goodput
+(tokens/s whose inter-token gap meets the budget) at least as high as
+the request-at-a-time driver that runs full prefills while decode slots
+starve. Two tables:
+
+* ``serving_loop_goodput`` — wall-clock head-to-head on an OPEN-LOOP
+  arrival schedule (requests land on a fixed clock, staggered output
+  lengths — the "sustained mixed load" regime, where the phase driver
+  must stall every active decode slot for a full prefill each time a
+  slot refills). Both drivers run the same schedule on
+  identically-shaped engines (after a warmup pass that pays every jit
+  compile, with the KV pools then reset so the timed pass is cold).
+  Asserted in-process, uploaded as artifact, NOT gated: at the budget
+  the loop actually sustains (its own median p99), the loop lands at
+  least as many SLO-attaining tokens as the baseline on the identical
+  workload, with a no-worse TBT p99 — and every token stream bit-exact
+  between the two drivers. (Wall-clock tokens/s is reported for
+  observability but not asserted: on a shared CPU the run-to-run wall
+  jitter exceeds the drivers' gap, while the attainment ordering is
+  bimodal — baseline stall gaps are ~2× any sane budget — and held in
+  every observed trial.)
+* ``serving_loop_mixed`` — deterministic scheduling counts (CI-gated):
+  the loop driven iteration-by-iteration with submits interleaved, once
+  per admission policy under an AMPLE and a TIGHT device page pool.
+  Ample: only predictive sheds (in-flight prefills are load the others
+  can't see — §7.3's information lag). Tight: pinned-page pressure is
+  visible to both occupancy-aware policies, the queue-only baseline
+  stays blind and rides the join-deferral path instead. Counts are
+  exact integers of a seeded workload; every accepted stream must match
+  the request-at-a-time oracle.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving_loop [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.trace import BLOCK_TOKENS
+
+CHUNK = 128        # prefill chunk; prompt lengths are multiples of this
+PAGE_TOKENS = 64
+
+
+def _workload(vocab, n_reqs, lengths, max_news, seed=0, dt=0.0):
+    """Mixed load: half the prompts share a one-block prefix (chat-style
+    reuse), half are cold docs; lengths and output lengths cycle (all
+    prompt lengths multiples of CHUNK so the chunk grid is uniform;
+    ``max_news`` staggered so completions spread out and the phase
+    driver keeps refilling slots mid-decode). ``dt`` spaces arrivals on
+    an open-loop clock (0 = burst)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, BLOCK_TOKENS)
+    out = []
+    for i in range(n_reqs):
+        S = lengths[i % len(lengths)]
+        if i % 2 == 0 and S > BLOCK_TOKENS:
+            toks = np.concatenate(
+                [shared, rng.integers(0, vocab, S - BLOCK_TOKENS)])
+        else:
+            toks = rng.integers(0, vocab, S)
+        out.append((i, toks, max_news[i % len(max_news)], i * dt))
+    return out
+
+
+def _mk(params, cfg, *, max_batch, max_len, n_pages):
+    from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+    from repro.serving.paged_cache import DevicePagePool
+
+    pp = DevicePagePool(cfg, n_pages=n_pages, page_tokens=PAGE_TOKENS)
+    pw = PrefillWorker(params, cfg, HostKVPool(), prefill_chunk=CHUNK,
+                       page_pool=pp)
+    dw = DecodeWorker(params, cfg, max_batch=max_batch, max_len=max_len,
+                      substrate="paged", page_pool=pp)
+    return pw, dw, pp
+
+
+def _reset(pws, pp) -> None:
+    """Fresh KV state, warm jit caches: swap in empty host pools and drop
+    the page registry so the next run reuses nothing from the last."""
+    from repro.serving.engine import HostKVPool
+    for pw in pws:
+        pw.pool = HostKVPool()
+    for h in list(pp.runs):
+        pp.unregister(h)
+    pp.check_leaks()
+
+
+def _run_baseline(pw, dw, payloads):
+    """Phase-at-a-time on the arrival clock: a slot that frees while the
+    queue is non-empty runs a FULL blocking prefill immediately — every
+    other active slot starves through it (the stall chunked interleave
+    removes)."""
+    outputs: dict[int, list] = {}
+    token_t: dict[int, list] = {}
+    sched = sorted(payloads, key=lambda p: p[3])
+    i = 0
+    t0 = time.monotonic()
+    while i < len(sched) or dw.n_active:
+        now = time.monotonic() - t0
+        while i < len(sched) and sched[i][3] <= now and dw.has_free_slot:
+            rid, toks, mn, _ = sched[i]
+            i += 1
+            pres = pw(toks)
+            dw.join(rid, pres, max_new=mn)
+            outputs[rid] = [pres.first_token]
+            token_t[rid] = [time.monotonic()]
+        if dw.n_active:
+            for rid, tok, fin in dw.step():
+                outputs[rid].append(tok)
+                token_t[rid].append(time.monotonic())
+        elif i < len(sched):
+            time.sleep(max(sched[i][3] - (time.monotonic() - t0), 0.0))
+    return outputs, token_t, time.monotonic() - t0
+
+
+def _run_loop(pw, dw, payloads, **kw):
+    """The serving loop on the same arrival clock, driven from this
+    thread: submit what has arrived, run one iteration, repeat."""
+    from repro.serving.loop import ServingLoop
+    loop = ServingLoop([pw], dw, max_queue=len(payloads) + 8, **kw)
+    sched = sorted(payloads, key=lambda p: p[3])
+    i = 0
+    t0 = time.monotonic()
+    while i < len(sched):
+        now = time.monotonic() - t0
+        while i < len(sched) and sched[i][3] <= now:
+            rid, toks, mn, _ = sched[i]
+            i += 1
+            assert loop.submit(rid, toks, max_new=mn)
+        if loop.idle and i < len(sched):
+            time.sleep(max(sched[i][3] - (time.monotonic() - t0), 0.0))
+        else:
+            loop.iterate()
+    loop.close_intake()
+    loop.run()
+    wall = time.monotonic() - t0
+    outputs = {rid: o.tokens for rid, o in loop.outputs.items()}
+    token_t = {rid: o.token_t for rid, o in loop.outputs.items()}
+    return outputs, token_t, wall, loop
+
+
+def _goodput(outputs, token_t, wall, budget_s):
+    """tokens/s counting each request's first token plus every follow-on
+    token whose inter-token gap meets the budget (the TBT-SLO view of
+    throughput: late tokens are serving failures, not goodput)."""
+    good = total = 0
+    for rid, ts in token_t.items():
+        total += len(ts)
+        good += 1                                   # first token: TTFT's job
+        good += sum(1 for a, b in zip(ts, ts[1:]) if b - a <= budget_s)
+    return good, total, good / wall
+
+
+def _gaps_p(token_t, q):
+    gaps = [b - a for ts in token_t.values() for a, b in zip(ts, ts[1:])]
+    return float(np.percentile(np.asarray(gaps), q)) if gaps else 0.0
+
+
+def main(fast: bool = False) -> int:
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.transformer import init_params
+    from repro.serving.loop import ServingLoop
+
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # ---- head-to-head goodput (wall-clock, asserted, not gated) ----
+    # Open-loop arrivals every ``dt`` with staggered output lengths: the
+    # phase driver refills a freed slot with a full blocking prefill
+    # while other slots are mid-decode — each refill stalls every active
+    # stream past any reasonable TBT budget. chunks_per_iter=2 keeps the
+    # loop's own inter-token gap at ~2 chunks + 1 step.
+    if fast:
+        n_reqs, lengths, max_news, max_batch = 8, (384, 640), (6, 18), 4
+    else:
+        n_reqs, lengths, max_news, max_batch = \
+            12, (384, 640, 896), (6, 18, 10), 4
+    dt = 0.10
+    max_len = max(lengths) + max(max_news) + PAGE_TOKENS
+    per_seq = (max_len + PAGE_TOKENS - 1) // PAGE_TOKENS
+    n_pages = 1 + (max_batch + 2) * per_seq + n_reqs * 2
+    payloads = _workload(cfg.vocab_size, n_reqs, lengths, max_news,
+                         seed=3, dt=dt)
+
+    # median of 3 timed trials per driver: single-trial wall/p99 jitter
+    # on a shared CPU is larger than the loop's margin on a bad draw
+    trials = 3
+    results = {}
+    for driver in ("loop", "baseline"):
+        pw, dw, pp = _mk(params, cfg, max_batch=max_batch, max_len=max_len,
+                         n_pages=n_pages)
+        run = (lambda: _run_loop(pw, dw, payloads, chunks_per_iter=2)[:3]) \
+            if driver == "loop" else (lambda: _run_baseline(pw, dw, payloads))
+        run()                       # warmup: pays every jit compile
+        runs = []
+        for _ in range(trials):
+            _reset([pw], pp)
+            runs.append(run())      # timed: cold pools, warm jits
+            pp.check_leaks()
+        results[driver] = runs
+
+    # equal budget for both drivers: the loop's own median p99 (so the
+    # loop sheds ~nothing by construction and the baseline is judged at
+    # the SAME bar)
+    budget = max(float(np.median(
+        [_gaps_p(tt, 99) for _, tt, _ in results["loop"]])), 1e-3)
+    rows = []
+    for driver in ("loop", "baseline"):
+        scored = sorted(
+            (( _goodput(o, tt, w, budget), (o, tt, w))
+             for o, tt, w in results[driver]),
+            key=lambda s: s[0][2])
+        (good, total, gps), (outputs, token_t, wall) = scored[trials // 2]
+        rows.append(dict(
+            driver=driver, wall_s=round(wall, 2), total_tokens=total,
+            good_tokens=good, goodput_tok_s=round(gps, 2),
+            tbt_p50_ms=round(1e3 * _gaps_p(token_t, 50), 1),
+            tbt_p99_ms=round(1e3 * _gaps_p(token_t, 99), 1),
+            budget_ms=round(1e3 * budget, 1)))
+    emit("serving_loop_goodput", rows)
+
+    same = all(o == results["baseline"][0][0]
+               for o, _, _ in results["loop"] + results["baseline"])
+    assert same, "loop token streams diverged from the phase-at-a-time oracle"
+    lo, ba = rows
+    print(f"at TBT budget {lo['budget_ms']} ms: loop lands "
+          f"{lo['good_tokens']}/{lo['total_tokens']} tokens in SLO "
+          f"({lo['goodput_tok_s']} tok/s), baseline "
+          f"{ba['good_tokens']}/{ba['total_tokens']} ({ba['goodput_tok_s']} "
+          f"tok/s); p99 {lo['tbt_p99_ms']} vs {ba['tbt_p99_ms']} ms; "
+          f"bit_exact={same}")
+    assert lo["good_tokens"] >= ba["good_tokens"], (
+        f"serving loop landed {lo['good_tokens']} tokens within the TBT "
+        f"budget, fewer than phase-at-a-time's {ba['good_tokens']} on the "
+        f"same workload")
+    assert lo["tbt_p99_ms"] <= ba["tbt_p99_ms"], (
+        f"serving loop TBT p99 {lo['tbt_p99_ms']} ms worse than "
+        f"phase-at-a-time {ba['tbt_p99_ms']} ms")
+
+    # ---- deterministic scheduling counts per admission policy (gated) ----
+    if fast:
+        n2, lengths2, max_news2, max_batch2 = 10, (256, 384), (3, 7), 2
+    else:
+        n2, lengths2, max_news2, max_batch2 = 14, (256, 384), (4, 8), 2
+    max_len2 = max(lengths2) + max(max_news2) + PAGE_TOKENS
+    per_seq2 = (max_len2 + PAGE_TOKENS - 1) // PAGE_TOKENS
+    pay2 = _workload(cfg.vocab_size, n2, lengths2, max_news2, seed=7)
+    # ample: every slot + staging fits, only volume pressure remains;
+    # tight: barely two sequences — pinned staged runs of pending joins
+    # dominate, the regime the join headroom guard exists for
+    pools = (("ample", 1 + (max_batch2 + 1) * per_seq2, 3),
+             ("tight", 1 + 2 * per_seq2 - 2, 4))
+
+    det_rows = []
+    oracle: dict[int, list] = {}
+    for pool_kind, n_pages2, mq in pools:
+        pw2, dw2, pp2 = _mk(params, cfg, max_batch=max_batch2,
+                            max_len=max_len2, n_pages=n_pages2)
+        if not oracle:
+            # request-at-a-time oracle streams (pool-size independent)
+            for rid, toks, mn, _ in pay2:
+                pres = pw2(toks)
+                dw2.join(rid, pres, max_new=mn)
+                oracle[rid] = [pres.first_token]
+                while dw2.n_active:
+                    for r, tok, fin in dw2.step():
+                        oracle[r].append(tok)
+        for adm in ("baseline", "early", "predictive"):
+            _reset([pw2], pp2)
+            loop = ServingLoop([pw2], dw2, chunks_per_iter=1, max_queue=mq,
+                               admission=adm)
+            # submits interleaved with iterations — deterministic arrival
+            # pressure, no thread timing in the gated counts
+            for rid, toks, mn, _ in pay2:
+                loop.submit(rid, toks, max_new=mn)
+                loop.iterate()
+            loop.close_intake()
+            loop.run()
+            pp2.check_leaks()
+            bit_exact = all(loop.outputs[rid].tokens == oracle[rid]
+                            for rid in loop.outputs
+                            if loop.outputs[rid].done)
+            s = loop.stats
+            det_rows.append(dict(
+                pool=pool_kind, admission=adm, submitted=s["submitted"],
+                rejected=s["rejected"], completed=s["completed"],
+                total_tokens=sum(
+                    len(o.tokens) for o in loop.outputs.values()),
+                decode_steps=s["decode_steps"],
+                prefill_chunks=s["prefill_chunks"], join_oom=s["join_oom"],
+                bit_exact=bit_exact))
+            assert bit_exact, \
+                f"{pool_kind}/{adm}: accepted streams diverged from oracle"
+    emit("serving_loop_mixed", det_rows)
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", "--quick", dest="fast", action="store_true")
+    raise SystemExit(main(fast=ap.parse_args().fast))

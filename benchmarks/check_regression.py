@@ -61,6 +61,14 @@ GATED_TABLES: dict[str, tuple[tuple[str, ...], float, float]] = {
         ("dense_fit", "paged_fit", "fit_ratio", "logical_pages",
          "physical_pages"),
         0.0, 0.0),
+    # serving-loop scheduling counts are exact (deterministic interleave:
+    # no TBT budget, submits interleaved with iterations on one thread);
+    # the serving_loop_goodput table is wall-clock and asserts its own
+    # orderings (SLO attainment, p99, bit-exactness) in-process
+    "serving_loop_mixed": (
+        ("submitted", "rejected", "completed", "total_tokens",
+         "decode_steps", "prefill_chunks", "join_oom"),
+        0.0, 0.0),
 }
 
 

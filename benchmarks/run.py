@@ -31,14 +31,16 @@ def main(argv=None) -> int:
                             bench_global_pool, bench_kernels,
                             bench_layerwise, bench_overload,
                             bench_paged_decode, bench_policies,
-                            bench_scheduling, bench_ssd_store,
-                            bench_stage_model, bench_tiered_cache)
+                            bench_scheduling, bench_serving_loop,
+                            bench_ssd_store, bench_stage_model,
+                            bench_tiered_cache)
     benches = {
         "cache_policy": bench_cache_policy.main,     # Table 1
         "tiered_cache": bench_tiered_cache.main,     # DRAM+SSD hierarchy
         "ssd_store": bench_ssd_store.main,           # file-backed tier (§5.2)
         "global_pool": bench_global_pool.main,       # cross-node peer handoff
         "paged_decode": bench_paged_decode.main,     # block-table substrate
+        "serving_loop": bench_serving_loop.main,     # continuous batching
         "stage_model": bench_stage_model.main,       # Figure 2
         "layerwise": bench_layerwise.main,           # Figure 7
         "scheduling": bench_scheduling.main,         # Figure 8

@@ -70,6 +70,14 @@ def main():
     ap.add_argument("--device-pages", type=int, default=0,
                     help="device page-pool size (0 = sized from the decode "
                          "workers' slot budget)")
+    ap.add_argument("--loop", action="store_true",
+                    help="drive the always-on ServingLoop (thread-fed "
+                         "arrivals, chunked prefill interleaved with decode "
+                         "steps, admission backpressure) instead of the "
+                         "Conductor's phase-at-a-time dispatch")
+    ap.add_argument("--tbt-budget", type=float, default=None,
+                    help="loop TBT budget in seconds (default: "
+                         "deterministic one-chunk-per-iteration interleave)")
     args = ap.parse_args()
 
     if args.global_pool and not args.ssd_blocks:
@@ -133,6 +141,53 @@ def main():
     for r in trace:
         r.input_length = min(max(r.input_length, 64), 1536)
         r.hash_ids = r.hash_ids[:max(r.input_length // BLOCK_TOKENS, 1)]
+
+    if args.loop:
+        # always-on mode: ONE ServingLoop owns the page pool, a single
+        # decode batch, and both prefill workers; routing (deepest pool
+        # residency) and backpressure live in the loop, so the Conductor
+        # is bypassed. A feeder thread plays the trace's arrival order.
+        import threading
+
+        from repro.serving.loop import ServingLoop
+        print(f"serving loop: {n_p} prefill workers -> 1 decode batch "
+              f"(max_batch={dws[0].max_batch}); {len(trace)} requests\n")
+        loop = ServingLoop(pws, dws[0], tbt_budget_s=args.tbt_budget,
+                           max_queue=max(args.requests, 8))
+        payloads = [(r.req_id, realize_request_tokens(r, cfg.vocab_size),
+                     min(args.max_new, max(r.output_length, 2)),
+                     r.hash_ids[0] if r.hash_ids else None) for r in trace]
+
+        def feeder():
+            for rid, toks, mn, sess in payloads:
+                loop.submit(rid, toks, max_new=mn, session=sess)
+            loop.close_intake()
+
+        t0 = time.time()
+        th = threading.Thread(target=feeder)
+        th.start()
+        ls = loop.run()
+        th.join()
+        dt = time.time() - t0
+        total_tokens = sum(len(o.tokens) for o in loop.outputs.values())
+        tbt = loop.tbt_stats()
+        reused = sum(pw.stats["reused_blocks"] for pw in pws)
+        print(f"served {ls['completed']} requests, {total_tokens} tokens "
+              f"in {dt:.1f}s — {ls['decode_steps']} decode steps, "
+              f"{ls['prefill_chunks']} prefill chunks interleaved, "
+              f"{ls['rejected']} rejected by backpressure")
+        print(f"prefix reuse: {reused} blocks; TBT p50/p99 "
+              f"{tbt['p50'] * 1e3:.1f}/{tbt['p99'] * 1e3:.1f} ms")
+        if page_pool is not None:
+            ps = page_pool.stats
+            print(f"paged substrate: {page_pool.used_pages}/"
+                  f"{page_pool.n_pages} pages held, {ps['pages_written']} "
+                  f"written, {ps['shared_adoptions']} shared-prefix "
+                  f"adoptions, {dws[0].stats['zero_copy_joins']} zero-copy "
+                  f"joins")
+        for pool in pools:
+            pool.close()
+        return
 
     print(f"cluster: {n_p} prefill + {n_d} decode workers; "
           f"{len(trace)} requests\n")

@@ -43,6 +43,50 @@ class _InFlight:
     decode_iid: int
 
 
+@dataclass
+class BackpressureSignal:
+    """Engine-side load snapshot the serving loop hands to admission.
+
+    The simulator's policies gate on SLO-derived loads; a live engine has
+    direct occupancy counters instead: the arrival queue, the decode slot
+    table, the device page pool, and (for the predictive view) prefills
+    that were accepted but have not joined a slot yet — the §7.3/§7.4
+    information-lag term, measured rather than predicted.
+    """
+    queue_depth: int
+    queue_capacity: int
+    slots_used: int
+    slots_total: int
+    prefills_active: int = 0        # accepted, still mid-chunks (not joined)
+    pages_pinned: int = 0           # DevicePagePool pressure()["pinned"]
+    pages_total: int = 0
+
+    @property
+    def queue_frac(self) -> float:
+        return self.queue_depth / self.queue_capacity \
+            if self.queue_capacity else 0.0
+
+    @property
+    def slot_frac(self) -> float:
+        return self.slots_used / self.slots_total if self.slots_total else 0.0
+
+    @property
+    def page_frac(self) -> float:
+        return self.pages_pinned / self.pages_total if self.pages_total \
+            else 0.0
+
+    def committed_frac(self, include_prefills: bool) -> float:
+        """Committed work over serving capacity (queued + decoding, plus —
+        for the predictive view — accepted-but-not-yet-joined prefills)."""
+        cap = self.queue_capacity + self.slots_total
+        if not cap:
+            return 0.0
+        n = self.queue_depth + self.slots_used
+        if include_prefills:
+            n += self.prefills_active
+        return n / cap
+
+
 class AdmissionPolicy:
     """Wraps a Conductor with overload admission. Subclasses decide.
 
@@ -68,6 +112,7 @@ class AdmissionPolicy:
     # best-effort traffic sheds at base_limit; each priority level buys
     # priority_relief more load headroom (hard SLO checks stay universal)
     base_limit = 0.85
+    default_relief = 0.25           # priority_relief when no instance exists
 
     def load_limit(self, req: Request) -> float:
         return self.base_limit + self.priority_relief * max(req.priority, 0)
@@ -88,6 +133,19 @@ class AdmissionPolicy:
 
     def admit(self, req: Request, now: float) -> bool:
         raise NotImplementedError
+
+    # ---- engine-side backpressure (serving loop) ----
+    @classmethod
+    def engine_load(cls, sig: BackpressureSignal) -> float:
+        """Load the policy sees from a live-engine snapshot. Mirrors the
+        simulator semantics: base/stage-local policies only look at the
+        stage in front of them."""
+        raise NotImplementedError
+
+    @classmethod
+    def engine_admit(cls, sig: BackpressureSignal, priority: int = 0) -> bool:
+        limit = cls.base_limit + cls.default_relief * max(priority, 0)
+        return cls.engine_load(sig) <= limit
 
     def schedule(self, req: Request, now: float):
         from repro.core.conductor import Decision
@@ -118,6 +176,13 @@ class BaselineAdmission(AdmissionPolicy):
     def admit(self, req: Request, now: float) -> bool:
         return self.prefill_load(now) <= self.load_limit(req)
 
+    @classmethod
+    def engine_load(cls, sig: BackpressureSignal) -> float:
+        # stage-local: only the intake queue in front of prefill — blind
+        # to decode saturation (the §7.2 waste shows up as joins that
+        # stall after the prefill already ran)
+        return sig.queue_frac
+
 
 @register_policy("admission", "early")
 class EarlyRejection(AdmissionPolicy):
@@ -130,6 +195,12 @@ class EarlyRejection(AdmissionPolicy):
     def admit(self, req: Request, now: float) -> bool:
         return max(self.prefill_load(now),
                    self.decode_load(now)) <= self.load_limit(req)
+
+    @classmethod
+    def engine_load(cls, sig: BackpressureSignal) -> float:
+        # both pools' CURRENT state — but blind to accepted requests still
+        # mid-prefill, the engine-side analogue of the §7.3 stale view
+        return max(sig.committed_frac(include_prefills=False), sig.page_frac)
 
 
 @register_policy("admission", "predictive")
@@ -175,6 +246,12 @@ class PredictiveEarlyRejection(AdmissionPolicy):
         horizon = min(p.queue_time(now) for p in self.c.P) \
             + self.c.P[0].cost.prefill_time(req.input_length, 0)
         return self.predicted_decode_load(now, horizon) <= limit
+
+    @classmethod
+    def engine_load(cls, sig: BackpressureSignal) -> float:
+        # §7.4 without prediction error: the engine KNOWS its in-flight
+        # prefills, so counting them closes the information lag directly
+        return max(sig.committed_frac(include_prefills=True), sig.page_frac)
 
 
 def make_admission(name: str, conductor, **kw) -> AdmissionPolicy:

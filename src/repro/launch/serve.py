@@ -3,14 +3,17 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --requests 16 [--trace trace.jsonl]
 
-Runs the REAL engines (reduced model on CPU): a PrefillWorker with the
-host-DRAM KVCache pool (prefix reuse + chunked incremental prefill) feeds
-a continuous-batching DecodeWorker — the executable §3 workflow. With
---trace, request arrival order/lengths/prefix structure come from a
-Mooncake-format trace (hash chains realised to actual tokens). With
---peer-ssd-dir, blocks a PREVIOUS run demoted to its SSD store become
-cross-node-fetchable through a shared GlobalBlockDirectory (the global
-pool, across launcher runs — same seed ⇒ same hash chains).
+Runs the REAL engines (reduced model on CPU). By default requests flow
+through the always-on ``ServingLoop``: a thread feeds arrivals, prefill
+chunks interleave between continuous-batching decode steps, and admission
+backpressure sheds load when the queue/slots/page pool saturate — the §3
+workflow as one sustained iteration. ``--no-loop`` keeps the original
+phase-at-a-time driver (full prefill, join, then decode). With --trace,
+request arrival order/lengths/prefix structure come from a Mooncake-format
+trace (hash chains realised to actual tokens). With --peer-ssd-dir, blocks
+a PREVIOUS run demoted to its SSD store become cross-node-fetchable
+through a shared GlobalBlockDirectory (the global pool, across launcher
+runs — same seed ⇒ same hash chains).
 """
 from __future__ import annotations
 
@@ -26,6 +29,21 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", default=None)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--no-loop", action="store_true",
+                    help="phase-at-a-time driver (full prefill + join + "
+                         "decode) instead of the interleaved serving loop")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="N PrefillWorkers feeding the loop's decode batch")
+    ap.add_argument("--tbt-budget", type=float, default=None,
+                    help="loop TBT budget in seconds: fit prefill chunks "
+                         "into the slack it leaves per decode step "
+                         "(default: deterministic chunks-per-iter mode)")
+    ap.add_argument("--chunks-per-iter", type=int, default=1,
+                    help="prefill chunks between decode steps when no "
+                         "--tbt-budget is given")
+    ap.add_argument("--admission", default="predictive",
+                    choices=("baseline", "early", "predictive"),
+                    help="backpressure policy evaluated at submit()")
     ap.add_argument("--pool-blocks", type=int, default=4096)
     ap.add_argument("--ssd-blocks", type=int, default=0,
                     help="SSD-tier capacity in blocks (0 = flat DRAM pool)")
@@ -102,28 +120,61 @@ def main(argv=None) -> int:
 
     dw = DecodeWorker(params, cfg, max_batch=args.max_batch, max_len=max_len,
                       substrate=args.decode_substrate, page_pool=page_pool)
+    payloads = [(r.req_id, realize_request_tokens(r, cfg.vocab_size),
+                 min(args.max_new, max(r.output_length, 2)),
+                 r.hash_ids[0] if r.hash_ids else None) for r in reqs]
+    pws = [pw]
     t0 = time.time()
-    done, total_new = 0, 0
-    queue = list(reqs)
-    outputs: dict = {}
-    while queue or dw.n_active:
-        while queue and dw.n_active < args.max_batch:
-            r = queue.pop(0)
-            toks = realize_request_tokens(r, cfg.vocab_size)
-            pres = pw(toks, session=r.hash_ids[0] if r.hash_ids else None)
-            dw.join(r.req_id, pres, max_new=min(args.max_new,
-                                                max(r.output_length, 2)))
-            outputs[r.req_id] = [pres.first_token]
-            print(f"req {r.req_id:4d}: prefill {pres.prompt_len:5d} tokens, "
-                  f"reused {pres.reused_blocks} blocks, "
-                  f"computed {pres.prompt_len - 512 * pres.reused_blocks}")
-        for rid, tok, fin in dw.step():
-            outputs[rid].append(tok)
-            total_new += 1
-            if fin:
-                done += 1
+    if not args.no_loop:
+        import threading
+
+        from repro.serving.loop import ServingLoop
+        pws += [PrefillWorker(params, cfg, pool, prefill_chunk=256,
+                              ssd_mode=args.ssd_mode, page_pool=page_pool)
+                for _ in range(args.prefill_workers - 1)]
+        loop = ServingLoop(pws, dw, tbt_budget_s=args.tbt_budget,
+                           chunks_per_iter=args.chunks_per_iter,
+                           max_queue=max(args.requests, 8),
+                           admission=args.admission)
+
+        def feeder():
+            for rid, toks, mn, sess in payloads:
+                loop.submit(rid, toks, max_new=mn, session=sess)
+            loop.close_intake()
+
+        th = threading.Thread(target=feeder)
+        th.start()
+        ls = loop.run()
+        th.join()
+        done = ls["completed"]
+        total_new = sum(len(o.tokens) for o in loop.outputs.values())
+        tbt = loop.tbt_stats()
+        print(f"loop: {ls['iterations']} iterations, {ls['decode_steps']} "
+              f"decode steps, {ls['prefill_chunks']} prefill chunks "
+              f"interleaved, {ls['rejected']} rejected by "
+              f"'{args.admission}' backpressure, TBT p50/p99 "
+              f"{tbt['p50'] * 1e3:.1f}/{tbt['p99'] * 1e3:.1f} ms")
+    else:
+        done, total_new = 0, 0
+        queue = list(payloads)
+        outputs: dict = {}
+        while queue or dw.n_active:
+            while queue and dw.n_active < args.max_batch:
+                rid, toks, mn, sess = queue.pop(0)
+                pres = pw(toks, session=sess)
+                dw.join(rid, pres, max_new=mn)
+                outputs[rid] = [pres.first_token]
+                print(f"req {rid:4d}: prefill {pres.prompt_len:5d} tokens, "
+                      f"reused {pres.reused_blocks} blocks, "
+                      f"computed "
+                      f"{pres.prompt_len - 512 * pres.reused_blocks}")
+            for rid, tok, fin in dw.step():
+                outputs[rid].append(tok)
+                total_new += 1
+                if fin:
+                    done += 1
     dt = time.time() - t0
-    st = pw.stats
+    st = {k: sum(w.stats[k] for w in pws) for k in pw.stats}
     print(f"\nserved {done} requests in {dt:.1f}s — "
           f"{total_new / dt:.1f} tok/s decode, "
           f"pool: {pool.n_blocks} blocks resident, "

@@ -1,11 +1,13 @@
 """Serving substrate: paged device KV cache, chunked-prefill +
 continuous-batching engines, CPP pipelined prefill (§5.1), layer-wise
 prefill semantics (§5.2)."""
-from repro.serving.engine import (DecodeWorker, FetchPlan, HostKVPool,
-                                  PeerSource, PrefillResult, PrefillWorker,
-                                  PrefixHasher, StateCheckpointWorker,
-                                  connect_pools, prefix_hash_ids, stage_run)
+from repro.serving.engine import (ChunkedPrefill, DecodeWorker, FetchPlan,
+                                  HostKVPool, PeerSource, PrefillResult,
+                                  PrefillWorker, PrefixHasher,
+                                  StateCheckpointWorker, connect_pools,
+                                  prefix_hash_ids, stage_run)
 from repro.serving.layerwise import occupation_cost, schedule
+from repro.serving.loop import RequestOutput, ServingLoop
 from repro.serving.paged_cache import (DevicePagePool, PagedKVCache,
                                        assign_seq, free_seq, gather_kv,
                                        grow_seq, init_paged_cache, write_kv)

@@ -598,6 +598,50 @@ def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
         return None
 
 
+class ChunkedPrefill:
+    """A prefill suspended between device chunks — the serving loop's
+    interleave unit.
+
+    ``advance()`` runs exactly one device chunk (the first call also does
+    the hashing / fetch planning / pool reads that precede it) and
+    returns True once the request is complete, with the finished
+    ``PrefillResult`` in ``.result``. Draining the generator in one go is
+    bit-exact with the old blocking path — it IS the blocking path, which
+    is why ``PrefillWorker.__call__`` is now implemented on top of this.
+    """
+
+    def __init__(self, worker: "PrefillWorker", tokens: np.ndarray,
+                 session=None) -> None:
+        self.worker = worker
+        self.tokens = np.asarray(tokens)
+        self.prompt_len = len(self.tokens)
+        self.chunks_done = 0
+        self.result: Optional[PrefillResult] = None
+        self._gen = worker._chunks(self.tokens, session)
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def advance(self) -> bool:
+        """Run one device chunk; True once the prefill finished."""
+        if self.result is not None:
+            return True
+        try:
+            next(self._gen)
+            self.chunks_done += 1
+            return False
+        except StopIteration as e:
+            self.chunks_done += 1
+            self.result = e.value
+            return True
+
+    def drain(self) -> PrefillResult:
+        while not self.advance():
+            pass
+        return self.result
+
+
 class PrefillWorker:
     """§3 steps 1–3: KVCache reuse → incremental (chunked) prefill →
     layer-wise store-back. One request at a time (B = 1).
@@ -610,6 +654,13 @@ class PrefillWorker:
     tail streams from SSD layer-by-layer, and only then computes the
     uncached suffix. Verification failures shrink the loaded tail and the
     lost blocks are recomputed — wrong tokens are impossible.
+
+    Every path is CHUNK-RESUMABLE: ``start()`` returns a
+    ``ChunkedPrefill`` whose ``advance()`` runs one device chunk, so a
+    serving loop can interleave prefill chunks between decode iterations
+    (``__call__`` just drains it — the request-at-a-time oracle). Cold
+    prefill runs as the same chunked incremental-extend loop from an
+    empty cache, which is bit-identical to a monolithic prefill call.
     """
 
     def __init__(self, params, cfg: ModelConfig, pool: HostKVPool, *,
@@ -623,14 +674,12 @@ class PrefillWorker:
         self.ssd_mode = ssd_mode
         self.page_pool = page_pool      # shared DevicePagePool (paged handoff)
         self.hasher = PrefixHasher()
-        self._prefill = jax.jit(
-            lambda p, t, off: prefill(p, t, cfg, q_offset=off))
         self._extend = jax.jit(
             lambda p, t, c: decode_step(p, t, c, cfg))
         self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0,
                           ssd_loaded_blocks=0, overlapped_requests=0,
                           fallback_blocks=0, peer_blocks=0,
-                          skipped_blocks=0, page_oom=0)
+                          skipped_blocks=0, page_oom=0, chunks=0)
         self._t_block_ema: Optional[float] = None  # measured s / 512-tok blk
 
     def _note_compute(self, tokens: int, dt: float) -> None:
@@ -639,6 +688,23 @@ class PrefillWorker:
         per_block = dt * BLOCK_TOKENS / tokens
         self._t_block_ema = per_block if self._t_block_ema is None \
             else 0.7 * self._t_block_ema + 0.3 * per_block
+
+    def est_chunk_s(self) -> float:
+        """Measured seconds per device chunk (0.0 until warmed up) — the
+        serving loop budgets interleaved chunks against the TBT slack
+        with this."""
+        if self._t_block_ema is None:
+            return 0.0
+        return self._t_block_ema * self.chunk / BLOCK_TOKENS
+
+    def _chunk_extend(self, t, caches, lo: int, hi: int):
+        """One timed device chunk (the resumable unit)."""
+        t0 = time.monotonic()
+        logits, caches = self._extend(self.params, t[:, lo:hi], caches)
+        jax.block_until_ready(logits)
+        self._note_compute(hi - lo, time.monotonic() - t0)
+        self.stats["chunks"] += 1
+        return logits, caches
 
     def _stage(self, hash_ids, k_full, v_full, S) -> Optional[list[int]]:
         pages = stage_run(self.page_pool, hash_ids, k_full, v_full, S)
@@ -655,8 +721,18 @@ class PrefillWorker:
             page_gens=None if pages is None
             else self.page_pool.gens_of(pages))
 
+    def start(self, tokens: np.ndarray, session=None) -> ChunkedPrefill:
+        """Begin a chunk-resumable prefill (nothing runs until the first
+        ``advance()``)."""
+        return ChunkedPrefill(self, tokens, session=session)
+
     def __call__(self, tokens: np.ndarray,
                  session=None) -> PrefillResult:
+        return self.start(tokens, session=session).drain()
+
+    def _chunks(self, tokens: np.ndarray, session=None):
+        """Generator behind ``ChunkedPrefill``: yields between device
+        chunks; its StopIteration value is the ``PrefillResult``."""
         cfg = self.cfg
         assert cfg.attention_layers == cfg.n_layers, \
             "PrefillWorker KV path supports uniform attention stacks"
@@ -670,7 +746,9 @@ class PrefillWorker:
                 n_res = max((S - 1) // BLOCK_TOKENS, 0)  # recompute logits
             plan = plan.truncate(n_res)
             if plan.has_ssd or plan.has_remote:
-                return self._prefill_overlapped(tokens, hash_ids, plan)
+                result = yield from self._chunks_overlapped(
+                    tokens, hash_ids, plan)
+                return result
 
         # blocking path: flat pool, legacy tiered pool, or synchronous
         # file-backed/peer loads (ssd_mode="blocking")
@@ -682,9 +760,8 @@ class PrefillWorker:
             prefix_tokens = n_hit * BLOCK_TOKENS
 
         t = jnp.asarray(tokens[None, :], jnp.int32)
-        max_len = S
-        caches = init_caches(cfg, 1, max_len)
-        t0 = time.monotonic()
+        caches = init_caches(cfg, 1, S)
+        caches = caches._replace(length=jnp.asarray(0, jnp.int32))
         if n_hit:
             k_np, v_np = self.pool.get(hash_ids[:n_hit])
             kv = KVCache(
@@ -692,22 +769,18 @@ class PrefillWorker:
                 v=caches.kv.v.at[:, 0, :prefix_tokens].set(jnp.asarray(v_np)))
             caches = caches._replace(kv=kv,
                                      length=jnp.asarray(prefix_tokens, jnp.int32))
-            t0 = time.monotonic()        # exclude the (possibly SSD) load
-            # chunked incremental prefill over the uncached suffix
-            logits = None
-            for lo in range(prefix_tokens, S, self.chunk):
-                hi = min(lo + self.chunk, S)
-                logits, caches = self._extend(self.params, t[:, lo:hi], caches)
-            first = int(jnp.argmax(logits[0, -1]))
-            k_full = np.asarray(caches.kv.k[:, 0])
-            v_full = np.asarray(caches.kv.v[:, 0])
-        else:
-            # cold prefill (still chunk-pipelined in the CPP variant)
-            logits, pc = self._prefill(self.params, t, 0)
-            first = int(jnp.argmax(logits[0]))
-            k_full = np.asarray(pc.kv.k[:, 0])
-            v_full = np.asarray(pc.kv.v[:, 0])
-        self._note_compute(S - prefix_tokens, time.monotonic() - t0)
+        # chunked incremental prefill over the uncached suffix (a cold
+        # request is just the n_hit=0 case: extending an empty cache chunk
+        # by chunk is bit-identical to a monolithic prefill)
+        logits = None
+        for lo in range(prefix_tokens, S, self.chunk):
+            hi = min(lo + self.chunk, S)
+            logits, caches = self._chunk_extend(t, caches, lo, hi)
+            if hi < S:
+                yield               # suspension point for the serving loop
+        first = int(jnp.argmax(logits[0, -1]))
+        k_full = np.asarray(caches.kv.k[:, 0])
+        v_full = np.asarray(caches.kv.v[:, 0])
 
         # layer-wise store-back of every fresh full block (§5.2: on TPU the
         # per-layer store launches as soon as that layer's KV exists; here
@@ -728,9 +801,10 @@ class PrefillWorker:
                              new_blocks=n_total - n_hit, peer_blocks=n_peer,
                              **self._stage_result(hash_ids, k_full, v_full, S))
 
-    def _prefill_overlapped(self, tokens: np.ndarray, hash_ids: list[int],
-                            plan: FetchPlan) -> PrefillResult:
-        """Head recompute ∥ tail SSD load (§5.2 / Jin et al., executable).
+    def _chunks_overlapped(self, tokens: np.ndarray, hash_ids: list[int],
+                           plan: FetchPlan):
+        """Head recompute ∥ tail SSD load (§5.2 / Jin et al., executable),
+        as a chunk-resumable generator.
 
         Timeline: pick split s via ``overlap_split``; blocks [0, d0) come
         from DRAM free; launch async layer-wise loads of blocks [s, n);
@@ -773,10 +847,9 @@ class PrefillWorker:
         # KV is set straight into the arena from the pool — and only the
         # non-resident runs between them recompute (incremental prefill
         # resumes after each assembled run, so attention still sees every
-        # prior token)
-        logits = None
-        head_tokens = 0                 # tokens actually recomputed
-        t0 = time.monotonic()
+        # prior token). Every recompute chunk is a suspension point; the
+        # suffix below is guaranteed non-empty, so yielding after each
+        # head chunk never strands the result.
         i = d0
         while i < s:
             if plan.tiers[i] == "dram":
@@ -797,13 +870,9 @@ class PrefillWorker:
                     j += 1
                 for lo in range(i * B, j * B, self.chunk):
                     hi = min(lo + self.chunk, j * B)
-                    logits, caches = self._extend(self.params, t[:, lo:hi],
-                                                  caches)
-                head_tokens += (j - i) * B
+                    _, caches = self._chunk_extend(t, caches, lo, hi)
+                    yield
             i = j
-        if logits is not None:
-            jax.block_until_ready(logits)
-        dt_head = time.monotonic() - t0
         n_skip = ov.head_skipped
 
         # §5.2 barrier: verify + install the loaded tail
@@ -823,16 +892,15 @@ class PrefillWorker:
         # n_resident·B < S — which guarantees the logits below come from
         # position S-1 even when the head walk ended in a DRAM assembly.
         assert usable * B < S, (usable, S)
-        t1 = time.monotonic()
+        logits = None
         for lo in range(usable * B, S, self.chunk):
             hi = min(lo + self.chunk, S)
-            logits, caches = self._extend(self.params, t[:, lo:hi], caches)
+            logits, caches = self._chunk_extend(t, caches, lo, hi)
+            if hi < S:
+                yield
         first = int(jnp.argmax(logits[0, -1]))
         k_full = np.asarray(caches.kv.k[:, 0])
         v_full = np.asarray(caches.kv.v[:, 0])
-        dt_suffix = time.monotonic() - t1
-        self._note_compute(head_tokens + (S - usable * B),
-                           dt_head + dt_suffix)
 
         # store-back: the RECOMPUTED head runs (chunk-skipped DRAM blocks
         # are already pool-resident) and the fresh suffix blocks
@@ -951,6 +1019,33 @@ class DecodeWorker:
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    @property
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    @property
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self.slots)
+
+    def reserved_growth_pages(self) -> int:
+        """Worst-case device pages the active slots may still allocate:
+        growth to ``prompt_len + max_new`` plus one copy-on-write of a
+        shared tail page each. Admission must keep this many pages
+        obtainable (free + evictable) or a mid-decode ``alloc`` can OOM
+        a step — pages pinned by not-yet-joined prefills don't release
+        themselves."""
+        if self.substrate != "paged":
+            return 0
+        pt = self.page_pool.page_tokens
+        need = 0
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            final = s.prompt_len + s.max_new
+            held = int(self.n_pages_slot[i])
+            need += max(-(-final // pt) - held, 0) + 1
+        return need
+
     # ---- paged-substrate plumbing --------------------------------------
     def _adopt_pages(self, pres: PrefillResult) -> list[int]:
         """Take a reference on the request's page run: zero-copy when the
@@ -995,14 +1090,25 @@ class DecodeWorker:
         KVCache and add the request to the continuous batching process').
         Paged substrate: adoption of the staged page run — no dense
         full-depth copy."""
-        slot = next(i for i, s in enumerate(self.slots) if s is None)
+        if not self.has_free_slot:
+            # NOT StopIteration (a bare next() here): inside a driver
+            # generator that would be swallowed as silent termination
+            raise RuntimeError(
+                f"decode batch full: all {self.max_batch} slots occupied — "
+                f"check has_free_slot before join")
+        slot = self.slots.index(None)
         L = pres.prompt_len
+        # both substrates: an overlong request must fail loudly up front.
+        # The dense arena's .at[].set past max_len is silently DROPPED on
+        # CPU (jax out-of-bounds update semantics), which decodes wrong
+        # tokens instead of erroring; the paged table would outgrow
+        # max_pages mid-decode.
+        if L + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({L}) + max_new ({max_new}) exceeds max_len "
+                f"({self.max_len}) — the slot would outgrow its KV capacity "
+                f"mid-decode")
         if self.substrate == "paged":
-            if L + max_new > self.max_len:
-                raise ValueError(
-                    f"prompt ({L}) + max_new ({max_new}) exceeds max_len "
-                    f"({self.max_len}) — the slot would outgrow its block "
-                    f"table mid-decode")
             pages = self._adopt_pages(pres)
             assert len(pages) <= self.max_pages, \
                 f"prompt needs {len(pages)} pages > max_len's {self.max_pages}"

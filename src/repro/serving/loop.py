@@ -1,0 +1,341 @@
+"""Always-on serving loop: continuous batching with interleaved chunked
+prefill (§3's workflow as ONE iteration instead of phase-at-a-time).
+
+``ServingLoop`` owns one ``DecodeWorker`` (and through it the shared
+``DevicePagePool``) plus N ``PrefillWorker``s, and pulls requests from a
+thread-fed arrival queue. Each iteration:
+
+    arrivals → joins → one decode step → prefill chunks in the slack
+
+* **Admission** happens at ``submit()`` against a ``BackpressureSignal``
+  snapshot (queue depth, slot occupancy, in-flight prefills, pinned page
+  fraction) evaluated by a registered admission policy kind — the live
+  engine's counterpart of §7's early/predictive rejection. A rejected
+  request never consumes compute.
+* **Joins** are slot-level: a finished prefill enters the decode batch
+  through ``DecodeWorker.join`` only while ``has_free_slot``; a join that
+  hits device-page OOM is deferred and retried once decodes release pages.
+* **Chunked prefill interleave**: prefills advance one device chunk at a
+  time (``ChunkedPrefill.advance``) between decode steps. With a
+  ``tbt_budget_s`` the loop fits as many chunks as the measured chunk EMA
+  says fit in the slack the budget leaves after a decode step (always at
+  least one whenever any decode slot would otherwise starve prefill);
+  with no budget it runs a fixed ``chunks_per_iter`` — deterministic, the
+  mode tests and the gated benchmark use.
+
+Because chunk boundaries are suspension points of the SAME generator the
+blocking ``PrefillWorker.__call__`` drains, every emitted token is
+bit-exact with the request-at-a-time oracle regardless of how the loop
+slices the work.
+"""
+from __future__ import annotations
+
+import queue
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.policies.admission import BackpressureSignal
+from repro.core.policies.base import get_policy
+from repro.serving.engine import ChunkedPrefill, DecodeWorker, PrefillWorker
+
+
+@dataclass
+class _Arrival:
+    req_id: int
+    tokens: np.ndarray
+    max_new: int
+    session: Optional[object] = None
+    priority: int = 0
+
+
+@dataclass
+class _Active:
+    """A request whose prefill is mid-chunks on some worker."""
+    arrival: _Arrival
+    cp: ChunkedPrefill
+    worker_idx: int
+
+
+@dataclass
+class RequestOutput:
+    req_id: int
+    tokens: list = field(default_factory=list)
+    token_t: list = field(default_factory=list)   # monotonic emit times
+    done: bool = False
+
+
+class ServingLoop:
+    """Continuous-batching loop over one decode worker + N prefill workers.
+
+    ``submit()`` is thread-safe (any number of client threads feed the
+    arrival queue); ``run()`` is the engine thread. ``tbt_budget_s=None``
+    selects the deterministic interleave (exactly ``chunks_per_iter``
+    prefill chunks between decode steps).
+    """
+
+    def __init__(self, prefill_workers: list[PrefillWorker],
+                 decode_worker: DecodeWorker, *,
+                 tbt_budget_s: Optional[float] = None,
+                 chunks_per_iter: int = 1, max_queue: int = 64,
+                 admission: str = "predictive") -> None:
+        assert prefill_workers, "need at least one PrefillWorker"
+        self.pws = list(prefill_workers)
+        self.dw = decode_worker
+        self.page_pool = decode_worker.page_pool
+        self.tbt_budget_s = tbt_budget_s
+        self.chunks_per_iter = max(chunks_per_iter, 1)
+        self.max_queue = max_queue
+        self.policy = get_policy("admission", admission)
+        self._arrivals: "queue.Queue[_Arrival]" = queue.Queue()
+        self._intake_open = True
+        self._stopping = False
+        # engine-thread state
+        self._active: list[_Active] = []      # prefills mid-chunks
+        self._pending_join: list = []         # (arrival, PrefillResult)
+        self._busy: set[int] = set()          # worker idx with a live gen
+        self._rr = 0                          # chunk round-robin cursor
+        self._t_step_ema: Optional[float] = None
+        self.outputs: dict[int, RequestOutput] = {}
+        self.stats = dict(submitted=0, rejected=0, joined=0, completed=0,
+                          decode_steps=0, prefill_chunks=0, join_oom=0,
+                          iterations=0)
+
+    # ---- client side ---------------------------------------------------
+    def signal(self) -> BackpressureSignal:
+        """Live occupancy snapshot the admission policy evaluates."""
+        pressure = self.page_pool.pressure() if self.page_pool is not None \
+            else {}
+        return BackpressureSignal(
+            queue_depth=self._arrivals.qsize(),
+            queue_capacity=self.max_queue,
+            slots_used=self.dw.n_active,
+            slots_total=self.dw.max_batch,
+            prefills_active=len(self._active) + len(self._pending_join),
+            pages_pinned=pressure.get("pinned", 0),
+            pages_total=pressure.get("capacity", 0))
+
+    def submit(self, req_id: int, tokens: np.ndarray, max_new: int,
+               session=None, priority: int = 0) -> bool:
+        """Offer a request; False = shed by backpressure (nothing ran)."""
+        if not self._intake_open:
+            raise RuntimeError("serving loop intake is closed")
+        self.stats["submitted"] += 1
+        if self._arrivals.qsize() >= self.max_queue \
+                or not self.policy.engine_admit(self.signal(), priority):
+            self.stats["rejected"] += 1
+            return False
+        self._arrivals.put(_Arrival(req_id, np.asarray(tokens), max_new,
+                                    session, priority))
+        return True
+
+    def close_intake(self) -> None:
+        """No more submits; ``run()`` returns once in-flight work drains."""
+        self._intake_open = False
+
+    def stop(self) -> None:
+        """Abandon queued + mid-prefill work; finish active decodes."""
+        self._stopping = True
+        self._intake_open = False
+
+    # ---- engine side ---------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return (self._arrivals.empty() and not self._active
+                and not self._pending_join and self.dw.n_active == 0)
+
+    def run(self) -> dict:
+        """Drive iterations until intake is closed and everything drained.
+        Returns ``self.stats``."""
+        while not (self.idle and not self._intake_open):
+            if self._stopping:
+                self._drop_pending()
+                if self.dw.n_active == 0:
+                    break
+            self._iteration()
+        return self.stats
+
+    def iterate(self) -> None:
+        """One loop iteration (arrivals → joins → decode step → prefill
+        chunks) — for drivers that interleave ``submit`` calls with the
+        engine deterministically (tests, the gated benchmark) instead of
+        feeding from a thread."""
+        self._iteration()
+
+    def _drop_pending(self) -> None:
+        while True:
+            try:
+                self._arrivals.get_nowait()
+            except queue.Empty:
+                break
+        for act in self._active:
+            self._busy.discard(act.worker_idx)
+        self._active.clear()
+        for _, pres in self._pending_join:
+            pres.release_pages()
+        self._pending_join.clear()
+
+    def _iteration(self) -> None:
+        self.stats["iterations"] += 1
+        self._drain_arrivals()
+        self._try_joins()
+        t_step = self._decode_step()
+        self._run_chunks(t_step)
+
+    def _drain_arrivals(self) -> None:
+        while True:
+            try:
+                arr = self._arrivals.get_nowait()
+            except queue.Empty:
+                return
+            self._start_prefill(arr)
+
+    def _start_prefill(self, arr: _Arrival) -> None:
+        """Route to the free worker with the deepest pool residency for
+        this prompt (Conductor-style cache-aware routing, loop-local);
+        every worker busy → round-robin pile-up is fine, generators are
+        cheap until advanced."""
+        idle = [i for i in range(len(self.pws)) if i not in self._busy]
+        cand = idle if idle else list(range(len(self.pws)))
+        best, best_depth = cand[0], -1
+        for i in cand:
+            pw = self.pws[i]
+            ids = pw.hasher.hash_ids(arr.tokens, session=arr.session)
+            depth = pw.pool.plan_fetch(ids).n_resident
+            if depth > best_depth:
+                best, best_depth = i, depth
+        cp = self.pws[best].start(arr.tokens, session=arr.session)
+        self._active.append(_Active(arr, cp, best))
+        self._busy.add(best)
+        self.outputs[arr.req_id] = RequestOutput(req_id=arr.req_id)
+
+    def _join_headroom_ok(self, pres, max_new: int) -> bool:
+        """Admitting this request must leave every active slot's worst-
+        case growth obtainable — a join that eats the last free pages
+        turns into a mid-decode alloc OOM a few steps later, which no
+        amount of deferring can fix (pinned pages of pending joins never
+        release themselves)."""
+        pp = self.page_pool
+        if pp is None:
+            return True
+        p = pp.pressure()
+        pt = pp.page_tokens
+        final = pres.prompt_len + max_new
+        cand = max(-(-final // pt) - len(pres.pages or ()), 0) + 1
+        return p["free"] + p["evictable"] >= \
+            self.dw.reserved_growth_pages() + cand
+
+    def _try_joins(self) -> None:
+        still: list = []
+        for arr, pres in self._pending_join:
+            if not self.dw.has_free_slot:
+                still.append((arr, pres))
+                continue
+            if self.dw.n_active > 0 and \
+                    not self._join_headroom_ok(pres, arr.max_new):
+                self.stats["join_oom"] += 1
+                still.append((arr, pres))
+                continue
+            try:
+                self.dw.join(arr.req_id, pres, max_new=arr.max_new)
+            except MemoryError:
+                # device pages exhausted by live slots: wait for decodes
+                # to finish and release pages, then retry. With no active
+                # decode there is nothing to wait for — fail loudly
+                # instead of spinning.
+                self.stats["join_oom"] += 1
+                if self.dw.n_active == 0:
+                    raise RuntimeError(
+                        f"request {arr.req_id} cannot fit the device page "
+                        f"pool even with an empty decode batch") from None
+                still.append((arr, pres))
+                continue
+            self.stats["joined"] += 1
+            out = self.outputs[arr.req_id]
+            out.tokens.append(pres.first_token)
+            out.token_t.append(time.monotonic())
+        self._pending_join = still
+
+    def _decode_step(self) -> float:
+        """One continuous-batching decode iteration; returns its wall
+        seconds (0.0 when no slot is active)."""
+        if self.dw.n_active == 0:
+            return 0.0
+        t0 = time.monotonic()
+        emitted = self.dw.step()
+        dt = time.monotonic() - t0
+        self.stats["decode_steps"] += 1
+        self._t_step_ema = dt if self._t_step_ema is None \
+            else 0.7 * self._t_step_ema + 0.3 * dt
+        now = time.monotonic()
+        for rid, tok, fin in emitted:
+            out = self.outputs[rid]
+            out.tokens.append(tok)
+            out.token_t.append(now)
+            if fin:
+                out.done = True
+                self.stats["completed"] += 1
+        return dt
+
+    def _advance_one(self) -> bool:
+        """Advance the round-robin prefill one chunk; True if any ran."""
+        if not self._active:
+            return False
+        self._rr %= len(self._active)
+        act = self._active[self._rr]
+        done = act.cp.advance()
+        self.stats["prefill_chunks"] += 1
+        if done:
+            self._active.pop(self._rr)
+            self._busy.discard(act.worker_idx)
+            self._pending_join.append((act.arrival, act.cp.result))
+        else:
+            self._rr += 1
+        return True
+
+    def _run_chunks(self, t_step: float) -> None:
+        """Interleave prefill chunks into the post-step slack.
+
+        Budget mode: the TBT budget leaves ``tbt_budget_s − step_ema``
+        seconds of slack per iteration; fit chunks by the workers' chunk
+        EMA, guaranteeing ≥ 1 so prefill can't starve. No active decode →
+        run chunks until one prefill completes (nothing to delay).
+        Deterministic mode: exactly ``chunks_per_iter`` chunks."""
+        if not self._active:
+            return
+        if self.dw.n_active == 0:
+            # decode is idle: chunk until a prefill finishes so the next
+            # iteration has something to join (TTFT over unused slack)
+            while self._active and not self._pending_join:
+                self._advance_one()
+            return
+        if self.tbt_budget_s is None:
+            for _ in range(self.chunks_per_iter):
+                if not self._advance_one():
+                    return
+            return
+        step_ema = self._t_step_ema if self._t_step_ema is not None else t_step
+        slack = self.tbt_budget_s - step_ema
+        deadline = time.monotonic() + max(slack, 0.0)
+        ran = 0
+        while self._active:
+            chunk_s = max(pw.est_chunk_s() for pw in self.pws)
+            if ran > 0 and time.monotonic() + chunk_s > deadline:
+                break
+            self._advance_one()
+            ran += 1
+
+    # ---- reporting -----------------------------------------------------
+    def tbt_stats(self) -> dict:
+        """Inter-token gap percentiles over every completed request."""
+        gaps: list[float] = []
+        for out in self.outputs.values():
+            ts = out.token_t
+            gaps += [b - a for a, b in zip(ts, ts[1:])]
+        if not gaps:
+            return dict(n=0, p50=0.0, p99=0.0, max=0.0)
+        g = np.sort(np.asarray(gaps))
+        return dict(n=len(g), p50=float(np.percentile(g, 50)),
+                    p99=float(np.percentile(g, 99)), max=float(g[-1]))

@@ -261,6 +261,31 @@ class DevicePagePool:
     def used_pages(self) -> int:
         return int((self.refs > 0).sum())
 
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of usable pages (page 0 excluded) currently held."""
+        cap = self.n_pages - 1
+        return self.used_pages / cap if cap else 1.0
+
+    def pressure(self) -> dict:
+        """Occupancy snapshot for admission backpressure. ``pinned`` pages
+        (held by a live slot or staged result, not reclaimable) are the
+        signal that matters: registry-only runs evict on demand, so high
+        occupancy with low ``pinned_frac`` is a warm cache, not pressure."""
+        cap = self.n_pages - 1
+        evictable = sum(len(self.runs[h]) for h in self._evictable())
+        used = self.used_pages
+        pinned = used - evictable
+        return dict(
+            capacity=cap, free=len(self.free), used=used,
+            evictable=evictable, pinned=pinned,
+            occupancy=used / cap if cap else 1.0,
+            pinned_frac=pinned / cap if cap else 1.0)
+
     # ---- refcounted allocation ----------------------------------------
     def _evictable(self) -> list[int]:
         """Registered block hashes held ONLY by the registry, LRU first."""

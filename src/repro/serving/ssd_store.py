@@ -440,9 +440,15 @@ class AsyncPrefetcher:
     def __init__(self, store: SSDBlockStore) -> None:
         self.store = store
         self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()   # serialises fetch() vs close()
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="kv-prefetch")
         self._thread.start()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def fetch(self, keys: list[int],
               sources: Optional[dict] = None) -> PrefetchHandle:
@@ -455,14 +461,19 @@ class AsyncPrefetcher:
                 h.failed.add(key)
                 continue
             tasks.append((key, src, L))
-        if not tasks:
-            h._done.set()
-            return h
-        h._remaining = sum(L for _, _, L in tasks)
-        for layer in range(max(L for _, _, L in tasks)):
-            for key, src, L in tasks:
-                if layer < L:
-                    self._q.put((h, key, layer, L, src))
+        with self._lock:
+            # a fetch against a closed prefetcher must FAIL the handle
+            # immediately: its thread is (being) joined, so enqueued tasks
+            # would never be serviced and wait() would hang forever
+            if self._closed or not tasks:
+                h.failed.update(k for k, _, _ in tasks)
+                h._done.set()
+                return h
+            h._remaining = sum(L for _, _, L in tasks)
+            for layer in range(max(L for _, _, L in tasks)):
+                for key, src, L in tasks:
+                    if layer < L:
+                        self._q.put((h, key, layer, L, src))
         return h
 
     def _run(self) -> None:
@@ -471,7 +482,10 @@ class AsyncPrefetcher:
             if task is None:
                 return
             h, key, layer, L, src = task
-            if key in h.failed:          # skip remaining layers of a bad blk
+            # after close() the remaining queue drains as failures without
+            # touching the store (it is about to be closed underneath us);
+            # every in-flight handle still completes, degrading to recompute
+            if self._closed or key in h.failed:
                 h._deliver(key, layer, None, L)
                 continue
             try:
@@ -481,5 +495,13 @@ class AsyncPrefetcher:
             h._deliver(key, layer, pair, L)
 
     def close(self) -> None:
-        self._q.put(None)
-        self._thread.join(timeout=2.0)
+        """Deterministic shutdown: mark closed (new fetches fail fast, the
+        pending queue drains as failures instead of reading a store that is
+        about to close), then join the thread — no timeout, no leaked
+        thread. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(None)           # sentinel: queued work fails fast
+        self._thread.join()
