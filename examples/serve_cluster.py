@@ -164,7 +164,7 @@ def main():
             loop.close_intake()
 
         t0 = time.time()
-        th = threading.Thread(target=feeder)
+        th = threading.Thread(target=feeder, name="repro-loop-feeder")
         th.start()
         ls = loop.run()
         th.join()

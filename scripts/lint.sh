@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# repro-lint: repo-specific static analysis (stdlib only -- no jax, no
+# numpy, no package install). Exits non-zero on any unsuppressed,
+# unbaselined finding. See README "Static analysis".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m tools.replint "$@"

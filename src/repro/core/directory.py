@@ -44,10 +44,10 @@ class GlobalBlockDirectory:
     """Block key -> {node: tier} ownership map for one serving cluster."""
 
     def __init__(self) -> None:
-        self._owners: dict[int, dict] = {}
         self._lock = threading.RLock()
-        self.n_registers = 0
-        self.n_unregisters = 0
+        self._owners: dict[int, dict] = {}  #: guarded_by self._lock
+        self.n_registers = 0                #: guarded_by self._lock
+        self.n_unregisters = 0              #: guarded_by self._lock
 
     # ---- writes --------------------------------------------------------
     def register(self, key: int, node, tier: str) -> None:

@@ -142,7 +142,7 @@ def main(argv=None) -> int:
                 loop.submit(rid, toks, max_new=mn, session=sess)
             loop.close_intake()
 
-        th = threading.Thread(target=feeder)
+        th = threading.Thread(target=feeder, name="repro-loop-feeder")
         th.start()
         ls = loop.run()
         th.join()

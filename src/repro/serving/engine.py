@@ -596,6 +596,12 @@ def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
     except MemoryError:
         pool.release(held)
         return None
+    except BaseException:
+        # a non-capacity failure (bad shapes, CRC mismatch upstream, an
+        # interrupt) must not strand the partially-written run: release
+        # everything held so far and let the error propagate
+        pool.release(held)
+        raise
 
 
 class ChunkedPrefill:

@@ -31,6 +31,7 @@ slices the work.
 from __future__ import annotations
 
 import queue
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -90,8 +91,11 @@ class ServingLoop:
         self.max_queue = max_queue
         self.policy = get_policy("admission", admission)
         self._arrivals: "queue.Queue[_Arrival]" = queue.Queue()
-        self._intake_open = True
-        self._stopping = False
+        # guards the client-visible flags/counters that submit() threads
+        # and the engine thread both touch
+        self._lock = threading.Lock()
+        self._intake_open = True              #: guarded_by self._lock
+        self._stopping = False                #: guarded_by self._lock
         # engine-thread state
         self._active: list[_Active] = []      # prefills mid-chunks
         self._pending_join: list = []         # (arrival, PrefillResult)
@@ -99,6 +103,7 @@ class ServingLoop:
         self._rr = 0                          # chunk round-robin cursor
         self._t_step_ema: Optional[float] = None
         self.outputs: dict[int, RequestOutput] = {}
+        #: guarded_by self._lock
         self.stats = dict(submitted=0, rejected=0, joined=0, completed=0,
                           decode_steps=0, prefill_chunks=0, join_oom=0,
                           iterations=0)
@@ -120,12 +125,12 @@ class ServingLoop:
     def submit(self, req_id: int, tokens: np.ndarray, max_new: int,
                session=None, priority: int = 0) -> bool:
         """Offer a request; False = shed by backpressure (nothing ran)."""
-        if not self._intake_open:
+        if not self._intake_is_open():
             raise RuntimeError("serving loop intake is closed")
-        self.stats["submitted"] += 1
+        self._bump("submitted")
         if self._arrivals.qsize() >= self.max_queue \
                 or not self.policy.engine_admit(self.signal(), priority):
-            self.stats["rejected"] += 1
+            self._bump("rejected")
             return False
         self._arrivals.put(_Arrival(req_id, np.asarray(tokens), max_new,
                                     session, priority))
@@ -133,12 +138,26 @@ class ServingLoop:
 
     def close_intake(self) -> None:
         """No more submits; ``run()`` returns once in-flight work drains."""
-        self._intake_open = False
+        with self._lock:
+            self._intake_open = False
 
     def stop(self) -> None:
         """Abandon queued + mid-prefill work; finish active decodes."""
-        self._stopping = True
-        self._intake_open = False
+        with self._lock:
+            self._stopping = True
+            self._intake_open = False
+
+    def _intake_is_open(self) -> bool:
+        with self._lock:
+            return self._intake_open
+
+    def _stop_requested(self) -> bool:
+        with self._lock:
+            return self._stopping
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self.stats[key] += n
 
     # ---- engine side ---------------------------------------------------
     @property
@@ -148,14 +167,15 @@ class ServingLoop:
 
     def run(self) -> dict:
         """Drive iterations until intake is closed and everything drained.
-        Returns ``self.stats``."""
-        while not (self.idle and not self._intake_open):
-            if self._stopping:
+        Returns a snapshot of ``self.stats``."""
+        while not (self.idle and not self._intake_is_open()):
+            if self._stop_requested():
                 self._drop_pending()
                 if self.dw.n_active == 0:
                     break
             self._iteration()
-        return self.stats
+        with self._lock:
+            return dict(self.stats)
 
     def iterate(self) -> None:
         """One loop iteration (arrivals → joins → decode step → prefill
@@ -178,7 +198,7 @@ class ServingLoop:
         self._pending_join.clear()
 
     def _iteration(self) -> None:
-        self.stats["iterations"] += 1
+        self._bump("iterations")
         self._drain_arrivals()
         self._try_joins()
         t_step = self._decode_step()
@@ -235,7 +255,7 @@ class ServingLoop:
                 continue
             if self.dw.n_active > 0 and \
                     not self._join_headroom_ok(pres, arr.max_new):
-                self.stats["join_oom"] += 1
+                self._bump("join_oom")
                 still.append((arr, pres))
                 continue
             try:
@@ -245,14 +265,14 @@ class ServingLoop:
                 # to finish and release pages, then retry. With no active
                 # decode there is nothing to wait for — fail loudly
                 # instead of spinning.
-                self.stats["join_oom"] += 1
+                self._bump("join_oom")
                 if self.dw.n_active == 0:
                     raise RuntimeError(
                         f"request {arr.req_id} cannot fit the device page "
                         f"pool even with an empty decode batch") from None
                 still.append((arr, pres))
                 continue
-            self.stats["joined"] += 1
+            self._bump("joined")
             out = self.outputs[arr.req_id]
             out.tokens.append(pres.first_token)
             out.token_t.append(time.monotonic())
@@ -266,7 +286,7 @@ class ServingLoop:
         t0 = time.monotonic()
         emitted = self.dw.step()
         dt = time.monotonic() - t0
-        self.stats["decode_steps"] += 1
+        self._bump("decode_steps")
         self._t_step_ema = dt if self._t_step_ema is None \
             else 0.7 * self._t_step_ema + 0.3 * dt
         now = time.monotonic()
@@ -276,7 +296,7 @@ class ServingLoop:
             out.token_t.append(now)
             if fin:
                 out.done = True
-                self.stats["completed"] += 1
+                self._bump("completed")
         return dt
 
     def _advance_one(self) -> bool:
@@ -286,7 +306,7 @@ class ServingLoop:
         self._rr %= len(self._active)
         act = self._active[self._rr]
         done = act.cp.advance()
-        self.stats["prefill_chunks"] += 1
+        self._bump("prefill_chunks")
         if done:
             self._active.pop(self._rr)
             self._busy.discard(act.worker_idx)

@@ -29,6 +29,7 @@ Two tiers of API live here:
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -237,11 +238,14 @@ class DevicePagePool:
         self.page_tokens = page_tokens
         self.k_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
         self.v_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
-        self.free: list[int] = list(range(n_pages - 1, 0, -1))
-        self.refs = np.zeros(n_pages, np.int32)      # page 0 stays 0 forever
-        self.gens = np.zeros(n_pages, np.int64)      # bumped per allocation:
-        self.runs: dict[int, list[int]] = {}         # detects stale page runs
-        self._lru: list[int] = []                    # registry recency order
+        # reentrant: alloc -> eviction -> unregister -> release re-enters
+        self._lock = threading.RLock()
+        self.free: list[int] = list(range(n_pages - 1, 0, -1))  #: guarded_by self._lock
+        self.refs = np.zeros(n_pages, np.int32)  #: guarded_by self._lock
+        self.gens = np.zeros(n_pages, np.int64)  #: guarded_by self._lock
+        self.runs: dict[int, list[int]] = {}     #: guarded_by self._lock
+        self._lru: list[int] = []                #: guarded_by self._lock
+        #: guarded_by self._lock
         self.stats = dict(pages_written=0, shared_adoptions=0, cow_copies=0,
                           registry_evictions=0, alloc_failures=0)
 
@@ -259,11 +263,13 @@ class DevicePagePool:
 
     @property
     def used_pages(self) -> int:
-        return int((self.refs > 0).sum())
+        with self._lock:
+            return int((self.refs > 0).sum())
 
     @property
     def free_pages(self) -> int:
-        return len(self.free)
+        with self._lock:
+            return len(self.free)
 
     @property
     def occupancy(self) -> float:
@@ -276,19 +282,22 @@ class DevicePagePool:
         (held by a live slot or staged result, not reclaimable) are the
         signal that matters: registry-only runs evict on demand, so high
         occupancy with low ``pinned_frac`` is a warm cache, not pressure."""
-        cap = self.n_pages - 1
-        evictable = sum(len(self.runs[h]) for h in self._evictable())
-        used = self.used_pages
-        pinned = used - evictable
-        return dict(
-            capacity=cap, free=len(self.free), used=used,
-            evictable=evictable, pinned=pinned,
-            occupancy=used / cap if cap else 1.0,
-            pinned_frac=pinned / cap if cap else 1.0)
+        with self._lock:
+            cap = self.n_pages - 1
+            evictable = sum(len(self.runs[h])
+                            for h in self._evictable_locked())
+            used = int((self.refs > 0).sum())
+            pinned = used - evictable
+            return dict(
+                capacity=cap, free=len(self.free), used=used,
+                evictable=evictable, pinned=pinned,
+                occupancy=used / cap if cap else 1.0,
+                pinned_frac=pinned / cap if cap else 1.0)
 
     # ---- refcounted allocation ----------------------------------------
-    def _evictable(self) -> list[int]:
-        """Registered block hashes held ONLY by the registry, LRU first."""
+    def _evictable_locked(self) -> list[int]:
+        """Registered block hashes held ONLY by the registry, LRU first.
+        Caller holds ``self._lock``."""
         return [h for h in self._lru
                 if all(self.refs[p] == 1 for p in self.runs[h])]
 
@@ -296,87 +305,95 @@ class DevicePagePool:
         """Take ``n`` fresh pages (refcount 1 each), evicting registry-only
         runs LRU when the free list runs short. Raises ``MemoryError``
         (taking nothing) if pressure can't be relieved."""
-        if len(self.free) < n:
-            for h in self._evictable():
-                self.unregister(h)
-                if len(self.free) >= n:
-                    break
-        if len(self.free) < n:
-            self.stats["alloc_failures"] += 1
-            raise MemoryError(
-                f"device page pool OOM: want {n} pages, "
-                f"free {len(self.free)} of {self.n_pages - 1}")
-        pages = [self.free.pop() for _ in range(n)]
-        for p in pages:
-            self.refs[p] = 1
-            self.gens[p] += 1
-        return pages
+        with self._lock:
+            if len(self.free) < n:
+                for h in self._evictable_locked():
+                    self.unregister(h)
+                    if len(self.free) >= n:
+                        break
+            if len(self.free) < n:
+                self.stats["alloc_failures"] += 1
+                raise MemoryError(
+                    f"device page pool OOM: want {n} pages, "
+                    f"free {len(self.free)} of {self.n_pages - 1}")
+            pages = [self.free.pop() for _ in range(n)]
+            for p in pages:
+                self.refs[p] = 1
+                self.gens[p] += 1
+            return pages
 
     def gens_of(self, pages: list[int]) -> list[int]:
         """Allocation generations of a page run — a holder snapshots them
         and re-checks before taking late references (a freed-and-realloc'd
         page must read as STALE, never as someone else's KV)."""
-        return [int(self.gens[p]) for p in pages]
+        with self._lock:
+            return [int(self.gens[p]) for p in pages]
 
     def retain(self, pages: list[int]) -> None:
-        for p in pages:
-            if self.refs[p] <= 0:
-                raise RuntimeError(f"retain of unowned page {p}")
-            self.refs[p] += 1
+        with self._lock:
+            for p in pages:
+                if self.refs[p] <= 0:
+                    raise RuntimeError(f"retain of unowned page {p}")
+                self.refs[p] += 1
 
     def release(self, pages: list[int]) -> None:
-        for p in pages:
-            if p == 0:
-                continue                    # null-page padding in tables
-            if self.refs[p] <= 0:
-                raise RuntimeError(f"double free of page {p}")
-            self.refs[p] -= 1
-            if self.refs[p] == 0:
-                self.free.append(p)
+        with self._lock:
+            for p in pages:
+                if p == 0:
+                    continue                # null-page padding in tables
+                if self.refs[p] <= 0:
+                    raise RuntimeError(f"double free of page {p}")
+                self.refs[p] -= 1
+                if self.refs[p] == 0:
+                    self.free.append(p)
 
     # ---- block-hash registry (cross-slot prefix sharing) ---------------
     def register_block(self, hash_id: int, pages: list[int]) -> None:
         """Publish a full block's page run for later chains to adopt.
         The registry holds one reference of its own."""
         assert len(pages) == self.pages_per_block
-        if hash_id in self.runs:            # racing identical prefills
-            return
-        self.retain(pages)
-        self.runs[hash_id] = list(pages)
-        self._lru.append(hash_id)
+        with self._lock:
+            if hash_id in self.runs:        # racing identical prefills
+                return
+            self.retain(pages)
+            self.runs[hash_id] = list(pages)
+            self._lru.append(hash_id)
 
     def unregister(self, hash_id: int) -> None:
-        pages = self.runs.pop(hash_id, None)
-        if pages is None:
-            return
-        self._lru.remove(hash_id)
-        self.release(pages)
-        self.stats["registry_evictions"] += 1
+        with self._lock:
+            pages = self.runs.pop(hash_id, None)
+            if pages is None:
+                return
+            self._lru.remove(hash_id)
+            self.release(pages)
+            self.stats["registry_evictions"] += 1
 
     def lookup_chain(self, hash_ids: list[int]) -> int:
         """Deepest consecutive registered prefix (no side effects)."""
-        n = 0
-        for h in hash_ids:
-            if h not in self.runs:
-                break
-            n += 1
-        return n
+        with self._lock:
+            n = 0
+            for h in hash_ids:
+                if h not in self.runs:
+                    break
+                n += 1
+            return n
 
     def adopt_chain(self, hash_ids: list[int]) -> tuple[int, list[int]]:
         """Retain + return the page runs of the chain's registered prefix:
         (n_blocks_adopted, flat page ids). The caller owns one reference
         per page; physical pages are SHARED with every other adopter."""
-        n = self.lookup_chain(hash_ids)
-        pages: list[int] = []
-        for h in hash_ids[:n]:
-            run = self.runs[h]
-            self.retain(run)
-            pages.extend(run)
-            self._lru.remove(h)             # touch recency
-            self._lru.append(h)
-        if n:
-            self.stats["shared_adoptions"] += n
-        return n, pages
+        with self._lock:
+            n = self.lookup_chain(hash_ids)
+            pages: list[int] = []
+            for h in hash_ids[:n]:
+                run = self.runs[h]
+                self.retain(run)
+                pages.extend(run)
+                self._lru.remove(h)         # touch recency
+                self._lru.append(h)
+            if n:
+                self.stats["shared_adoptions"] += n
+            return n, pages
 
     # ---- device writes -------------------------------------------------
     def write_run(self, pages: list[int], k: np.ndarray,
@@ -396,23 +413,25 @@ class DevicePagePool:
             v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         idx = jnp.asarray(pages, jnp.int32)
         shape = (L, n, pt) + k.shape[2:]
-        self.k_pages = self.k_pages.at[:, idx].set(k.reshape(shape))
-        self.v_pages = self.v_pages.at[:, idx].set(v.reshape(shape))
-        self.stats["pages_written"] += n
+        with self._lock:
+            self.k_pages = self.k_pages.at[:, idx].set(k.reshape(shape))
+            self.v_pages = self.v_pages.at[:, idx].set(v.reshape(shape))
+            self.stats["pages_written"] += n
 
     def make_writable(self, page: int) -> int:
         """Copy-on-write: return a page id safe to append into. A page
         with a single owner is returned as-is; a shared page is copied to
         a fresh page (the caller must drop its reference to the old id
         and point its table at the new one)."""
-        if self.refs[page] == 1:
-            return page
-        (new,) = self.alloc(1)
-        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, page])
-        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, page])
-        self.release([page])
-        self.stats["cow_copies"] += 1
-        return new
+        with self._lock:
+            if self.refs[page] == 1:
+                return page
+            (new,) = self.alloc(1)
+            self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, page])
+            self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, page])
+            self.release([page])
+            self.stats["cow_copies"] += 1
+            return new
 
     # ---- host-side reads (oracle/debug) --------------------------------
     def read_seq(self, pages: list[int], n_tokens: int):
@@ -428,11 +447,14 @@ class DevicePagePool:
     def check_leaks(self) -> None:
         """Invariant: every non-free page is referenced and vice versa
         (property tests call this after each op)."""
-        free = set(self.free)
-        assert 0 not in free
-        for p in range(1, self.n_pages):
-            if p in free:
-                assert self.refs[p] == 0, f"freed page {p} still referenced"
-            else:
-                assert self.refs[p] > 0, f"page {p} leaked (no ref, not free)"
-        assert len(free) == len(self.free), "free list duplicates"
+        with self._lock:
+            free = set(self.free)
+            assert 0 not in free
+            for p in range(1, self.n_pages):
+                if p in free:
+                    assert self.refs[p] == 0, \
+                        f"freed page {p} still referenced"
+                else:
+                    assert self.refs[p] > 0, \
+                        f"page {p} leaked (no ref, not free)"
+            assert len(free) == len(self.free), "free list duplicates"

@@ -69,8 +69,11 @@ class SSDBlockStore:
         self._lock = threading.RLock()
         self._mm: Optional[mmap.mmap] = None
         self._mm_size = 0
+        #: guarded_by self._lock
         self._offsets: dict[int, int] = {}      # key -> slot offset (on disk)
+        #: guarded_by self._lock
         self._free: list[int] = []              # reusable slot offsets
+        #: guarded_by self._lock
         self._staged: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._shape: Optional[tuple] = None     # per-array (L, T, KV, Dh)
         self._dtype: Optional[np.dtype] = None
@@ -102,15 +105,17 @@ class SSDBlockStore:
         except (ValueError, KeyError, TypeError):
             return                              # torn meta: treat as fresh
         self._set_shape(np.empty(shape, dtype))
-        for off in range(0, size - self._slot_size + 1, self._slot_size):
-            raw = self._read_at(off, self._hdr_size)
-            if raw is None:
-                break
-            magic, key, L = _HDR_FIXED.unpack_from(raw)
-            if magic == _MAGIC and L == shape[0] and key not in self._offsets:
-                self._offsets[key] = off
-            else:
-                self._free.append(off)
+        with self._lock:
+            for off in range(0, size - self._slot_size + 1, self._slot_size):
+                raw = self._read_at(off, self._hdr_size)
+                if raw is None:
+                    break
+                magic, key, L = _HDR_FIXED.unpack_from(raw)
+                if magic == _MAGIC and L == shape[0] \
+                        and key not in self._offsets:
+                    self._offsets[key] = off
+                else:
+                    self._free.append(off)
 
     # ---- geometry ------------------------------------------------------
     def _set_shape(self, k: np.ndarray) -> None:
@@ -161,7 +166,8 @@ class SSDBlockStore:
 
     @property
     def staged_blocks(self) -> int:
-        return len(self._staged)
+        with self._lock:
+            return len(self._staged)
 
     def keys(self) -> list[int]:
         """Keys with flushed on-disk slots (staged blocks excluded)."""
@@ -190,7 +196,7 @@ class SSDBlockStore:
         staged, self._staged = self._staged, {}
         total = 0
         for key, (k, v) in staged.items():
-            off = self._alloc_slot()
+            off = self._alloc_slot_locked()
             buf = self._encode(key, k, v)
             os.pwrite(self._fd, buf, off)
             self._offsets[key] = off
@@ -204,7 +210,8 @@ class SSDBlockStore:
             time.sleep(total / self.write_bw)
         return len(staged)
 
-    def _alloc_slot(self) -> int:
+    def _alloc_slot_locked(self) -> int:
+        """Next slot offset for a flush. Caller holds ``self._lock``."""
         if self._free:
             return self._free.pop()
         end = (max(self._offsets.values()) + self._slot_size
@@ -247,8 +254,10 @@ class SSDBlockStore:
             self._mm_size = size
         return self._mm[off:end]
 
-    def _slot_header(self, key: int) -> Optional[tuple[int, list[int]]]:
-        """Validated (slot offset, per-layer CRCs) of an on-disk block."""
+    def _slot_header_locked(self, key: int) \
+            -> Optional[tuple[int, list[int]]]:
+        """Validated (slot offset, per-layer CRCs) of an on-disk block.
+        Caller holds ``self._lock``."""
         off = self._offsets.get(key)
         if off is None:
             return None
@@ -279,7 +288,7 @@ class SSDBlockStore:
             if st is not None:
                 k, v = st
                 return np.asarray(k[layer]), np.asarray(v[layer])
-            hdr = self._slot_header(key)
+            hdr = self._slot_header_locked(key)
             if hdr is None:
                 if key in self._offsets:
                     self.read_failures += 1
@@ -441,14 +450,15 @@ class AsyncPrefetcher:
         self.store = store
         self._q: queue.Queue = queue.Queue()
         self._lock = threading.Lock()   # serialises fetch() vs close()
-        self._closed = False
+        self._closed = False            #: guarded_by self._lock
         self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="kv-prefetch")
+                                        name="repro-kv-prefetch")
         self._thread.start()
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        with self._lock:
+            return self._closed
 
     def fetch(self, keys: list[int],
               sources: Optional[dict] = None) -> PrefetchHandle:
@@ -485,7 +495,9 @@ class AsyncPrefetcher:
             # after close() the remaining queue drains as failures without
             # touching the store (it is about to be closed underneath us);
             # every in-flight handle still completes, degrading to recompute
-            if self._closed or key in h.failed:
+            with self._lock:
+                closed = self._closed
+            if closed or key in h.failed:
                 h._deliver(key, layer, None, L)
                 continue
             try:

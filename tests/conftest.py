@@ -4,11 +4,42 @@ tests and benches must see the real single CPU device; multi-device tests
 import os
 import subprocess
 import sys
+import threading
+import time
 
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks(request):
+    """Every test must clean up the threads it starts: a surviving
+    non-daemon thread, or any thread this repo spawned (``repro-``
+    name prefix, daemon or not — the PR-6 ``AsyncPrefetcher.close()``
+    leak was a daemon), fails the test. Mark tests whose fixtures
+    legitimately outlive them with ``@pytest.mark.leaks_threads``."""
+    if request.node.get_closest_marker("leaks_threads"):
+        yield
+        return
+    before = set(threading.enumerate())
+    yield
+
+    def leaked():
+        return [t for t in threading.enumerate()
+                if t not in before and t.is_alive()
+                and (not t.daemon or t.name.startswith("repro-"))]
+
+    # short grace period: a close()/join() issued at test end may still
+    # be unwinding on a loaded machine
+    deadline = time.monotonic() + 2.0
+    while leaked() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    rest = leaked()
+    assert not rest, \
+        f"test leaked threads: {[t.name for t in rest]} -- close/join " \
+        f"every worker (or mark the test leaks_threads)"
 
 
 @pytest.fixture(scope="session")

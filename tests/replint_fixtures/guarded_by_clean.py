@@ -1,0 +1,48 @@
+"""CLEAN fixture: correct lock discipline for guarded-by. Parsed by
+replint only — never imported."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.refs = [0] * 8          #: guarded_by self._lock
+        #: guarded_by self._lock
+        self.stats = dict(allocs=0)
+        self.hint = 0                # unannotated: free to race
+
+    def guarded_read(self):
+        with self._lock:
+            return sum(self.refs)
+
+    def guarded_write(self):
+        with self._lock:
+            self.stats["allocs"] += 1
+            return self.refs[0]
+
+    def _sweep_locked(self):
+        # _locked suffix: the caller holds self._lock by convention
+        return [r for r in self.refs if r > 0]
+
+    def unrelated(self):
+        return self.hint + 1
+
+    def __del__(self):
+        self.refs.clear()            # teardown is single-threaded
+
+
+class Prefetcher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._closed = False         #: guarded_by self._lock
+        self.queue = []
+
+    def enqueue(self, task):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("closed")
+            self.queue.append(task)
+
+    def close(self):
+        with self._lock:
+            self._closed = True

@@ -1,0 +1,45 @@
+"""FLAG fixture: guarded-by violations, including the PR-6 post-close
+enqueue shape (check-then-act on an unlocked flag). Parsed by replint
+only — never imported."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.refs = [0] * 8          #: guarded_by self._lock
+        #: guarded_by self._lock
+        self.stats = dict(allocs=0)
+
+    def unguarded_read(self):
+        return sum(self.refs)                          # finding
+
+    def unguarded_write(self):
+        self.stats["allocs"] += 1                      # finding
+
+    def closure_escapes_lock(self):
+        with self._lock:
+            return lambda: self.refs[0]                # finding: runs later
+
+
+class Prefetcher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._closed = False         #: guarded_by self._lock
+        self.queue = []
+
+    def enqueue(self, task):
+        # the PR-6 bug shape: the closed check races close() because it
+        # reads the flag without the lock (post-close enqueue onto a
+        # dead worker -> the handle hangs forever)
+        if self._closed:                               # finding
+            raise RuntimeError("closed")
+        self.queue.append(task)
+
+
+class BadAnnotation:
+    def __init__(self):
+        self.items = []              #: guarded_by self._mutex
+
+    def read(self):
+        return len(self.items)

@@ -1,0 +1,24 @@
+"""FLAG fixture: the PR-5 paged-decode race — a live numpy block table
+zero-copied into a jitted step while the host keeps mutating it.
+Parsed by replint only — never imported."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DecodeWorker:
+    def __init__(self, n):
+        self.block_table = np.zeros((n, 16), np.int32)
+        self.seq_lens = np.zeros((n,), np.int32)
+        self._step = jax.jit(lambda tbl, lens: (tbl, lens))
+
+    def step(self, width):
+        # the PR-5 bug verbatim: jnp.asarray of a live table view keeps
+        # aliasing host memory on CPU; _prepare_writes mutates the table
+        # while the async step still reads it
+        tbl = jnp.asarray(self.block_table[:, :width])
+        lens = jnp.asarray(self.seq_lens)
+        return self._step(tbl, lens)                   # 2 findings
+
+    def step_direct(self):
+        return self._step(self.block_table, self.seq_lens)  # 2 findings

@@ -1,0 +1,21 @@
+"""CLEAN fixture: effects captured in commit closures. Parsed by
+replint only — never imported."""
+from repro.core.policies.base import Arm, register_policy
+
+
+@register_policy("routing", "patient_sender")
+class PatientSender:
+    def propose(self, ctx, inst):
+        cost = ctx.messenger.eta(inst.nid)   # read-only query: fine
+
+        def commit(now):
+            # effects live HERE: only the winning arm's commit runs
+            ctx.messenger.enqueue(inst.nid, ctx.blocks)
+            ctx.pool.insert(ctx.key, ctx.blocks)
+
+        return [Arm("peer_fetch", cost, commit=commit)]
+
+    def select(self, arms, ctx):
+        self._last = arms[0].kind            # policy-internal memory: fine
+        self.history.append(arms[0].kind)    # self attribute: fine
+        return min(arms, key=lambda a: a.cost)

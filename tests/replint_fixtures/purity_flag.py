@@ -1,0 +1,18 @@
+"""FLAG fixture: policy bodies with direct side effects. Parsed by
+replint only — never imported."""
+from repro.core.policies.base import Arm, register_policy
+
+
+@register_policy("routing", "eager_sender")
+class EagerSender:
+    def propose(self, ctx, inst):
+        # the bug the Arm.commit split exists to prevent: propose runs
+        # once per CANDIDATE instance, so this sends the KV for arms
+        # that never land (double transfer, double accounting)
+        ctx.messenger.enqueue(inst.nid, ctx.blocks)    # finding
+        ctx.pool.insert(ctx.key, ctx.blocks)           # finding
+        return [Arm("dram_hit", 0.0, commit=lambda now: None)]
+
+    def select(self, arms, ctx):
+        ctx.directory.touch(ctx.key)                   # finding
+        return arms[0]

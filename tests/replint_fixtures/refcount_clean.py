@@ -1,0 +1,52 @@
+"""CLEAN fixture: every acquire releases or transfers on all paths.
+Parsed by replint only — never imported."""
+
+
+def stage_with_finally(pool, kv):
+    run = pool.alloc(4)
+    try:
+        pool.write_run(run, kv)
+        return run
+    finally:
+        pool.release(run)
+
+
+def stage_with_handlers(pool, hash_ids, kv):
+    held = []
+    try:
+        adopted, pages = pool.adopt_chain(hash_ids)
+        held = list(pages)
+        run = pool.alloc(4)
+        held += run
+        pool.write_run(run, kv)
+        pages += run
+        return pages
+    except MemoryError:
+        pool.release(held)
+        return None
+    except BaseException:
+        pool.release(held)
+        raise
+
+
+def park_in_table(pool, table, i):
+    # single linear path: nothing between the alloc and the ownership
+    # transfer can raise
+    (pg,) = pool.alloc(1)
+    table[i] = pg
+
+
+def retain_and_return(pool, pages):
+    pool.retain(pages)
+    count = len(pages)
+    return pages, count
+
+
+def self_calls_are_the_primitives(self_pool):
+    class Pool:
+        def adopt(self, run):
+            # the pool's own implementation: covered dynamically by
+            # check_leaks tests, not by this rule
+            self.retain(run)
+            self.hot = run
+    return Pool

@@ -1,0 +1,32 @@
+"""FLAG fixture: page-run acquires that can leak. Parsed by replint
+only — never imported."""
+
+
+def stage_unprotected(pool, hash_ids, kv):
+    # the pre-fix stage_run shape: a MemoryError-only handler leaks the
+    # run on every OTHER exception write_run can raise
+    run = pool.alloc(4)
+    pool.write_run(run, kv)                            # finding: can raise
+    pool.register_block(hash_ids[0], run)
+    return run
+
+
+def partial_handler(pool, kv):
+    try:
+        run = pool.alloc(4)                            # finding
+        pool.write_run(run, kv)
+        return run
+    except MemoryError:
+        pool.release(run)
+        return None
+    # no catch-all: ValueError from write_run leaks the run
+
+
+def dropped_result(pool):
+    pool.alloc(2)                                      # finding: discarded
+
+
+def retained_then_branch(pool, pages, flags):
+    pool.retain(pages)                                 # finding
+    if flags:                                          # branch may skip
+        return pages

@@ -1,0 +1,32 @@
+"""CLEAN fixture: PEP-479-safe generator idioms. Parsed by replint
+only — never imported."""
+
+_DONE = object()
+
+
+def chunks(tokens, size):
+    for i in range(0, len(tokens), size):
+        yield tokens[i:i + size]
+
+
+def join_stream(gen):
+    result = gen.send(None)
+    if result is None:
+        return None          # a sentinel, not an exception
+    return result
+
+
+def interleave(a, b):
+    it = iter(b)
+    for x in a:
+        yield x
+        nxt = next(it, _DONE)
+        if nxt is _DONE:
+            return           # the PEP 479 way to end a generator
+        yield nxt
+
+
+def first(items):
+    # default-less next OUTSIDE a generator body is ordinary control
+    # flow: StopIteration propagates to the caller unmangled
+    return next(iter(items))

@@ -1,0 +1,29 @@
+"""FLAG fixture: the PR-6 class-1 bug — StopIteration misuse around
+generators. Parsed by replint only — never imported."""
+
+
+def chunks(tokens, size):
+    for i in range(0, len(tokens), size):
+        yield tokens[i:i + size]
+
+
+def join_stream(gen):
+    # the PR-6 join bug verbatim: a bare raise inside a helper consumed
+    # by the driver's for-loop silently ENDS the loop instead of
+    # surfacing the error
+    result = gen.send(None)
+    if result is None:
+        raise StopIteration                            # finding
+    return result
+
+
+def interleave(a, b):
+    it = iter(b)
+    for x in a:
+        yield x
+        yield next(it)                                 # finding
+
+
+def drain(gen):
+    while True:
+        yield next(gen)                                # finding

@@ -1,0 +1,174 @@
+"""Tests for the repro-lint static-analysis suite (tools/replint).
+
+Fixture policy: every rule has a paired FLAG fixture (must produce at
+least one finding of exactly that rule) and a CLEAN fixture (must be
+finding-free) under tests/replint_fixtures/. The flag fixtures encode
+the repo's real historical bugs — re-introducing the PR-5 missing
+``.copy()`` or any of the PR-6 shapes must trip a checker.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tools.replint.core import (lint_file, lint_paths, load_baseline,
+                                suppressed_lines, write_baseline)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "replint_fixtures")
+
+RULE_FIXTURES = [
+    ("guarded-by", "guarded_by"),
+    ("host-alias", "host_alias"),
+    ("stop-iteration", "stop_iteration"),
+    ("refcount-pair", "refcount"),
+    ("policy-purity", "purity"),
+]
+
+
+def _lint(name):
+    return lint_file(os.path.join(FIXTURES, name))
+
+
+# ---------------------------------------------------------------- fixtures
+
+@pytest.mark.parametrize("rule,stem", RULE_FIXTURES)
+def test_flag_fixture_fires(rule, stem):
+    findings = _lint(f"{stem}_flag.py")
+    assert findings, f"{stem}_flag.py produced no findings"
+    assert {f.rule for f in findings} == {rule}, \
+        f"unexpected rules: {[(f.rule, f.line) for f in findings]}"
+
+
+@pytest.mark.parametrize("rule,stem", RULE_FIXTURES)
+def test_clean_fixture_is_silent(rule, stem):
+    findings = _lint(f"{stem}_clean.py")
+    assert findings == [], \
+        f"false positives: {[f.render() for f in findings]}"
+
+
+# -------------------------------------------------- historical bug shapes
+
+def test_pr5_missing_copy_is_caught():
+    """DecodeWorker.step without the defensive .copy() (the PR-5 race)."""
+    findings = [f for f in _lint("host_alias_flag.py")
+                if "block_table" in f.message or "tbl" in f.message]
+    assert findings
+
+
+def test_pr6_bare_stop_iteration_join_is_caught():
+    findings = [f for f in _lint("stop_iteration_flag.py")
+                if "raise StopIteration" in f.message]
+    assert findings
+
+
+def test_pr6_post_close_enqueue_is_caught():
+    """Unlocked check of _closed (check-then-act vs close())."""
+    findings = [f for f in _lint("guarded_by_flag.py")
+                if "_closed" in f.message]
+    assert findings
+
+
+def test_pre_fix_stage_run_shape_is_caught():
+    """MemoryError-only handler around an acquire leaks on other errors."""
+    findings = [f for f in _lint("refcount_flag.py")
+                if f.rule == "refcount-pair"]
+    assert len(findings) >= 2
+
+
+# ------------------------------------------------------------ suppressions
+
+def test_suppressed_fixture_is_silent():
+    assert _lint("suppressed.py") == []
+
+
+def test_suppression_comment_parsing():
+    lines = [
+        "x = 1  # replint: ignore[guarded-by] -- reason",
+        "# replint: ignore[stop-iteration, refcount-pair]",
+        "y = 2",
+        "plain = 3",
+    ]
+    sup = suppressed_lines(lines)
+    assert sup[1] == {"guarded-by"}
+    assert sup[3] == {"stop-iteration", "refcount-pair"}
+    assert 4 not in sup
+
+
+def test_suppression_only_silences_named_rule(tmp_path):
+    p = tmp_path / "wrong_rule.py"
+    p.write_text(
+        "def f(gen):\n"
+        "    raise StopIteration  # replint: ignore[guarded-by] -- wrong\n")
+    findings = lint_file(str(p))
+    assert [f.rule for f in findings] == ["stop-iteration"]
+
+
+# --------------------------------------------------------------- baseline
+
+def test_baseline_roundtrip(tmp_path):
+    findings = _lint("stop_iteration_flag.py")
+    assert findings
+    base = tmp_path / "baseline.txt"
+    write_baseline(str(base), findings)
+    keys = load_baseline(str(base))
+    assert keys == {f.baseline_key for f in findings}
+    # every finding is grandfathered -> nothing "new"
+    assert [f for f in findings if f.baseline_key not in keys] == []
+
+
+def test_cli_baseline_gates_exit_code(tmp_path):
+    flag = os.path.join(FIXTURES, "refcount_flag.py")
+    base = tmp_path / "baseline.txt"
+    env = {**os.environ, "PYTHONPATH": REPO}
+
+    def run(*args):
+        return subprocess.run(
+            [sys.executable, "-m", "tools.replint", *args],
+            capture_output=True, text=True, cwd=REPO, env=env)
+
+    r = run(flag, "--no-baseline")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "refcount-pair" in r.stdout
+
+    r = run(flag, "--baseline", str(base), "--write-baseline")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    r = run(flag, "--baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 new" in r.stdout
+
+
+def test_cli_clean_file_exits_zero():
+    clean = os.path.join(FIXTURES, "guarded_by_clean.py")
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.replint", clean, "--no-baseline"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": REPO})
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_parse_error_is_reported(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    findings = lint_file(str(p))
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+# ------------------------------------------------------------- the gate
+
+def test_repo_is_clean():
+    """The committed tree must lint clean with an EMPTY baseline —
+    the same gate scripts/lint.sh enforces in CI."""
+    cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        findings, n_files = lint_paths(["src", "benchmarks"])
+    finally:
+        os.chdir(cwd)
+    assert n_files > 50
+    assert findings == [], "\n".join(f.render() for f in findings)
+    committed = load_baseline(
+        os.path.join(REPO, "tools", "replint", "baseline.txt"))
+    assert committed == set(), "baseline must stay empty"

@@ -196,7 +196,7 @@ def test_loop_mixed_load_bit_exact_with_thread_fed_arrivals(setup):
             time.sleep(0.005)
         loop.close_intake()
 
-    th = threading.Thread(target=feeder)
+    th = threading.Thread(target=feeder, name="repro-loop-feeder")
     th.start()
     stats = loop.run()
     th.join()

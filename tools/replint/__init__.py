@@ -1,0 +1,20 @@
+"""repro-lint: repo-specific static analysis for this codebase.
+
+Five AST checkers targeting the bug classes the repo has actually
+shipped (and fixed) in past PRs:
+
+  guarded-by      lock discipline for ``#: guarded_by self._lock``
+                  annotated attributes
+  host-alias      mutable numpy buffers flowing into jitted callables
+                  without a defensive ``.copy()`` (the PR-5 race)
+  stop-iteration  bare ``raise StopIteration`` / default-less ``next()``
+                  inside generator bodies (the PR-6 class-1 bug)
+  refcount-pair   page-run acquires must reach a release or an ownership
+                  transfer on every exit path
+  policy-purity   registered policy bodies must not mutate shared state
+                  outside ``Arm.commit`` closures
+
+Stdlib-only (``ast`` + ``re``); never imports jax or the repro package,
+so it runs anywhere python runs, in well under five seconds.
+"""
+from tools.replint.core import Finding, lint_paths, RULES  # noqa: F401

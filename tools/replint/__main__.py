@@ -1,0 +1,72 @@
+"""CLI: ``python -m tools.replint [paths...]``.
+
+Exit status is 0 when every finding is suppressed or baselined, 1 when
+new findings exist (or baselined findings went stale without
+--write-baseline cleaning them up being run -- stale entries are
+reported but do not fail the build).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from tools.replint.core import (RULES, Finding, lint_paths, load_baseline,
+                                write_baseline)
+
+DEFAULT_PATHS = ["src", "benchmarks"]
+DEFAULT_BASELINE = os.path.join("tools", "replint", "baseline.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.replint",
+        description="repro-lint: repo-specific static analysis "
+                    "(concurrency, jax host-aliasing, refcount "
+                    "invariants)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding fails")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline file with the current "
+                         "findings and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(r)
+        return 0
+
+    t0 = time.monotonic()
+    findings, n_files = lint_paths(args.paths or DEFAULT_PATHS)
+    dt = time.monotonic() - t0
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    new = [f for f in findings if f.baseline_key not in baseline]
+    n_base = len(findings) - len(new)
+    stale = baseline - {f.baseline_key for f in findings}
+
+    for f in new:
+        print(f.render())
+    for key in sorted(stale):
+        print(f"stale baseline entry (fixed? run --write-baseline): {key}")
+
+    print(f"replint: {n_files} files in {dt:.2f}s -- "
+          f"{len(new)} new finding(s), {n_base} baselined, "
+          f"{len(stale)} stale baseline entr(y/ies)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

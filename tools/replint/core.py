@@ -1,0 +1,213 @@
+"""Driver infrastructure for repro-lint.
+
+A checker is ``check(ctx) -> list[Finding]`` where ``ctx`` is a
+:class:`ModuleCtx` (path, source, raw lines, parsed tree with parent
+links).  ``lint_paths`` walks the given files/directories, runs every
+registered rule, and filters findings through per-line suppression
+comments:
+
+    do_racy_thing()  # replint: ignore[guarded-by] -- snapshot is advisory
+
+A suppression on its own line applies to the next line.  Several rules
+can share one comment: ``# replint: ignore[guarded-by, host-alias]``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str           # repo-relative, forward slashes
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    @property
+    def baseline_key(self) -> str:
+        # line numbers drift too easily to key on; path+rule+message is
+        # stable across unrelated edits to the same file
+        return f"{self.path}::{self.rule}::{self.message}"
+
+
+@dataclass
+class ModuleCtx:
+    path: str
+    src: str
+    lines: list[str]    # 1-indexed via lines[i-1]
+    tree: ast.Module
+
+
+# ---------------------------------------------------------------- helpers
+
+def add_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._replint_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST):
+    return getattr(node, "_replint_parent", None)
+
+
+def dotted(node) -> str | None:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_self_attr(node, name: str | None = None) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and (name is None or node.attr == name))
+
+
+def own_nodes(func: ast.AST):
+    """Walk a function body without descending into nested defs/lambdas."""
+    todo = list(ast.iter_child_nodes(func))
+    while todo:
+        node = todo.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        todo.extend(ast.iter_child_nodes(node))
+
+
+def functions_in(tree: ast.Module):
+    """Every FunctionDef/AsyncFunctionDef in the module, at any depth."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def classes_in(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def names_in(node) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# ------------------------------------------------------------ suppressions
+
+_SUPPRESS_RE = re.compile(r"#\s*replint:\s*ignore\[([\w\s,\-]+)\]")
+
+
+def suppressed_lines(lines: list[str]) -> dict[int, set[str]]:
+    """Map line number -> suppressed rule names on that line."""
+    out: dict[int, set[str]] = {}
+    for i, ln in enumerate(lines, 1):
+        m = _SUPPRESS_RE.search(ln)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        before = ln[:m.start()].rstrip()
+        # a standalone comment line guards the line that follows it
+        target = i if before.rstrip("#").strip() else i + 1
+        out.setdefault(target, set()).update(rules)
+    return out
+
+
+# --------------------------------------------------------------- baseline
+
+def load_baseline(path: str) -> set[str]:
+    if not os.path.exists(path):
+        return set()
+    keys = set()
+    with open(path, encoding="utf-8") as fh:
+        for ln in fh:
+            ln = ln.strip()
+            if ln and not ln.startswith("#"):
+                keys.add(ln)
+    return keys
+
+
+def write_baseline(path: str, findings: list[Finding]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("# repro-lint baseline: grandfathered findings, one "
+                 "baseline key per line.\n")
+        fh.write("# Target state is an EMPTY baseline -- fix, don't "
+                 "accumulate.\n")
+        for f in sorted({f.baseline_key for f in findings}):
+            fh.write(f + "\n")
+
+
+# ----------------------------------------------------------------- driver
+
+def _rules():
+    # imported lazily so ``from tools.replint.core import ...`` never
+    # cycles with the checker modules
+    from tools.replint import (guarded_by, host_alias, purity, refcount,
+                               stop_iteration)
+    return [
+        (guarded_by.RULE, guarded_by.check),
+        (host_alias.RULE, host_alias.check),
+        (stop_iteration.RULE, stop_iteration.check),
+        (refcount.RULE, refcount.check),
+        (purity.RULE, purity.check),
+    ]
+
+
+RULES = [name for name, _ in _rules()]
+
+
+def iter_py_files(paths: list[str]):
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_file(path: str, rules=None) -> list[Finding]:
+    rel = os.path.relpath(path).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(rel, e.lineno or 1, "parse-error",
+                        f"could not parse: {e.msg}")]
+    add_parents(tree)
+    ctx = ModuleCtx(rel, src, src.splitlines(), tree)
+    suppressed = suppressed_lines(ctx.lines)
+    out: list[Finding] = []
+    for rule, check in (rules or _rules()):
+        for f in check(ctx):
+            if rule in suppressed.get(f.line, ()):
+                continue
+            out.append(f)
+    return out
+
+
+def lint_paths(paths: list[str]) -> tuple[list[Finding], int]:
+    """Lint every .py file under ``paths``; returns (findings, n_files)."""
+    findings: list[Finding] = []
+    n = 0
+    for path in iter_py_files(paths):
+        n += 1
+        findings.extend(lint_file(path))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, n

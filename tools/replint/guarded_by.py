@@ -1,0 +1,153 @@
+"""guarded-by: lock discipline for annotated attributes.
+
+An attribute assignment annotated with a trailing/preceding comment
+
+    self._offsets: dict[str, int] = {}   #: guarded_by self._lock
+
+must only be read or written inside a ``with self._lock`` block (any
+``with`` whose context expression is ``self.<that lock>``), in every
+method of the owning class.
+
+Conventions honoured:
+
+  * ``__init__``/``__del__``/``__post_init__`` are exempt — no
+    concurrent access before construction finishes or during teardown.
+  * methods whose name ends in ``_locked`` are exempt: the caller holds
+    the lock (documented convention in this repo).
+  * nested functions and lambdas RESET the held-lock state — a closure
+    created under the lock typically runs later, after release.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.replint.core import Finding, ModuleCtx, is_self_attr
+
+RULE = "guarded-by"
+
+_ANNOT_RE = re.compile(r"#:\s*guarded_by\s+self\.(\w+)")
+_SELF_ATTR_RE = re.compile(r"self\.(\w+)")
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+_EXEMPT_METHODS = {"__init__", "__del__", "__post_init__"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> set[str]:
+    """self attributes assigned from a Lock/RLock/Condition factory."""
+    locks: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            value = node.value
+            if value is None:
+                continue
+            is_lock = any(
+                isinstance(n, ast.Attribute) and n.attr in _LOCK_FACTORIES
+                or isinstance(n, ast.Name) and n.id in _LOCK_FACTORIES
+                for n in ast.walk(value))
+            if not is_lock:
+                continue
+            for t in targets:
+                if is_self_attr(t):
+                    locks.add(t.attr)
+    return locks
+
+
+def _annotations(cls: ast.ClassDef, lines: list[str]) -> dict[str, str]:
+    """attr name -> lock name, from ``#: guarded_by self.<lock>`` comments
+    on (or immediately above) an attribute line inside the class body."""
+    out: dict[str, str] = {}
+    end = cls.end_lineno or cls.lineno
+    for i in range(cls.lineno, min(end, len(lines)) + 1):
+        ln = lines[i - 1]
+        m = _ANNOT_RE.search(ln)
+        if not m:
+            continue
+        lock = m.group(1)
+        code = ln[:m.start()]
+        target = code if code.strip() else \
+            (lines[i] if i < len(lines) else "")
+        am = _SELF_ATTR_RE.search(target)
+        if am:
+            out[am.group(1)] = lock
+        else:
+            # class-level declaration style: ``stats: dict  #: guarded_by``
+            fm = re.match(r"\s*(\w+)\s*[:=]", target)
+            if fm:
+                out[fm.group(1)] = lock
+    return out
+
+
+def _is_lock_expr(node, locks: set[str]) -> str | None:
+    """'with self._lock' / 'with self._cv' -> the lock attr name."""
+    if is_self_attr(node) and node.attr in locks:
+        return node.attr
+    return None
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    findings: list[Finding] = []
+    for cls in [n for n in ast.walk(ctx.tree)
+                if isinstance(n, ast.ClassDef)]:
+        guarded = _annotations(cls, ctx.lines)
+        if not guarded:
+            continue
+        locks = _lock_attrs(cls)
+        for attr, lock in sorted(guarded.items()):
+            if lock not in locks:
+                findings.append(Finding(
+                    ctx.path, cls.lineno, RULE,
+                    f"{cls.name}.{attr} is annotated guarded_by "
+                    f"self.{lock}, but the class never creates that "
+                    f"lock"))
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if meth.name in _EXEMPT_METHODS \
+                    or meth.name.endswith("_locked"):
+                continue
+            _scan(meth, cls, guarded, locks, ctx, findings)
+    return findings
+
+
+def _scan(meth, cls, guarded, locks, ctx, findings) -> None:
+    reported: set[int] = set()
+
+    def visit(node, held: frozenset):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not meth:
+            # closures run later: lock state does not carry in
+            for ch in ast.iter_child_nodes(node):
+                visit(ch, frozenset())
+            return
+        if isinstance(node, ast.With):
+            acquired = set()
+            for item in node.items:
+                visit(item.context_expr, held)
+                lk = _is_lock_expr(item.context_expr, locks)
+                if lk:
+                    acquired.add(lk)
+                if item.optional_vars:
+                    visit(item.optional_vars, held)
+            inner = held | frozenset(acquired)
+            for ch in node.body:
+                visit(ch, inner)
+            return
+        if isinstance(node, ast.Attribute) and is_self_attr(node) \
+                and node.attr in guarded:
+            lock = guarded[node.attr]
+            if lock not in held and node.lineno not in reported:
+                reported.add(node.lineno)
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    f"{cls.name}.{meth.name} touches self.{node.attr} "
+                    f"(guarded_by self.{lock}) outside 'with "
+                    f"self.{lock}'"))
+        for ch in ast.iter_child_nodes(node):
+            visit(ch, held)
+
+    for stmt in meth.body:
+        visit(stmt, frozenset())

@@ -1,0 +1,185 @@
+"""host-alias: mutable numpy buffers flowing into jitted callables.
+
+jax on CPU zero-copies aligned 2-D numpy arrays passed to a jitted
+function: the device buffer ALIASES host memory, and a host-side write
+while the async step still reads it corrupts the computation (the PR-5
+paged-decode race).  Any numpy-backed instance buffer — or a view of
+one — handed to a known-jitted callable must be defensively copied:
+
+    tbl = jnp.asarray(self.block_table[:, :width].copy())   # ok
+    tbl = jnp.asarray(self.block_table[:, :width])          # flagged
+
+Jitted callables recognised: names/attributes assigned from
+``jax.jit(...)`` / ``jit(...)`` / ``functools.partial(jax.jit, ...)``,
+and functions decorated with jit.  Taint roots: ``self.<attr>`` buffers
+assigned from ``np.*`` anywhere in the class.  Taint propagates through
+subscripts/slices and ``asarray``-style wrappers, and is cleared by
+``.copy()`` or an array-constructing call (``np.array`` copies by
+default).  ``ascontiguousarray`` does NOT clear taint: it returns the
+input unchanged when already contiguous.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.core import (Finding, ModuleCtx, dotted, is_self_attr)
+
+RULE = "host-alias"
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_NP_ROOTS = ("np.", "numpy.")
+_PASSTHROUGH = {"asarray", "ascontiguousarray", "atleast_1d", "atleast_2d",
+                "ravel", "reshape", "squeeze", "transpose", "view"}
+_COPYING = {"np.array", "numpy.array", "jnp.array", "jax.numpy.array",
+            "np.copy", "numpy.copy"}
+
+
+def _is_jit_value(value) -> bool:
+    """True when ``value`` evaluates to a jitted callable."""
+    if not isinstance(value, ast.Call):
+        return False
+    f = dotted(value.func)
+    if f in _JIT_NAMES:
+        return True
+    if f in ("functools.partial", "partial") and value.args:
+        return dotted(value.args[0]) in _JIT_NAMES
+    return False
+
+
+def _collect_jitted(tree) -> tuple[set[str], set[str]]:
+    """(module/local names, self.<attr> names) bound to jitted callables."""
+    names: set[str] = set()
+    attrs: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and _is_jit_value(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+                elif is_self_attr(t):
+                    attrs.add(t.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dotted(dec.func if isinstance(dec, ast.Call) else dec)
+                if d in _JIT_NAMES:
+                    names.add(node.name)
+    return names, attrs
+
+
+def _collect_np_attrs(cls: ast.ClassDef) -> set[str]:
+    """self attributes assigned from np.* anywhere in the class."""
+    out: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)) and node.value:
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            v = node.value
+            f = dotted(v.func) if isinstance(v, ast.Call) else None
+            if f and f.startswith(_NP_ROOTS) and f not in _COPYING:
+                for t in targets:
+                    if is_self_attr(t):
+                        out.add(t.attr)
+    return out
+
+
+class _FuncScan:
+    def __init__(self, func, np_attrs, jit_names, jit_attrs, ctx,
+                 findings):
+        self.func = func
+        self.np_attrs = np_attrs
+        self.jit_names = jit_names
+        self.jit_attrs = jit_attrs
+        self.ctx = ctx
+        self.findings = findings
+        self.tainted: set[str] = set()
+
+    # -- taint of an expression: (is_tainted, human-readable root) --
+    def taint(self, e) -> tuple[bool, str]:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted, e.id
+        if is_self_attr(e):
+            return e.attr in self.np_attrs, f"self.{e.attr}"
+        if isinstance(e, ast.Subscript):
+            return self.taint(e.value)
+        if isinstance(e, (ast.Tuple, ast.List)):
+            for el in e.elts:
+                t, root = self.taint(el)
+                if t:
+                    return True, root
+            return False, ""
+        if isinstance(e, ast.Call):
+            f = dotted(e.func)
+            if isinstance(e.func, ast.Attribute) and e.func.attr == "copy":
+                return False, ""
+            if f in _COPYING:
+                return False, ""
+            leaf = (f or "").rsplit(".", 1)[-1]
+            if leaf in _PASSTHROUGH:
+                base = e.args[0] if e.args else \
+                    (e.func.value if isinstance(e.func, ast.Attribute)
+                     else None)
+                if base is not None:
+                    return self.taint(base)
+            return False, ""
+        return False, ""
+
+    def is_jitted_call(self, call: ast.Call) -> str | None:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in self.jit_names:
+            return f.id
+        if is_self_attr(f) and f.attr in self.jit_attrs:
+            return f"self.{f.attr}"
+        return None
+
+    def run(self):
+        for stmt in self.func.body:
+            self.visit(stmt)
+
+    def visit(self, node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not self.func:
+            return
+        for ch in ast.iter_child_nodes(node):
+            self.visit(ch)
+        if isinstance(node, ast.Call):
+            target = self.is_jitted_call(node)
+            if target:
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    t, root = self.taint(arg)
+                    if t:
+                        self.findings.append(Finding(
+                            self.ctx.path, node.lineno, RULE,
+                            f"numpy buffer '{root}' reaches jitted "
+                            f"callable '{target}' without .copy() -- "
+                            f"jax CPU zero-copies host arrays and an "
+                            f"async step races host mutation"))
+        elif isinstance(node, ast.Assign):
+            t, _ = self.taint(node.value)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    (self.tainted.add if t
+                     else self.tainted.discard)(tgt.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            t, _ = self.taint(node.value)
+            if isinstance(node.target, ast.Name):
+                (self.tainted.add if t
+                 else self.tainted.discard)(node.target.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    self.tainted.discard(n.id)
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    jit_names, jit_attrs = _collect_jitted(ctx.tree)
+    if not jit_names and not jit_attrs:
+        return []
+    findings: list[Finding] = []
+    for cls in [n for n in ast.walk(ctx.tree)
+                if isinstance(n, ast.ClassDef)]:
+        np_attrs = _collect_np_attrs(cls)
+        for meth in cls.body:
+            if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _FuncScan(meth, np_attrs, jit_names, jit_attrs, ctx,
+                          findings).run()
+    return findings

@@ -1,0 +1,76 @@
+"""policy-purity: propose/select must not mutate shared state.
+
+The policy contract (PR 2, ``core/policies/base.py``): ``propose``
+returns Arms with effects captured in ``commit`` CLOSURES; only the
+Conductor landing the chosen arm runs ``commit``.  A mutating call
+executed directly in a policy body fires for every CANDIDATE arm, not
+just the winner — double-sending KV, double-counting transfers.
+
+In any module that registers policies (``register_policy`` appears in
+the file), every top-level function and every method of every class is
+scanned for direct calls to known mutating Messenger/pool/directory
+methods.  Calls inside nested ``def``/``lambda`` (the commit closures)
+are allowed — that is exactly where effects belong.  Calls on ``self``
+directly (policy-internal memory like an affinity map) are allowed.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.core import Finding, ModuleCtx, dotted
+
+RULE = "policy-purity"
+
+MUTATING = {
+    # Messenger / transfer-engine sends
+    "enqueue", "enqueue_ssd", "enqueue_peer_ssd", "send", "kill",
+    # pool / cache mutation
+    "insert", "insert_meta", "put", "touch", "touch_keys", "discard",
+    "write_run", "register_block", "account_pending",
+    # directory / registry mutation
+    "register", "unregister", "drop_node", "bind", "delete", "flush",
+}
+
+_SCAN_EXEMPT = {"__init__", "__post_init__"}
+
+
+def _scanned_funcs(tree):
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) \
+                        and sub.name not in _SCAN_EXEMPT:
+                    yield sub
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    if "register_policy" not in ctx.src:
+        return []
+    findings: list[Finding] = []
+    for func in _scanned_funcs(ctx.tree):
+        # walk the body, skipping nested defs/lambdas (commit closures)
+        todo = list(ast.iter_child_nodes(func))
+        while todo:
+            node = todo.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            todo.extend(ast.iter_child_nodes(node))
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in MUTATING):
+                continue
+            recv = node.func.value
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                continue  # policy-internal memory is the policy's own
+            target = dotted(node.func) or node.func.attr
+            findings.append(Finding(
+                ctx.path, node.lineno, RULE,
+                f"policy body '{func.name}' calls mutating "
+                f"'{target}()' outside an Arm.commit closure -- "
+                f"propose/select run once per CANDIDATE, so this "
+                f"side effect fires for arms that never land"))
+    return findings

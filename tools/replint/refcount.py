@@ -1,0 +1,289 @@
+"""refcount-pair: page-run acquires must reach a release on every path.
+
+Mirrors ``DevicePagePool.check_leaks`` statically.  A statement that
+acquires page references on some pool object —
+
+    adopted, pages = pool.adopt_chain(hash_ids)
+    run = pool.alloc(n)
+    pp.retain(pages)
+
+— must, on EVERY exit path including exceptions, either release them
+(``release``/``free``/``release_pages``) or transfer ownership (return
+the held run, or store it into an object/structure whose lifecycle owns
+it).  Accepted shapes:
+
+  * the acquire sits in a ``try`` whose ``finally`` releases, or whose
+    handlers ALL release and include a catch-all (``except MemoryError``
+    alone is not enough: any other exception leaks the run);
+  * a single linear path from the acquire to a release/transfer with no
+    statement in between that can raise (calls, raises, asserts) or
+    branch (if/for/while/with) — the ``_prepare_writes`` shape:
+    ``(pg,) = pp.alloc(1)`` immediately parked in the block table.
+
+Calls on ``self`` are exempt — those are the pool primitives' own
+implementations, covered dynamically by ``check_leaks`` tests.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.core import (Finding, ModuleCtx, functions_in,
+                                names_in, own_nodes)
+
+RULE = "refcount-pair"
+
+ACQUIRE = {"alloc", "adopt_chain", "retain"}
+RELEASE = {"release", "free", "release_pages"}
+
+_SAFE_BUILTINS = {"len", "int", "float", "str", "bool", "list", "dict",
+                  "set", "tuple", "min", "max", "sum", "abs", "range",
+                  "enumerate", "zip", "sorted", "reversed", "isinstance",
+                  "repr", "id", "print"}
+_SAFE_METHODS = {"append", "extend", "add", "get", "items", "keys",
+                 "values", "copy"}
+
+
+def _acquire_call(stmt) -> ast.Call | None:
+    """The acquire Call in an Assign/Expr statement, if any (non-self
+    receiver only)."""
+    value = getattr(stmt, "value", None)
+    if not isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.Expr)) \
+            or value is None:
+        return None
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ACQUIRE:
+            recv = node.func.value
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                continue
+            return node
+    return None
+
+
+def _held_names(stmt, call) -> set[str]:
+    if isinstance(stmt, ast.Assign):
+        out = set()
+        for t in stmt.targets:
+            out |= names_in(t)
+        return out
+    if isinstance(stmt, ast.AnnAssign):
+        return names_in(stmt.target)
+    # Expr statement: retain(pages) holds whatever was passed in
+    if call.func.attr == "retain":
+        out = set()
+        for a in call.args:
+            out |= names_in(a)
+        return out
+    return set()
+
+
+def _is_release_call(node) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in RELEASE)
+
+
+def _contains_release(stmts) -> bool:
+    for s in stmts:
+        for node in ast.walk(s):
+            if _is_release_call(node):
+                return True
+    return False
+
+
+def _is_catchall(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    types = t.elts if isinstance(t, ast.Tuple) else [t]
+    for ty in types:
+        name = ty.attr if isinstance(ty, ast.Attribute) else \
+            (ty.id if isinstance(ty, ast.Name) else "")
+        if name in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def _try_protects(tr: ast.Try) -> bool:
+    if _contains_release(tr.finalbody):
+        return True
+    return bool(tr.handlers) \
+        and all(_contains_release(h.body) for h in tr.handlers) \
+        and any(_is_catchall(h) for h in tr.handlers)
+
+
+class _Blocks:
+    """Locates each statement: (owning stmt-or-function, list, index)."""
+
+    def __init__(self, func):
+        self.loc = {}
+        self._index(func)
+
+    def _index(self, node):
+        for field in ("body", "orelse", "finalbody"):
+            lst = getattr(node, field, None)
+            if not isinstance(lst, list):
+                continue
+            for i, s in enumerate(lst):
+                if not isinstance(s, ast.stmt):
+                    break
+                self.loc[id(s)] = (node, lst, i)
+                if not isinstance(s, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    self._index(s)
+        for h in getattr(node, "handlers", []):
+            for i, s in enumerate(h.body):
+                self.loc[id(s)] = (node, h.body, i)
+                self._index(s)
+
+    def path_after(self, stmt, func):
+        """Statements executed after ``stmt`` on the fall-through path,
+        bubbling out of enclosing blocks up to the function body."""
+        cur = stmt
+        while id(cur) in self.loc:
+            owner, lst, idx = self.loc[id(cur)]
+            for s in lst[idx + 1:]:
+                yield s
+            if owner is func:
+                return
+            cur = owner
+
+    def enclosing_trys(self, stmt, func):
+        cur = stmt
+        while id(cur) in self.loc:
+            owner, lst, _ = self.loc[id(cur)]
+            if isinstance(owner, ast.Try) and lst is owner.body:
+                yield owner
+            if owner is func:
+                return
+            cur = owner
+
+
+def _stmt_satisfies(stmt, held: set[str]) -> bool:
+    """Does this statement release or transfer the held references?"""
+    if isinstance(stmt, ast.Return) and stmt.value is not None \
+            and names_in(stmt.value) & held:
+        return True
+    value = getattr(stmt, "value", None)
+    if isinstance(stmt, (ast.Expr, ast.Assign)) and value is not None:
+        for node in ast.walk(value):
+            if _is_release_call(node) and names_in(node) & held:
+                return True
+    if isinstance(stmt, ast.Assign) and names_in(stmt.value) & held:
+        # parked in a structure the caller owns (block table, result obj)
+        if any(isinstance(t, (ast.Attribute, ast.Subscript))
+               for t in stmt.targets):
+            return True
+    if isinstance(stmt, ast.AugAssign) \
+            and isinstance(stmt.target, (ast.Attribute, ast.Subscript)) \
+            and names_in(stmt.value) & held:
+        return True
+    if isinstance(stmt, ast.Try) and _try_protects(stmt):
+        return True
+    return False
+
+
+def _stmt_aliases(stmt, held: set[str]) -> set[str]:
+    """New names that now also reference the held run."""
+    if isinstance(stmt, ast.Assign) and names_in(stmt.value) & held:
+        out = set()
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+        return out
+    if isinstance(stmt, ast.AugAssign) \
+            and isinstance(stmt.target, ast.Name) \
+            and names_in(stmt.value) & held:
+        return {stmt.target.id}
+    return set()
+
+
+def _stmt_risky(stmt) -> str | None:
+    """Reason this statement can raise or branch away, else None."""
+    if isinstance(stmt, (ast.If, ast.For, ast.While, ast.With,
+                         ast.AsyncWith, ast.AsyncFor, ast.Try,
+                         ast.Match)):
+        return "control flow"
+    if isinstance(stmt, ast.Raise):
+        return "raise"
+    if isinstance(stmt, (ast.Assert,)):
+        return "assert"
+    if isinstance(stmt, (ast.Break, ast.Continue)):
+        return "loop exit"
+    for node in ast.walk(stmt):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _SAFE_BUILTINS:
+            continue
+        if isinstance(f, ast.Attribute) and f.attr in _SAFE_METHODS:
+            continue
+        if _is_release_call(node):
+            continue
+        name = f.attr if isinstance(f, ast.Attribute) else \
+            getattr(f, "id", "call")
+        return f"call to {name}()"
+    return None
+
+
+def _satisfies_anywhere(stmt, held: set[str]) -> bool:
+    """Lenient search: any satisfying statement inside ``stmt``."""
+    if _stmt_satisfies(stmt, held):
+        return True
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.stmt) and node is not stmt \
+                and _stmt_satisfies(node, held):
+            return True
+    return False
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    findings: list[Finding] = []
+    for func in functions_in(ctx.tree):
+        blocks = None
+        for stmt in [n for n in own_nodes(func) if isinstance(n, ast.stmt)]:
+            call = _acquire_call(stmt)
+            if call is None:
+                continue
+            if blocks is None:
+                blocks = _Blocks(func)
+            held = _held_names(stmt, call)
+            what = f"pages acquired via .{call.func.attr}()"
+            if not held:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} are discarded: the result is never bound, "
+                    f"so the references can never be released"))
+                continue
+            exception_safe = any(_try_protects(tr) for tr in
+                                 blocks.enclosing_trys(stmt, func))
+            satisfied = False
+            risky_reason = None
+            risky_line = None
+            for nxt in blocks.path_after(stmt, func):
+                if _satisfies_anywhere(nxt, held) if exception_safe \
+                        else _stmt_satisfies(nxt, held):
+                    satisfied = True
+                    break
+                held |= _stmt_aliases(nxt, held)
+                if not exception_safe and risky_reason is None:
+                    r = _stmt_risky(nxt)
+                    if r is not None:
+                        risky_reason, risky_line = r, nxt.lineno
+            if satisfied and risky_reason is None:
+                continue
+            if risky_reason is not None:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} can leak: {risky_reason} at line "
+                    f"{risky_line} may raise or branch before the run "
+                    f"is released or ownership is transferred -- wrap "
+                    f"in try/finally (or handlers that all release and "
+                    f"include a catch-all)"))
+            else:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} are never released or transferred on the "
+                    f"fall-through path"))
+    return findings

@@ -1,0 +1,57 @@
+"""stop-iteration: PEP 479 hazards (the PR-6 class-1 bug).
+
+Since PEP 479 a ``StopIteration`` escaping a generator frame is
+converted to ``RuntimeError`` — and, worse, one raised inside a driver
+loop that consumes the generator silently TERMINATES the consuming
+``for`` loop instead of propagating.  Flagged:
+
+  * ``raise StopIteration`` (bare or called) anywhere — return from a
+    generator with ``return``; signal exhaustion to a caller with a
+    sentinel or a dedicated exception type;
+  * ``next(it)`` with no default inside a generator body — exhaustion
+    raises StopIteration into the generator frame, where it is
+    swallowed into RuntimeError/loop-termination.  Use
+    ``next(it, sentinel)`` and test explicitly.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.core import Finding, ModuleCtx, dotted, own_nodes
+
+RULE = "stop-iteration"
+
+
+def _is_generator(func) -> bool:
+    return any(isinstance(n, (ast.Yield, ast.YieldFrom))
+               for n in own_nodes(func))
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Raise) and node.exc is not None:
+            exc = node.exc
+            name = dotted(exc.func) if isinstance(exc, ast.Call) \
+                else dotted(exc)
+            if name == "StopIteration":
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    "raise StopIteration is PEP-479-unsafe: inside a "
+                    "generator it becomes RuntimeError, and in a driver "
+                    "loop it silently ends the consuming for-loop -- "
+                    "use 'return' or a dedicated exception"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _is_generator(node):
+            for sub in own_nodes(node):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Name) \
+                        and sub.func.id == "next" \
+                        and len(sub.args) == 1 and not sub.keywords:
+                    findings.append(Finding(
+                        ctx.path, sub.lineno, RULE,
+                        f"default-less next() inside generator "
+                        f"'{node.name}': exhaustion raises "
+                        f"StopIteration into the generator frame "
+                        f"(PEP 479) -- use next(it, sentinel)"))
+    return findings
