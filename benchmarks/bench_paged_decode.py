@@ -204,8 +204,8 @@ def main(fast: bool = False) -> int:
     rows = [dict(substrate="paged", join_ms_min=1e3 * jp,
                  step_ms_min=1e3 * sp, tokens_match=tokens_match,
                  kv_tokens_held=pp.n_pages * PAGE_TOKENS,
-                 zero_copy_joins=dw_p.stats["zero_copy_joins"],
-                 shared_adoptions=pp.stats["shared_adoptions"]),
+                 zero_copy_joins=dw_p.stats()["zero_copy_joins"],
+                 shared_adoptions=pp.stats()["shared_adoptions"]),
             dict(substrate="dense", join_ms_min=1e3 * jd,
                  step_ms_min=1e3 * sd, tokens_match=True,
                  kv_tokens_held=max_batch * max_len,

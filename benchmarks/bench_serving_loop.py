@@ -44,6 +44,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.trace import BLOCK_TOKENS
+from repro.serving.request import ServingRequest
 
 CHUNK = 128        # prefill chunk; prompt lengths are multiples of this
 PAGE_TOKENS = 64
@@ -109,7 +110,8 @@ def _run_baseline(pw, dw, payloads):
             rid, toks, mn, _ = sched[i]
             i += 1
             pres = pw(toks)
-            dw.join(rid, pres, max_new=mn)
+            dw.join(ServingRequest(req_id=rid, tokens=toks, max_new=mn),
+                    pres)
             outputs[rid] = [pres.first_token]
             token_t[rid] = [time.monotonic()]
         if dw.n_active:
@@ -134,7 +136,8 @@ def _run_loop(pw, dw, payloads, **kw):
         while i < len(sched) and sched[i][3] <= now:
             rid, toks, mn, _ = sched[i]
             i += 1
-            assert loop.submit(rid, toks, max_new=mn)
+            assert loop.submit(ServingRequest(req_id=rid, tokens=toks,
+                                              max_new=mn))
         if loop.idle and i < len(sched):
             time.sleep(max(sched[i][3] - (time.monotonic() - t0), 0.0))
         else:
@@ -270,7 +273,8 @@ def main(fast: bool = False) -> int:
             # request-at-a-time oracle streams (pool-size independent)
             for rid, toks, mn, _ in pay2:
                 pres = pw2(toks)
-                dw2.join(rid, pres, max_new=mn)
+                dw2.join(ServingRequest(req_id=rid, tokens=toks,
+                                        max_new=mn), pres)
                 oracle[rid] = [pres.first_token]
                 while dw2.n_active:
                     for r, tok, fin in dw2.step():
@@ -282,7 +286,8 @@ def main(fast: bool = False) -> int:
             # submits interleaved with iterations — deterministic arrival
             # pressure, no thread timing in the gated counts
             for rid, toks, mn, _ in pay2:
-                loop.submit(rid, toks, max_new=mn)
+                loop.submit(ServingRequest(req_id=rid, tokens=toks,
+                                           max_new=mn))
                 loop.iterate()
             loop.close_intake()
             loop.run()
@@ -290,7 +295,7 @@ def main(fast: bool = False) -> int:
             bit_exact = all(loop.outputs[rid].tokens == oracle[rid]
                             for rid in loop.outputs
                             if loop.outputs[rid].done)
-            s = loop.stats
+            s = loop.stats()
             det_rows.append(dict(
                 pool=pool_kind, admission=adm, submitted=s["submitted"],
                 rejected=s["rejected"], completed=s["completed"],

@@ -89,7 +89,7 @@ def _run_mode(mode, params, cfg, cold, revisit, *, dram_blocks,
                 out.append(tok)
         streams.append(out)
 
-    stats = dict(pw.stats)
+    stats = dict(pw.stats())
     stats.update(pool.store.stats() if pool.store is not None else {})
     pool.close()
     shutil.rmtree(tmp, ignore_errors=True)

@@ -69,6 +69,14 @@ GATED_TABLES: dict[str, tuple[tuple[str, ...], float, float]] = {
         ("submitted", "rejected", "completed", "total_tokens",
          "decode_steps", "prefill_chunks", "join_oom"),
         0.0, 0.0),
+    # preemption scheduling is a fully deterministic iterate()-driven
+    # interleave: counts and iteration-index percentiles are exact; the
+    # p99 ordering (preempt beats defer) is asserted in-process
+    "preemption_sched": (
+        ("completed", "preemptions", "restores_reload",
+         "restores_recompute", "decode_steps", "prefill_chunks",
+         "victim_iters", "sprint_p50_iters", "sprint_p99_iters"),
+        0.0, 0.0),
 }
 
 

@@ -31,6 +31,7 @@ def main(argv=None) -> int:
                             bench_global_pool, bench_kernels,
                             bench_layerwise, bench_overload,
                             bench_paged_decode, bench_policies,
+                            bench_preemption,
                             bench_scheduling, bench_serving_loop,
                             bench_ssd_store, bench_stage_model,
                             bench_tiered_cache)
@@ -41,6 +42,7 @@ def main(argv=None) -> int:
         "global_pool": bench_global_pool.main,       # cross-node peer handoff
         "paged_decode": bench_paged_decode.main,     # block-table substrate
         "serving_loop": bench_serving_loop.main,     # continuous batching
+        "preemption": bench_preemption.main,         # victim spill vs defer
         "stage_model": bench_stage_model.main,       # Figure 2
         "layerwise": bench_layerwise.main,           # Figure 7
         "scheduling": bench_scheduling.main,         # Figure 8

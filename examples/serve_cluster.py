@@ -34,6 +34,7 @@ from repro.core.trace import BLOCK_TOKENS, TraceSpec, generate_trace
 from repro.data.pipeline import realize_request_tokens
 from repro.models.transformer import init_params
 from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+from repro.serving.request import ServingRequest
 
 
 def main():
@@ -160,7 +161,8 @@ def main():
 
         def feeder():
             for rid, toks, mn, sess in payloads:
-                loop.submit(rid, toks, max_new=mn, session=sess)
+                loop.submit(ServingRequest(req_id=rid, tokens=toks,
+                                           max_new=mn, session=sess))
             loop.close_intake()
 
         t0 = time.time()
@@ -170,21 +172,24 @@ def main():
         th.join()
         dt = time.time() - t0
         total_tokens = sum(len(o.tokens) for o in loop.outputs.values())
-        tbt = loop.tbt_stats()
-        reused = sum(pw.stats["reused_blocks"] for pw in pws)
+        reused = sum(pw.stats()["reused_blocks"] for pw in pws)
         print(f"served {ls['completed']} requests, {total_tokens} tokens "
               f"in {dt:.1f}s — {ls['decode_steps']} decode steps, "
               f"{ls['prefill_chunks']} prefill chunks interleaved, "
-              f"{ls['rejected']} rejected by backpressure")
+              f"{ls['rejected']} rejected by backpressure, "
+              f"{ls['preemptions']} preemptions")
         print(f"prefix reuse: {reused} blocks; TBT p50/p99 "
-              f"{tbt['p50'] * 1e3:.1f}/{tbt['p99'] * 1e3:.1f} ms")
+              f"{ls['tbt_p50_s'] * 1e3:.1f}/{ls['tbt_p99_s'] * 1e3:.1f} ms")
+        # every component reports through the same stats() protocol —
+        # one uniform snapshot of the whole serving stack
+        snapshots = {"loop": ls, "decode": dws[0].stats(),
+                     "pool[0]": pools[0].stats()}
         if page_pool is not None:
-            ps = page_pool.stats
-            print(f"paged substrate: {page_pool.used_pages}/"
-                  f"{page_pool.n_pages} pages held, {ps['pages_written']} "
-                  f"written, {ps['shared_adoptions']} shared-prefix "
-                  f"adoptions, {dws[0].stats['zero_copy_joins']} zero-copy "
-                  f"joins")
+            snapshots["pages"] = page_pool.stats()
+        for name, snap in snapshots.items():
+            line = ", ".join(f"{k}={v}" for k, v in sorted(snap.items())
+                             if not isinstance(v, float))
+            print(f"  {name:8s} {line}")
         for pool in pools:
             pool.close()
         return
@@ -238,8 +243,9 @@ def main():
                 msg.set_ssd_bw(P[pi].iid,
                                P[pi].cost.kv_bytes(BLOCK_TOKENS)
                                / store.read_s_ema)
-            dws[di].join(req.req_id, pres,
-                         max_new=min(args.max_new, max(req.output_length, 2)))
+            dws[di].join(ServingRequest(
+                req_id=req.req_id, tokens=tokens,
+                max_new=min(args.max_new, max(req.output_length, 2))), pres)
             active[req.req_id] = di
             outputs[req.req_id] = [pres.first_token]
             print(f"req {req.req_id:3d}: prefill@P{pi} "
@@ -265,8 +271,8 @@ def main():
     memo = sum(pw.hasher.memo_hits for pw in pws)
     print(f"prefix hashing: {hashed} blocks SHA'd, {memo} session memo hits")
     if page_pool is not None:
-        ps = page_pool.stats
-        zc = sum(dw.stats["zero_copy_joins"] for dw in dws)
+        ps = page_pool.stats()
+        zc = sum(dw.stats()["zero_copy_joins"] for dw in dws)
         print(f"paged substrate: {page_pool.n_pages} pages "
               f"({page_pool.page_tokens} tok), {page_pool.used_pages} held, "
               f"{ps['pages_written']} written, {ps['shared_adoptions']} "
@@ -303,8 +309,9 @@ def main():
                     f"{st['blocks_written']} blk / {st['n_flushes']} flushes, "
                     f"read {st['layer_reads']} layers, "
                     f"{st['read_failures']} failures; engine overlapped "
-                    f"{pws[i].stats['overlapped_requests']} prefills "
-                    f"({pws[i].stats['ssd_loaded_blocks']} blocks prefetched)")
+                    f"{pws[i].stats()['overlapped_requests']} prefills "
+                    f"({pws[i].stats()['ssd_loaded_blocks']} blocks "
+                    f"prefetched)")
     for pool in pools:
         pool.close()
 

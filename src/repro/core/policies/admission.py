@@ -60,6 +60,8 @@ class BackpressureSignal:
     prefills_active: int = 0        # accepted, still mid-chunks (not joined)
     pages_pinned: int = 0           # DevicePagePool pressure()["pinned"]
     pages_total: int = 0
+    spilled: int = 0                # preempted victims parked on the host
+                                    # tier, each owed device pages back
 
     @property
     def queue_frac(self) -> float:
@@ -75,15 +77,20 @@ class BackpressureSignal:
         return self.pages_pinned / self.pages_total if self.pages_total \
             else 0.0
 
-    def committed_frac(self, include_prefills: bool) -> float:
+    def committed_frac(self, include_prefills: bool,
+                       include_spilled: bool = False) -> float:
         """Committed work over serving capacity (queued + decoding, plus —
-        for the predictive view — accepted-but-not-yet-joined prefills)."""
+        for the predictive view — accepted-but-not-yet-joined prefills and
+        preempted victims awaiting restore: both are admitted requests the
+        decode pool has not finished paying for)."""
         cap = self.queue_capacity + self.slots_total
         if not cap:
             return 0.0
         n = self.queue_depth + self.slots_used
         if include_prefills:
             n += self.prefills_active
+        if include_spilled:
+            n += self.spilled
         return n / cap
 
 
@@ -250,8 +257,11 @@ class PredictiveEarlyRejection(AdmissionPolicy):
     @classmethod
     def engine_load(cls, sig: BackpressureSignal) -> float:
         # §7.4 without prediction error: the engine KNOWS its in-flight
-        # prefills, so counting them closes the information lag directly
-        return max(sig.committed_frac(include_prefills=True), sig.page_frac)
+        # prefills AND its restorable preemption victims, so counting both
+        # closes the information lag directly — a slot freed by a spill is
+        # not free capacity, the victim will claim it back
+        return max(sig.committed_frac(include_prefills=True,
+                                      include_spilled=True), sig.page_frac)
 
 
 def make_admission(name: str, conductor, **kw) -> AdmissionPolicy:

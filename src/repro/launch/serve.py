@@ -44,6 +44,15 @@ def main(argv=None) -> int:
     ap.add_argument("--admission", default="predictive",
                     choices=("baseline", "early", "predictive"),
                     help="backpressure policy evaluated at submit()")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable decode preemption (pending joins only "
+                         "defer, never spill a lower-priority victim's KV "
+                         "to the host tier)")
+    ap.add_argument("--restore-mode", default="auto",
+                    choices=("auto", "reload", "recompute"),
+                    help="how preempted victims restore: reload spilled "
+                         "bytes, recompute through prefill, or priced "
+                         "per restore (auto)")
     ap.add_argument("--pool-blocks", type=int, default=4096)
     ap.add_argument("--ssd-blocks", type=int, default=0,
                     help="SSD-tier capacity in blocks (0 = flat DRAM pool)")
@@ -129,17 +138,21 @@ def main(argv=None) -> int:
         import threading
 
         from repro.serving.loop import ServingLoop
+        from repro.serving.request import ServingRequest
         pws += [PrefillWorker(params, cfg, pool, prefill_chunk=256,
                               ssd_mode=args.ssd_mode, page_pool=page_pool)
                 for _ in range(args.prefill_workers - 1)]
         loop = ServingLoop(pws, dw, tbt_budget_s=args.tbt_budget,
                            chunks_per_iter=args.chunks_per_iter,
                            max_queue=max(args.requests, 8),
-                           admission=args.admission)
+                           admission=args.admission,
+                           preempt=not args.no_preempt,
+                           restore_mode=args.restore_mode)
 
         def feeder():
             for rid, toks, mn, sess in payloads:
-                loop.submit(rid, toks, max_new=mn, session=sess)
+                loop.submit(ServingRequest(req_id=rid, tokens=toks,
+                                           max_new=mn, session=sess))
             loop.close_intake()
 
         th = threading.Thread(target=feeder, name="repro-loop-feeder")
@@ -148,21 +161,24 @@ def main(argv=None) -> int:
         th.join()
         done = ls["completed"]
         total_new = sum(len(o.tokens) for o in loop.outputs.values())
-        tbt = loop.tbt_stats()
         print(f"loop: {ls['iterations']} iterations, {ls['decode_steps']} "
               f"decode steps, {ls['prefill_chunks']} prefill chunks "
               f"interleaved, {ls['rejected']} rejected by "
-              f"'{args.admission}' backpressure, TBT p50/p99 "
-              f"{tbt['p50'] * 1e3:.1f}/{tbt['p99'] * 1e3:.1f} ms")
+              f"'{args.admission}' backpressure, {ls['preemptions']} "
+              f"preemptions ({ls['restores_reload']} reload / "
+              f"{ls['restores_recompute']} recompute restores), TBT p50/p99 "
+              f"{ls['tbt_p50_s'] * 1e3:.1f}/{ls['tbt_p99_s'] * 1e3:.1f} ms")
     else:
         done, total_new = 0, 0
         queue = list(payloads)
         outputs: dict = {}
+        from repro.serving.request import ServingRequest
         while queue or dw.n_active:
             while queue and dw.n_active < args.max_batch:
                 rid, toks, mn, sess = queue.pop(0)
                 pres = pw(toks, session=sess)
-                dw.join(rid, pres, max_new=mn)
+                dw.join(ServingRequest(req_id=rid, tokens=toks, max_new=mn,
+                                       session=sess), pres)
                 outputs[rid] = [pres.first_token]
                 print(f"req {rid:4d}: prefill {pres.prompt_len:5d} tokens, "
                       f"reused {pres.reused_blocks} blocks, "
@@ -174,20 +190,24 @@ def main(argv=None) -> int:
                 if fin:
                     done += 1
     dt = time.time() - t0
-    st = {k: sum(w.stats[k] for w in pws) for k in pw.stats}
+    pw_stats = [w.stats() for w in pws]
+    st = {k: sum(s[k] for s in pw_stats) for k in pw_stats[0]}
     print(f"\nserved {done} requests in {dt:.1f}s — "
           f"{total_new / dt:.1f} tok/s decode, "
           f"pool: {pool.n_blocks} blocks resident, "
           f"prefix reuse {st['reused_blocks']} blocks "
           f"({512 * st['reused_blocks']} tokens skipped)")
     if page_pool is not None:
-        ps = page_pool.stats
+        ps = page_pool.stats()
+        ds = dw.stats()
         print(f"paged substrate: {page_pool.used_pages}/{page_pool.n_pages} "
               f"pages held, {ps['pages_written']} written, "
               f"{ps['shared_adoptions']} shared-prefix adoptions, "
-              f"{ps['cow_copies']} COW, {dw.stats['zero_copy_joins']} "
-              f"zero-copy joins; hasher: {pw.hasher.blocks_hashed} blocks "
-              f"SHA'd, {pw.hasher.memo_hits} memo hits")
+              f"{ps['cow_copies']} COW, {ds['zero_copy_joins']} "
+              f"zero-copy joins, {ps['pages_exported']} pages spilled / "
+              f"{ps['pages_imported']} imported; hasher: "
+              f"{pw.hasher.blocks_hashed} blocks SHA'd, "
+              f"{pw.hasher.memo_hits} memo hits")
     if pool.store is not None:
         s = pool.store.stats()
         print(f"ssd store: {s['blocks']} blocks on disk "

@@ -13,7 +13,9 @@ pool) is what examples/serve_cluster.py drives with a Conductor in front.
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -28,6 +30,7 @@ from repro.models.layers import DTYPE
 from repro.models.transformer import (Caches, KVCache, decode_step,
                                       decode_step_paged, init_caches,
                                       prefill)
+from repro.serving.request import ServingRequest
 
 
 def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
@@ -241,6 +244,17 @@ class HostKVPool:
         self.peer_fetch_failures = 0
         self.fallback_reasons: dict[str, int] = {}
         self._inflight: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # preemption spill slab: req_id -> (k, v, n_tokens) of a victim's
+        # exported device run (the HBM→DRAM rung). Unlike the block pool
+        # above this is keyed per REQUEST (live decode tails are private,
+        # not prefix-shareable) and entries are explicitly popped on
+        # restore/abandon. Written by the serving-loop thread, read by
+        # stats() from any thread — hence its own lock.
+        self._spill_lock = threading.Lock()
+        self._spill: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}  #: guarded_by self._spill_lock
+        #: guarded_by self._spill_lock
+        self._spill_counters = dict(spills=0, spill_restores=0,
+                                    spill_drops=0)
         if spec.ssd_dir is not None and not spec.tiered:
             raise ValueError(
                 "ssd_dir given but the SSD tier is disabled (ssd_blocks=0) "
@@ -497,6 +511,44 @@ class HostKVPool:
             else:
                 self.data[h] = blk
 
+    # ---- preemption spill slab (device→host demotion of live runs) -----
+    def spill_put(self, req_id: int, k: np.ndarray, v: np.ndarray,
+                  n_tokens: int) -> None:
+        """Park a preempted slot's exported KV run (from
+        ``DevicePagePool.export_run``) until the victim restores. One
+        entry per request; overwriting is a bug (the old bytes would be
+        silently lost), so it raises."""
+        with self._spill_lock:
+            if req_id in self._spill:
+                raise RuntimeError(
+                    f"request {req_id} already has a spilled run — a victim "
+                    f"must restore (spill_pop) before it can spill again")
+            self._spill[req_id] = (k, v, n_tokens)
+            self._spill_counters["spills"] += 1
+
+    def spill_get(self, req_id: int):
+        """Peek a spilled run: (k, v, n_tokens). KeyError if absent."""
+        with self._spill_lock:
+            return self._spill[req_id]
+
+    def spill_pop(self, req_id: int, *, restored: bool = True) -> bool:
+        """Drop a spilled run — after a successful restore (counted as
+        such) or when the request is abandoned (``restored=False``).
+        Returns whether an entry existed."""
+        with self._spill_lock:
+            had = self._spill.pop(req_id, None) is not None
+            if had:
+                key = "spill_restores" if restored else "spill_drops"
+                self._spill_counters[key] += 1
+            return had
+
+    def spill_depth(self) -> int:
+        """Number of preempted requests currently parked in the slab —
+        the ``BackpressureSignal.spilled`` gauge (each is a restorable
+        victim that will want device pages back)."""
+        with self._spill_lock:
+            return len(self._spill)
+
     def est_block_read_s(self) -> float:
         """Expected SSD read seconds per block (for the split search)."""
         return self.store.est_block_read_s() if self.store is not None \
@@ -506,7 +558,30 @@ class HostKVPool:
     def n_blocks(self) -> int:
         return len(self.data) + (len(self.store) if self.store else 0)
 
+    def stats(self) -> dict:
+        """Unified snapshot (cross-component ``stats()`` protocol: locked
+        where state is shared, plain dict, stable key names): block
+        residency, peer-fetch counters, fallback reasons (flattened as
+        ``fallback_<reason>``), and the preemption spill slab."""
+        out = dict(
+            dram_blocks=len(self.data),
+            store_blocks=len(self.store) if self.store else 0,
+            total_blocks=self.n_blocks,
+            peer_blocks_fetched=self.peer_blocks_fetched,
+            peer_fetch_failures=self.peer_fetch_failures,
+        )
+        for reason, n in self.fallback_reasons.items():
+            out[f"fallback_{reason}"] = n
+        with self._spill_lock:
+            out.update(self._spill_counters)
+            out["spill_entries"] = len(self._spill)
+            out["spill_bytes"] = sum(
+                k.nbytes + v.nbytes for k, v, _ in self._spill.values())
+        return out
+
     def close(self) -> None:
+        with self._spill_lock:
+            self._spill.clear()
         if self.prefetcher is not None:
             self.prefetcher.close()
         if self.store is not None:
@@ -604,6 +679,41 @@ def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
         raise
 
 
+@dataclass
+class RestorePlan:
+    """Priced decision for bringing a preempted victim back onto the
+    device: reload its spilled bytes through ``stage_run`` vs recompute
+    the whole sequence through chunked prefill."""
+    mode: str                   # "reload" | "recompute"
+    est_reload_s: float
+    est_recompute_s: float
+
+
+def plan_restore(n_tokens: int, *, reload_s_per_block: Optional[float],
+                 recompute_s_per_block: Optional[float],
+                 mode: str = "auto") -> RestorePlan:
+    """Price the two restore arms for a spilled run of ``n_tokens`` (the
+    'Why Not Both?' discipline applied to preemption recovery: transfer
+    and compute are independent resources, pick the cheaper wall-clock).
+    Per-block estimates are measured EMAs — ``None`` means unwarmed, and
+    an unwarmed arm loses the comparison (reload wins overall ties: the
+    bytes already exist and recompute would re-burn prefill FLOPs)."""
+    if mode not in ("auto", "reload", "recompute"):
+        raise ValueError(f"unknown restore mode {mode!r}")
+    n_blocks = -(-n_tokens // BLOCK_TOKENS)
+    tl = (reload_s_per_block or 0.0) * n_blocks
+    tc = (recompute_s_per_block or 0.0) * n_blocks
+    if mode != "auto":
+        chosen = mode
+    elif recompute_s_per_block is None:
+        chosen = "reload"
+    elif reload_s_per_block is None:
+        chosen = "recompute"
+    else:
+        chosen = "reload" if tl <= tc else "recompute"
+    return RestorePlan(mode=chosen, est_reload_s=tl, est_recompute_s=tc)
+
+
 class ChunkedPrefill:
     """A prefill suspended between device chunks — the serving loop's
     interleave unit.
@@ -682,10 +792,15 @@ class PrefillWorker:
         self.hasher = PrefixHasher()
         self._extend = jax.jit(
             lambda p, t, c: decode_step(p, t, c, cfg))
-        self.stats = dict(reused_blocks=0, computed_tokens=0, requests=0,
-                          ssd_loaded_blocks=0, overlapped_requests=0,
-                          fallback_blocks=0, peer_blocks=0,
-                          skipped_blocks=0, page_oom=0, chunks=0)
+        self.counters = dict(reused_blocks=0, computed_tokens=0, requests=0,
+                             ssd_loaded_blocks=0, overlapped_requests=0,
+                             fallback_blocks=0, peer_blocks=0,
+                             skipped_blocks=0, page_oom=0, chunks=0,
+                             stage_deferred=0)
+        # serving-loop hook: called with the page count a stage would pin;
+        # returning False skips staging (the join stages later) so staged
+        # results can't eat the decode batch's reserved growth pages
+        self.stage_guard = None
         self._t_block_ema: Optional[float] = None  # measured s / 512-tok blk
 
     def _note_compute(self, tokens: int, dt: float) -> None:
@@ -709,14 +824,26 @@ class PrefillWorker:
         logits, caches = self._extend(self.params, t[:, lo:hi], caches)
         jax.block_until_ready(logits)
         self._note_compute(hi - lo, time.monotonic() - t0)
-        self.stats["chunks"] += 1
+        self.counters["chunks"] += 1
         return logits, caches
 
     def _stage(self, hash_ids, k_full, v_full, S) -> Optional[list[int]]:
+        if self.page_pool is not None and self.stage_guard is not None \
+                and not self.stage_guard(self.page_pool.pages_for(S)):
+            self.counters["stage_deferred"] += 1
+            return None
         pages = stage_run(self.page_pool, hash_ids, k_full, v_full, S)
         if pages is None and self.page_pool is not None:
-            self.stats["page_oom"] += 1
+            self.counters["page_oom"] += 1
         return pages
+
+    def stats(self) -> dict:
+        """Unified snapshot (cross-component ``stats()`` protocol):
+        lifetime counters + hasher memo effectiveness."""
+        out = dict(self.counters)
+        out["hash_blocks"] = self.hasher.blocks_hashed
+        out["hash_memo_hits"] = self.hasher.memo_hits
+        return out
 
     def _stage_result(self, hash_ids, k_full, v_full, S) -> dict:
         """PrefillResult kwargs for the staged page run (+ generation
@@ -798,10 +925,10 @@ class PrefillWorker:
             self.pool.put(hash_ids[n_hit:], k_full[:, sl], v_full[:, sl],
                           start_pos=n_hit)
         n_peer = self.pool.peer_blocks_fetched - peer0
-        self.stats["reused_blocks"] += n_hit
-        self.stats["computed_tokens"] += S - prefix_tokens
-        self.stats["requests"] += 1
-        self.stats["peer_blocks"] += n_peer
+        self.counters["reused_blocks"] += n_hit
+        self.counters["computed_tokens"] += S - prefix_tokens
+        self.counters["requests"] += 1
+        self.counters["peer_blocks"] += n_peer
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=n_hit,
                              new_blocks=n_total - n_hit, peer_blocks=n_peer,
@@ -930,14 +1057,14 @@ class PrefillWorker:
 
         reused = d0 + n_skip + n_tail
         n_peer = self.pool.peer_blocks_fetched - peer0
-        self.stats["reused_blocks"] += reused
-        self.stats["computed_tokens"] += S - reused * B
-        self.stats["requests"] += 1
-        self.stats["ssd_loaded_blocks"] += n_tail
-        self.stats["overlapped_requests"] += 1
-        self.stats["fallback_blocks"] += n - usable
-        self.stats["peer_blocks"] += n_peer
-        self.stats["skipped_blocks"] += n_skip
+        self.counters["reused_blocks"] += reused
+        self.counters["computed_tokens"] += S - reused * B
+        self.counters["requests"] += 1
+        self.counters["ssd_loaded_blocks"] += n_tail
+        self.counters["overlapped_requests"] += 1
+        self.counters["fallback_blocks"] += n - usable
+        self.counters["peer_blocks"] += n_peer
+        self.counters["skipped_blocks"] += n_skip
         return PrefillResult(first_token=first, kv_k=k_full, kv_v=v_full,
                              prompt_len=S, reused_blocks=reused,
                              new_blocks=len(hash_ids) - reused,
@@ -948,14 +1075,41 @@ class PrefillWorker:
 
 @dataclass
 class _Slot:
-    req_id: int
+    """One occupied decode-batch slot. ``prompt_len`` is the KV depth the
+    slot JOINED at (after a preemption restore that includes previously
+    decoded tokens); ``final_len`` is the depth it will have grown to at
+    completion — the growth-reservation bound, invariant across
+    preempt/restore cycles."""
+    request: ServingRequest
     prompt_len: int
-    max_new: int
+    final_len: int
     emitted: list = field(default_factory=list)
 
     @property
+    def req_id(self) -> int:
+        return self.request.req_id
+
+    @property
+    def max_new(self) -> int:
+        return self.request.max_new
+
+    @property
     def done(self) -> bool:
-        return len(self.emitted) >= self.max_new
+        return len(self.emitted) >= self.request.max_new
+
+
+@dataclass
+class PreemptedRun:
+    """A victim slot's full decode state after ``DecodeWorker.preempt``:
+    the exported KV bytes (ownership transferred out of the device pool)
+    plus everything ``join(..., resume_emitted=...)`` needs to resume the
+    stream bit-exactly. ``n_tokens`` = prompt + all-but-the-last emitted
+    token (the pending input's KV was never written)."""
+    request: ServingRequest
+    emitted: list
+    n_tokens: int
+    k: np.ndarray               # (L, n_tokens, KV, Dh) host copies
+    v: np.ndarray
 
 
 class DecodeWorker:
@@ -993,7 +1147,8 @@ class DecodeWorker:
         self.substrate = substrate
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
-        self.stats = dict(zero_copy_joins=0, staged_joins=0, steps=0)
+        self.counters = dict(zero_copy_joins=0, staged_joins=0, steps=0,
+                             preemptions=0, resumed_joins=0)
         if substrate == "paged":
             from repro.serving.paged_cache import DevicePagePool
             if page_pool is None:
@@ -1047,9 +1202,8 @@ class DecodeWorker:
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
-            final = s.prompt_len + s.max_new
             held = int(self.n_pages_slot[i])
-            need += max(-(-final // pt) - held, 0) + 1
+            need += max(-(-s.final_len // pt) - held, 0) + 1
         return need
 
     # ---- paged-substrate plumbing --------------------------------------
@@ -1074,14 +1228,14 @@ class DecodeWorker:
                 pp.retain(pages)
             else:
                 pres._pages_adopted = True
-            self.stats["zero_copy_joins"] += 1
+            self.counters["zero_copy_joins"] += 1
             return pages
         hash_ids = pres.hash_ids if pres.hash_ids is not None else []
         pages = stage_run(pp, hash_ids, pres.kv_k, pres.kv_v,
                           pres.prompt_len)
         if pages is None:
             raise MemoryError("device page pool cannot hold the request")
-        self.stats["staged_joins"] += 1
+        self.counters["staged_joins"] += 1
         return pages
 
     def _free_slot_pages(self, slot: int) -> None:
@@ -1091,11 +1245,31 @@ class DecodeWorker:
         self.seq_lens[slot] = 0
         self.n_pages_slot[slot] = 0
 
-    def join(self, req_id: int, pres: PrefillResult, max_new: int) -> int:
+    def join(self, request, pres: PrefillResult = None,
+             max_new: Optional[int] = None, *,
+             resume_emitted: Optional[list] = None) -> int:
         """Add a prefilled request to the continuous batch (§3: 'load the
         KVCache and add the request to the continuous batching process').
         Paged substrate: adoption of the staged page run — no dense
-        full-depth copy."""
+        full-depth copy.
+
+        ``request`` is a ``ServingRequest`` (the legacy positional
+        ``join(req_id, pres, max_new)`` still works behind a
+        ``DeprecationWarning``). ``resume_emitted`` re-joins a preempted
+        victim: ``pres`` then wraps the restored KV run (depth =
+        ``PreemptedRun.n_tokens``), the stream continues from
+        ``resume_emitted[-1]``, and the slot's completion bound stays
+        exactly what it was before preemption."""
+        if not isinstance(request, ServingRequest):
+            warnings.warn(
+                "DecodeWorker.join(req_id, pres, max_new) is deprecated; "
+                "pass a ServingRequest", DeprecationWarning, stacklevel=2)
+            request = ServingRequest(req_id=int(request), tokens=None,
+                                     max_new=int(max_new))
+        elif max_new is not None and max_new != request.max_new:
+            raise ValueError(
+                f"max_new={max_new} conflicts with request.max_new="
+                f"{request.max_new}; drop the argument")
         if not self.has_free_slot:
             # NOT StopIteration (a bare next() here): inside a driver
             # generator that would be swallowed as silent termination
@@ -1104,14 +1278,26 @@ class DecodeWorker:
                 f"check has_free_slot before join")
         slot = self.slots.index(None)
         L = pres.prompt_len
+        n_emit = 0
+        if resume_emitted is not None:
+            n_emit = len(resume_emitted)
+            if not 1 <= n_emit < request.max_new:
+                raise ValueError(
+                    f"resume_emitted carries {n_emit} tokens; a resumable "
+                    f"victim has emitted at least 1 and fewer than "
+                    f"max_new={request.max_new}")
+        # depth this slot reaches at completion; for a resume this equals
+        # the ORIGINAL prompt_len + max_new (the victim's bound does not
+        # drift across preempt/restore cycles)
+        final_len = L + request.max_new - max(n_emit - 1, 0)
         # both substrates: an overlong request must fail loudly up front.
         # The dense arena's .at[].set past max_len is silently DROPPED on
         # CPU (jax out-of-bounds update semantics), which decodes wrong
         # tokens instead of erroring; the paged table would outgrow
         # max_pages mid-decode.
-        if L + max_new > self.max_len:
+        if final_len > self.max_len:
             raise ValueError(
-                f"prompt ({L}) + max_new ({max_new}) exceeds max_len "
+                f"prompt ({L}) + remaining new tokens exceeds max_len "
                 f"({self.max_len}) — the slot would outgrow its KV capacity "
                 f"mid-decode")
         if self.substrate == "paged":
@@ -1131,10 +1317,58 @@ class DecodeWorker:
                 self.caches = self.caches._replace(kv=kv)
             self.caches = self.caches._replace(
                 length=self.caches.length.at[slot].set(L))
-        self.tokens = self.tokens.at[slot, 0].set(pres.first_token)
-        self.slots[slot] = _Slot(req_id=req_id, prompt_len=L, max_new=max_new,
-                                 emitted=[pres.first_token])
+        if resume_emitted is not None:
+            # continue the stream from the victim's own last token (for a
+            # recompute restore pres.first_token is the re-derived argmax —
+            # identical when the prefill is bit-exact, but the victim's
+            # emitted history is the ground truth either way)
+            first = int(resume_emitted[-1])
+            emitted = list(resume_emitted)
+            self.counters["resumed_joins"] += 1
+        else:
+            first = pres.first_token
+            emitted = [pres.first_token]
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.slots[slot] = _Slot(request=request, prompt_len=L,
+                                 final_len=final_len, emitted=emitted)
         return slot
+
+    def preempt(self, slot: int) -> PreemptedRun:
+        """Victim-evict an active slot (vLLM-style preemption, the
+        device→host demotion rung): export its live page run to host
+        bytes via ``export_run`` — ownership of the device pages
+        transfers into the returned ``PreemptedRun`` — and free the
+        slot. Registered prefix blocks the run adopted stay in the
+        registry (the export releases only this slot's references), so a
+        reload restore re-adopts them without moving bytes. Paged
+        substrate only: the dense arena has no per-slot pages to
+        reclaim."""
+        if self.substrate != "paged":
+            raise RuntimeError(
+                "preempt() requires the paged substrate — the dense arena "
+                "frees no reclaimable device pages")
+        s = self.slots[slot]
+        if s is None:
+            raise ValueError(f"preempt of empty slot {slot}")
+        n_tokens = int(self.seq_lens[slot])
+        n = int(self.n_pages_slot[slot])
+        pages = [int(p) for p in self.block_table[slot, :n]]
+        k, v = self.page_pool.export_run(pages, n_tokens)
+        self.block_table[slot] = 0
+        self.seq_lens[slot] = 0
+        self.n_pages_slot[slot] = 0
+        self.slots[slot] = None
+        self.counters["preemptions"] += 1
+        return PreemptedRun(request=s.request, emitted=list(s.emitted),
+                            n_tokens=n_tokens, k=k, v=v)
+
+    def stats(self) -> dict:
+        """Unified snapshot (cross-component ``stats()`` protocol):
+        lifetime counters + live batch gauges."""
+        out = dict(self.counters)
+        out["active_slots"] = self.n_active
+        out["reserved_growth_pages"] = self.reserved_growth_pages()
+        return out
 
     def _prepare_writes(self, active: list[int]) -> None:
         """Host-side bookkeeping before a step: give every active slot an
@@ -1163,7 +1397,7 @@ class DecodeWorker:
         Returns [(req_id, token, finished)] for active slots."""
         if self.n_active == 0:
             return []
-        self.stats["steps"] += 1
+        self.counters["steps"] += 1
         if self.substrate == "paged":
             pp = self.page_pool
             pt = pp.page_tokens
@@ -1234,7 +1468,7 @@ class StateCheckpointWorker:
         self.data: dict[int, tuple] = {}   # hash -> (ssm np, conv np)
         self._prefill = jax.jit(lambda p, t: prefill(p, t, cfg))
         self._extend = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
-        self.stats = dict(restored_tokens=0, computed_tokens=0)
+        self.counters = dict(restored_tokens=0, computed_tokens=0)
 
     def _snapshot(self, hash_id: int, caches: Caches) -> None:
         evicted = self.meta.insert([hash_id])
@@ -1283,7 +1517,13 @@ class StateCheckpointWorker:
             if hi % self.chunk == 0:
                 self._snapshot(hash_ids[hi // self.chunk - 1], caches)
             lo = hi
-        self.stats["restored_tokens"] += start
-        self.stats["computed_tokens"] += S - start
+        self.counters["restored_tokens"] += start
+        self.counters["computed_tokens"] += S - start
         first = int(jnp.argmax(logits[0, -1]))
         return first, caches
+
+    def stats(self) -> dict:
+        """Unified snapshot (cross-component ``stats()`` protocol)."""
+        out = dict(self.counters)
+        out["checkpoints"] = len(self.data)
+        return out

@@ -9,12 +9,26 @@ thread-fed arrival queue. Each iteration:
 
 * **Admission** happens at ``submit()`` against a ``BackpressureSignal``
   snapshot (queue depth, slot occupancy, in-flight prefills, pinned page
-  fraction) evaluated by a registered admission policy kind — the live
-  engine's counterpart of §7's early/predictive rejection. A rejected
-  request never consumes compute.
-* **Joins** are slot-level: a finished prefill enters the decode batch
-  through ``DecodeWorker.join`` only while ``has_free_slot``; a join that
-  hits device-page OOM is deferred and retried once decodes release pages.
+  fraction, spilled victims) evaluated by a registered admission policy
+  kind — the live engine's counterpart of §7's early/predictive
+  rejection. A rejected request never consumes compute. The queue-cap
+  check and the enqueue are one atomic step under the loop lock, so
+  concurrent submitters cannot race past ``max_queue``.
+* **Joins** are slot-level and PRIORITY-ORDERED: finished prefills enter
+  the decode batch through ``DecodeWorker.join`` highest priority first
+  (FIFO within a class); a join that hits device-page OOM is deferred
+  and retried once decodes release pages.
+* **Preemption** (``preempt=True``, paged substrate): when a pending
+  join can not become obtainable by waiting — the headroom guard says
+  active slots' reserved growth plus the candidate exceed what is free
+  or evictable — and a STRICTLY lower-priority slot is active, the loop
+  spills victims (lowest priority first, then shallowest progress) to
+  the ``HostKVPool`` via ``DecodeWorker.preempt``/``export_run`` (the
+  device→host demotion rung), joins the competing request, and re-joins
+  each victim later from its spilled KV: either RELOADED through the
+  ``stage_run`` staging path or RECOMPUTED through chunked prefill,
+  priced per ``plan_restore``. Restored streams are bit-exact with a
+  never-preempted run.
 * **Chunked prefill interleave**: prefills advance one device chunk at a
   time (``ChunkedPrefill.advance``) between decode steps. With a
   ``tbt_budget_s`` the loop fits as many chunks as the measured chunk EMA
@@ -27,12 +41,17 @@ Because chunk boundaries are suspension points of the SAME generator the
 blocking ``PrefillWorker.__call__`` drains, every emitted token is
 bit-exact with the request-at-a-time oracle regardless of how the loop
 slices the work.
+
+The public surface speaks ``ServingRequest``/``RequestOutput``
+(``repro.serving.request``); the legacy ``submit(req_id, tokens,
+max_new, ...)`` keyword form still works behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -40,32 +59,42 @@ import numpy as np
 
 from repro.core.policies.admission import BackpressureSignal
 from repro.core.policies.base import get_policy
-from repro.serving.engine import ChunkedPrefill, DecodeWorker, PrefillWorker
-
-
-@dataclass
-class _Arrival:
-    req_id: int
-    tokens: np.ndarray
-    max_new: int
-    session: Optional[object] = None
-    priority: int = 0
+from repro.core.trace import BLOCK_TOKENS
+from repro.serving.engine import (ChunkedPrefill, DecodeWorker,
+                                  PrefillResult, PrefillWorker, plan_restore,
+                                  stage_run)
+from repro.serving.request import RequestOutput, ServingRequest
 
 
 @dataclass
 class _Active:
-    """A request whose prefill is mid-chunks on some worker."""
-    arrival: _Arrival
+    """A request whose prefill is mid-chunks on some worker. ``emitted``
+    is set for a recompute-restore replay: the victim's already-emitted
+    tokens, to resume from once the re-prefill finishes."""
+    request: ServingRequest
     cp: ChunkedPrefill
     worker_idx: int
+    emitted: Optional[list] = None
 
 
 @dataclass
-class RequestOutput:
-    req_id: int
-    tokens: list = field(default_factory=list)
-    token_t: list = field(default_factory=list)   # monotonic emit times
-    done: bool = False
+class _Pending:
+    """A unit waiting to enter the decode batch.
+
+    * ``kind="join"``: a finished prefill (``pres`` set); ``emitted`` is
+      not None when it replays a recompute restore.
+    * ``kind="restore"``: a spilled victim; ``pres`` is None until the
+      loop prices the restore and (reload arm) stages the spilled bytes.
+
+    ``n_tokens`` is the KV depth the entry joins at; ``seq`` keeps FIFO
+    order within a priority class.
+    """
+    request: ServingRequest
+    pres: Optional[PrefillResult]
+    n_tokens: int
+    seq: int
+    kind: str = "join"
+    emitted: Optional[list] = None
 
 
 class ServingLoop:
@@ -75,14 +104,25 @@ class ServingLoop:
     arrival queue); ``run()`` is the engine thread. ``tbt_budget_s=None``
     selects the deterministic interleave (exactly ``chunks_per_iter``
     prefill chunks between decode steps).
+
+    ``preempt=False`` restores the defer-only behaviour (joins wait for
+    decodes to release pages, never reclaim them) — the benchmark's
+    comparison arm. ``restore_mode`` pins the victim-restore arm
+    (``"reload"``/``"recompute"``) or prices it per restore (``"auto"``).
+    ``spill_pool`` names the ``HostKVPool`` that parks spilled KV
+    (default: the first prefill worker's pool).
     """
 
     def __init__(self, prefill_workers: list[PrefillWorker],
                  decode_worker: DecodeWorker, *,
                  tbt_budget_s: Optional[float] = None,
                  chunks_per_iter: int = 1, max_queue: int = 64,
-                 admission: str = "predictive") -> None:
+                 admission: str = "predictive",
+                 preempt: bool = True, restore_mode: str = "auto",
+                 spill_pool=None) -> None:
         assert prefill_workers, "need at least one PrefillWorker"
+        if restore_mode not in ("auto", "reload", "recompute"):
+            raise ValueError(f"unknown restore_mode {restore_mode!r}")
         self.pws = list(prefill_workers)
         self.dw = decode_worker
         self.page_pool = decode_worker.page_pool
@@ -90,7 +130,11 @@ class ServingLoop:
         self.chunks_per_iter = max(chunks_per_iter, 1)
         self.max_queue = max_queue
         self.policy = get_policy("admission", admission)
-        self._arrivals: "queue.Queue[_Arrival]" = queue.Queue()
+        self.preempt = preempt
+        self.restore_mode = restore_mode
+        self.spill_pool = spill_pool if spill_pool is not None \
+            else self.pws[0].pool
+        self._arrivals: "queue.Queue[ServingRequest]" = queue.Queue()
         # guards the client-visible flags/counters that submit() threads
         # and the engine thread both touch
         self._lock = threading.Lock()
@@ -98,15 +142,25 @@ class ServingLoop:
         self._stopping = False                #: guarded_by self._lock
         # engine-thread state
         self._active: list[_Active] = []      # prefills mid-chunks
-        self._pending_join: list = []         # (arrival, PrefillResult)
+        self._pending_join: list[_Pending] = []
         self._busy: set[int] = set()          # worker idx with a live gen
         self._rr = 0                          # chunk round-robin cursor
+        self._seq = 0                         # FIFO tiebreak for pendings
+        self._iter = 0                        # engine-local iteration count
         self._t_step_ema: Optional[float] = None
+        self._t_reload_ema: Optional[float] = None   # s / spilled block
         self.outputs: dict[int, RequestOutput] = {}
         #: guarded_by self._lock
-        self.stats = dict(submitted=0, rejected=0, joined=0, completed=0,
-                          decode_steps=0, prefill_chunks=0, join_oom=0,
-                          iterations=0)
+        self._counters = dict(
+            submitted=0, rejected=0, joined=0, completed=0,
+            decode_steps=0, prefill_chunks=0, join_oom=0, iterations=0,
+            preemptions=0, pages_spilled=0, restores_reload=0,
+            restores_recompute=0)
+        # keep staged-but-unjoined prefills from eating the decode
+        # batch's reserved growth pages (staging retries at join time)
+        for pw in self.pws:
+            if pw.page_pool is self.page_pool:
+                pw.stage_guard = self._stage_headroom_ok
 
     # ---- client side ---------------------------------------------------
     def signal(self) -> BackpressureSignal:
@@ -120,20 +174,37 @@ class ServingLoop:
             slots_total=self.dw.max_batch,
             prefills_active=len(self._active) + len(self._pending_join),
             pages_pinned=pressure.get("pinned", 0),
-            pages_total=pressure.get("capacity", 0))
+            pages_total=pressure.get("capacity", 0),
+            spilled=self.spill_pool.spill_depth())
 
-    def submit(self, req_id: int, tokens: np.ndarray, max_new: int,
+    def submit(self, request, tokens=None, max_new: Optional[int] = None,
                session=None, priority: int = 0) -> bool:
-        """Offer a request; False = shed by backpressure (nothing ran)."""
+        """Offer a ``ServingRequest``; False = shed by backpressure
+        (nothing ran). The legacy ``submit(req_id, tokens, max_new,
+        session, priority)`` form still works behind a
+        ``DeprecationWarning``. The queue-cap check and the enqueue are
+        atomic under the loop lock (concurrent submitters can not race
+        past ``max_queue``)."""
+        if not isinstance(request, ServingRequest):
+            warnings.warn(
+                "ServingLoop.submit(req_id, tokens, max_new, ...) is "
+                "deprecated; pass a ServingRequest",
+                DeprecationWarning, stacklevel=2)
+            request = ServingRequest(
+                req_id=int(request), tokens=np.asarray(tokens),
+                max_new=int(max_new), session=session, priority=priority)
+        if request.tokens is None:
+            raise ValueError("ServingRequest.tokens is required for submit")
         if not self._intake_is_open():
             raise RuntimeError("serving loop intake is closed")
-        self._bump("submitted")
-        if self._arrivals.qsize() >= self.max_queue \
-                or not self.policy.engine_admit(self.signal(), priority):
-            self._bump("rejected")
-            return False
-        self._arrivals.put(_Arrival(req_id, np.asarray(tokens), max_new,
-                                    session, priority))
+        with self._lock:
+            self._counters["submitted"] += 1
+            if self._arrivals.qsize() >= self.max_queue \
+                    or not self.policy.engine_admit(self.signal(),
+                                                    request.priority):
+                self._counters["rejected"] += 1
+                return False
+            self._arrivals.put(request)
         return True
 
     def close_intake(self) -> None:
@@ -142,7 +213,8 @@ class ServingLoop:
             self._intake_open = False
 
     def stop(self) -> None:
-        """Abandon queued + mid-prefill work; finish active decodes."""
+        """Abandon queued + mid-prefill work and spilled victims; finish
+        active decodes."""
         with self._lock:
             self._stopping = True
             self._intake_open = False
@@ -157,7 +229,7 @@ class ServingLoop:
 
     def _bump(self, key: str, n: int = 1) -> None:
         with self._lock:
-            self.stats[key] += n
+            self._counters[key] += n
 
     # ---- engine side ---------------------------------------------------
     @property
@@ -167,15 +239,14 @@ class ServingLoop:
 
     def run(self) -> dict:
         """Drive iterations until intake is closed and everything drained.
-        Returns a snapshot of ``self.stats``."""
+        Returns a final ``stats()`` snapshot."""
         while not (self.idle and not self._intake_is_open()):
             if self._stop_requested():
                 self._drop_pending()
                 if self.dw.n_active == 0:
                     break
             self._iteration()
-        with self._lock:
-            return dict(self.stats)
+        return self.stats()
 
     def iterate(self) -> None:
         """One loop iteration (arrivals → joins → decode step → prefill
@@ -193,11 +264,18 @@ class ServingLoop:
         for act in self._active:
             self._busy.discard(act.worker_idx)
         self._active.clear()
-        for _, pres in self._pending_join:
-            pres.release_pages()
+        for pend in self._pending_join:
+            if pend.pres is not None:
+                pend.pres.release_pages()
+            if pend.kind == "restore":
+                # abandon the victim's slab entry (its decode never
+                # resumes) — no stranded host bytes after stop()
+                self.spill_pool.spill_pop(pend.request.req_id,
+                                          restored=False)
         self._pending_join.clear()
 
     def _iteration(self) -> None:
+        self._iter += 1
         self._bump("iterations")
         self._drain_arrivals()
         self._try_joins()
@@ -207,76 +285,235 @@ class ServingLoop:
     def _drain_arrivals(self) -> None:
         while True:
             try:
-                arr = self._arrivals.get_nowait()
+                req = self._arrivals.get_nowait()
             except queue.Empty:
                 return
-            self._start_prefill(arr)
+            self._start_prefill(req)
 
-    def _start_prefill(self, arr: _Arrival) -> None:
+    def _start_prefill(self, req: ServingRequest,
+                       tokens_override: Optional[np.ndarray] = None,
+                       resume_emitted: Optional[list] = None) -> None:
         """Route to the free worker with the deepest pool residency for
         this prompt (Conductor-style cache-aware routing, loop-local);
         every worker busy → round-robin pile-up is fine, generators are
-        cheap until advanced."""
+        cheap until advanced. ``tokens_override``/``resume_emitted``
+        replay a preempted victim through the recompute-restore arm."""
+        toks = req.tokens if tokens_override is None else tokens_override
         idle = [i for i in range(len(self.pws)) if i not in self._busy]
         cand = idle if idle else list(range(len(self.pws)))
         best, best_depth = cand[0], -1
         for i in cand:
             pw = self.pws[i]
-            ids = pw.hasher.hash_ids(arr.tokens, session=arr.session)
+            ids = pw.hasher.hash_ids(toks, session=req.session)
             depth = pw.pool.plan_fetch(ids).n_resident
             if depth > best_depth:
                 best, best_depth = i, depth
-        cp = self.pws[best].start(arr.tokens, session=arr.session)
-        self._active.append(_Active(arr, cp, best))
+        cp = self.pws[best].start(toks, session=req.session)
+        self._active.append(_Active(req, cp, best, emitted=resume_emitted))
         self._busy.add(best)
-        self.outputs[arr.req_id] = RequestOutput(req_id=arr.req_id)
+        if req.req_id not in self.outputs:
+            self.outputs[req.req_id] = RequestOutput(
+                req_id=req.req_id, priority=req.priority)
 
-    def _join_headroom_ok(self, pres, max_new: int) -> bool:
-        """Admitting this request must leave every active slot's worst-
-        case growth obtainable — a join that eats the last free pages
-        turns into a mid-decode alloc OOM a few steps later, which no
-        amount of deferring can fix (pinned pages of pending joins never
-        release themselves)."""
-        pp = self.page_pool
-        if pp is None:
+    # ---- page headroom + preemption ------------------------------------
+    def _obtainable_pages(self) -> int:
+        p = self.page_pool.pressure()
+        return p["free"] + p["evictable"]
+
+    def _stage_headroom_ok(self, n_pages: int) -> bool:
+        """``PrefillWorker.stage_guard``: staging a finished prefill must
+        leave the active slots' reserved growth obtainable, or the staged
+        pin turns into a mid-decode alloc OOM that no deferral can fix."""
+        if self.page_pool is None or self.dw.n_active == 0:
             return True
-        p = pp.pressure()
-        pt = pp.page_tokens
-        final = pres.prompt_len + max_new
-        cand = max(-(-final // pt) - len(pres.pages or ()), 0) + 1
-        return p["free"] + p["evictable"] >= \
+        return self._obtainable_pages() - n_pages >= \
+            self.dw.reserved_growth_pages()
+
+    def _pend_geometry(self, pend: _Pending) -> tuple[int, int, int]:
+        """(join depth, tokens still to emit, pages already held)."""
+        extra = pend.request.max_new - \
+            (len(pend.emitted) if pend.emitted is not None else 0)
+        held = len(pend.pres.pages or ()) if pend.pres is not None else 0
+        return pend.n_tokens, extra, held
+
+    def _headroom_ok(self, T: int, extra: int, held: int) -> bool:
+        """Admitting a request joining at depth ``T`` with ``extra``
+        tokens to go must leave every active slot's worst-case growth
+        obtainable — a join that eats the last free pages turns into a
+        mid-decode alloc OOM a few steps later, which no amount of
+        deferring can fix (pinned pages of pending joins never release
+        themselves)."""
+        pp = self.page_pool
+        if pp is None or self.dw.n_active == 0:
+            return True
+        cand = max(pp.pages_for(T + extra) - held, 0) + 1
+        return self._obtainable_pages() >= \
             self.dw.reserved_growth_pages() + cand
 
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """Victim slot for a priority-``priority`` join: strictly lower
+        priority only (equal classes defer, they never preempt each
+        other — no cycles), lowest class first, shallowest progress
+        breaking ties (least work to redo, fewest bytes to move)."""
+        best, key = None, None
+        for i, s in enumerate(self.dw.slots):
+            if s is None or s.request.priority >= priority:
+                continue
+            k = (s.request.priority, len(s.emitted), i)
+            if key is None or k < key:
+                best, key = i, k
+        return best
+
+    def _spill(self, slot: int) -> None:
+        """Preempt one slot: export its run to the spill slab and queue a
+        restore entry (same priority it joined with)."""
+        run = self.dw.preempt(slot)
+        rid = run.request.req_id
+        self.spill_pool.spill_put(rid, run.k, run.v, run.n_tokens)
+        self._bump("preemptions")
+        self._bump("pages_spilled", self.page_pool.pages_for(run.n_tokens))
+        out = self.outputs.get(rid)
+        if out is not None:
+            out.preemptions += 1
+        self._seq += 1
+        self._pending_join.append(_Pending(
+            request=run.request, pres=None, n_tokens=run.n_tokens,
+            seq=self._seq, kind="restore", emitted=run.emitted))
+
+    def _can_preempt(self, priority: int) -> bool:
+        return (self.preempt and self.dw.substrate == "paged"
+                and any(s is not None and s.request.priority < priority
+                        for s in self.dw.slots))
+
+    def _preempt_until(self, pend: _Pending) -> bool:
+        """Spill victims until ``pend`` has a free slot AND page headroom;
+        False once no eligible victim remains (spills stick — the freed
+        pages serve whichever join lands first)."""
+        while True:
+            T, extra, held = self._pend_geometry(pend)
+            if self.dw.has_free_slot and self._headroom_ok(T, extra, held):
+                return True
+            victim = self._pick_victim(pend.request.priority)
+            if victim is None:
+                return False
+            self._spill(victim)
+
+    # ---- restore arms ---------------------------------------------------
+    def _combined_tokens(self, pend: _Pending) -> np.ndarray:
+        """prompt + already-decoded tokens whose KV exists (all emitted
+        but the last — the pending input's KV was never written)."""
+        toks = np.asarray(pend.request.tokens)
+        tail = pend.emitted[:-1]
+        if not tail:
+            return toks
+        return np.concatenate([toks, np.asarray(tail, dtype=toks.dtype)])
+
+    def _pick_restore_mode(self, pend: _Pending) -> str:
+        emas = [pw._t_block_ema for pw in self.pws
+                if pw._t_block_ema is not None]
+        plan = plan_restore(
+            pend.n_tokens,
+            reload_s_per_block=self._t_reload_ema,
+            recompute_s_per_block=min(emas) if emas else None,
+            mode=self.restore_mode)
+        return plan.mode
+
+    def _stage_spilled(self, pend: _Pending) -> Optional[PrefillResult]:
+        """Reload arm: stage the slab bytes back into device pages through
+        the ordinary ``stage_run`` path — full blocks of the combined
+        (prompt + decoded) sequence re-register/adopt, the tail stays
+        private. None = the pool can't fit the run right now."""
+        rid = pend.request.req_id
+        k, v, T = self.spill_pool.spill_get(rid)
+        hash_ids = self.pws[0].hasher.hash_ids(self._combined_tokens(pend))
+        t0 = time.monotonic()
+        pages = stage_run(self.page_pool, hash_ids, k, v, T)
+        if pages is None:
+            return None
+        per_block = (time.monotonic() - t0) / max(-(-T // BLOCK_TOKENS), 1)
+        self._t_reload_ema = per_block if self._t_reload_ema is None \
+            else 0.7 * self._t_reload_ema + 0.3 * per_block
+        return PrefillResult(
+            first_token=int(pend.emitted[-1]), kv_k=k, kv_v=v,
+            prompt_len=T, reused_blocks=0, new_blocks=0,
+            hash_ids=hash_ids, pages=pages, page_pool=self.page_pool,
+            page_gens=self.page_pool.gens_of(pages))
+
+    def _reroute_recompute(self, pend: _Pending) -> None:
+        """Recompute arm: drop the slab bytes and replay prompt + decoded
+        tokens through chunked prefill; the finished result comes back as
+        an ordinary pending join carrying ``emitted``."""
+        rid = pend.request.req_id
+        combined = self._combined_tokens(pend)
+        self.spill_pool.spill_pop(rid)
+        self._bump("restores_recompute")
+        self.outputs[rid].restores.append("recompute")
+        self._start_prefill(pend.request, tokens_override=combined,
+                            resume_emitted=pend.emitted)
+
+    # ---- joins -----------------------------------------------------------
     def _try_joins(self) -> None:
-        still: list = []
-        for arr, pres in self._pending_join:
-            if not self.dw.has_free_slot:
-                still.append((arr, pres))
-                continue
-            if self.dw.n_active > 0 and \
-                    not self._join_headroom_ok(pres, arr.max_new):
+        if not self._pending_join:
+            return
+        pending = self._pending_join
+        # highest priority first, FIFO within a class (stable on seq)
+        pending.sort(key=lambda p: (-p.request.priority, p.seq))
+        self._pending_join = []     # _spill() appends freshly-preempted
+        for pend in pending:        # victims here for the NEXT pass
+            if not self._try_admit_one(pend):
+                self._pending_join.append(pend)
+
+    def _try_admit_one(self, pend: _Pending) -> bool:
+        """Try to put one pending unit into the decode batch. True =
+        consumed (joined, or rerouted through a recompute prefill)."""
+        dw = self.dw
+        req = pend.request
+        T, extra, held = self._pend_geometry(pend)
+        ok = dw.has_free_slot and self._headroom_ok(T, extra, held)
+        if not ok and self._can_preempt(req.priority):
+            ok = self._preempt_until(pend)
+        if not ok:
+            if dw.has_free_slot:
                 self._bump("join_oom")
-                still.append((arr, pres))
-                continue
-            try:
-                self.dw.join(arr.req_id, pres, max_new=arr.max_new)
-            except MemoryError:
-                # device pages exhausted by live slots: wait for decodes
-                # to finish and release pages, then retry. With no active
-                # decode there is nothing to wait for — fail loudly
-                # instead of spinning.
+            return False
+        if pend.kind == "restore" and pend.pres is None:
+            if self._pick_restore_mode(pend) == "recompute":
+                self._reroute_recompute(pend)
+                return True
+            pres = self._stage_spilled(pend)
+            if pres is None:
                 self._bump("join_oom")
-                if self.dw.n_active == 0:
+                if dw.n_active == 0:
                     raise RuntimeError(
-                        f"request {arr.req_id} cannot fit the device page "
-                        f"pool even with an empty decode batch") from None
-                still.append((arr, pres))
-                continue
-            self._bump("joined")
-            out = self.outputs[arr.req_id]
-            out.tokens.append(pres.first_token)
+                        f"request {req.req_id}'s spilled run cannot fit "
+                        f"the device page pool even with an empty decode "
+                        f"batch")
+                return False
+            pend.pres = pres
+        try:
+            dw.join(req, pend.pres, resume_emitted=pend.emitted)
+        except MemoryError:
+            # device pages exhausted by live slots: wait for decodes
+            # to finish and release pages, then retry. With no active
+            # decode there is nothing to wait for — fail loudly
+            # instead of spinning.
+            self._bump("join_oom")
+            if dw.n_active == 0:
+                raise RuntimeError(
+                    f"request {req.req_id} cannot fit the device page "
+                    f"pool even with an empty decode batch") from None
+            return False
+        self._bump("joined")
+        out = self.outputs[req.req_id]
+        if pend.emitted is None:
+            out.tokens.append(pend.pres.first_token)
             out.token_t.append(time.monotonic())
-        self._pending_join = still
+        elif pend.kind == "restore":
+            self._bump("restores_reload")
+            out.restores.append("reload")
+        if pend.kind == "restore":
+            self.spill_pool.spill_pop(req.req_id)
+        return True
 
     def _decode_step(self) -> float:
         """One continuous-batching decode iteration; returns its wall
@@ -296,6 +533,7 @@ class ServingLoop:
             out.token_t.append(now)
             if fin:
                 out.done = True
+                out.completed_iter = self._iter
                 self._bump("completed")
         return dt
 
@@ -310,7 +548,11 @@ class ServingLoop:
         if done:
             self._active.pop(self._rr)
             self._busy.discard(act.worker_idx)
-            self._pending_join.append((act.arrival, act.cp.result))
+            self._seq += 1
+            self._pending_join.append(_Pending(
+                request=act.request, pres=act.cp.result,
+                n_tokens=act.cp.result.prompt_len, seq=self._seq,
+                kind="join", emitted=act.emitted))
         else:
             self._rr += 1
         return True
@@ -348,14 +590,24 @@ class ServingLoop:
             ran += 1
 
     # ---- reporting -----------------------------------------------------
-    def tbt_stats(self) -> dict:
-        """Inter-token gap percentiles over every completed request."""
+    def stats(self) -> dict:
+        """Unified snapshot (cross-component ``stats()`` protocol: taken
+        under the loop lock, plain dict, stable key names): lifetime
+        counters, the spill-slab gauge, and inter-token-gap percentiles
+        over every emitted token (the former ``tbt_stats()``, folded in
+        under ``tbt_*`` keys)."""
+        with self._lock:
+            out = dict(self._counters)
+        out["spill_depth"] = self.spill_pool.spill_depth()
         gaps: list[float] = []
-        for out in self.outputs.values():
-            ts = out.token_t
+        for o in list(self.outputs.values()):
+            ts = o.token_t
             gaps += [b - a for a, b in zip(ts, ts[1:])]
-        if not gaps:
-            return dict(n=0, p50=0.0, p99=0.0, max=0.0)
-        g = np.sort(np.asarray(gaps))
-        return dict(n=len(g), p50=float(np.percentile(g, 50)),
-                    p99=float(np.percentile(g, 99)), max=float(g[-1]))
+        if gaps:
+            g = np.sort(np.asarray(gaps))
+            out.update(tbt_n=len(g), tbt_p50_s=float(np.percentile(g, 50)),
+                       tbt_p99_s=float(np.percentile(g, 99)),
+                       tbt_max_s=float(g[-1]))
+        else:
+            out.update(tbt_n=0, tbt_p50_s=0.0, tbt_p99_s=0.0, tbt_max_s=0.0)
+        return out

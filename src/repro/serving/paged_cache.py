@@ -246,8 +246,10 @@ class DevicePagePool:
         self.runs: dict[int, list[int]] = {}     #: guarded_by self._lock
         self._lru: list[int] = []                #: guarded_by self._lock
         #: guarded_by self._lock
-        self.stats = dict(pages_written=0, shared_adoptions=0, cow_copies=0,
-                          registry_evictions=0, alloc_failures=0)
+        self.counters = dict(pages_written=0, shared_adoptions=0,
+                             cow_copies=0, registry_evictions=0,
+                             alloc_failures=0, pages_exported=0,
+                             pages_imported=0)
 
     # ---- geometry ------------------------------------------------------
     @property
@@ -312,7 +314,7 @@ class DevicePagePool:
                     if len(self.free) >= n:
                         break
             if len(self.free) < n:
-                self.stats["alloc_failures"] += 1
+                self.counters["alloc_failures"] += 1
                 raise MemoryError(
                     f"device page pool OOM: want {n} pages, "
                     f"free {len(self.free)} of {self.n_pages - 1}")
@@ -366,7 +368,7 @@ class DevicePagePool:
                 return
             self._lru.remove(hash_id)
             self.release(pages)
-            self.stats["registry_evictions"] += 1
+            self.counters["registry_evictions"] += 1
 
     def lookup_chain(self, hash_ids: list[int]) -> int:
         """Deepest consecutive registered prefix (no side effects)."""
@@ -392,7 +394,7 @@ class DevicePagePool:
                 self._lru.remove(h)         # touch recency
                 self._lru.append(h)
             if n:
-                self.stats["shared_adoptions"] += n
+                self.counters["shared_adoptions"] += n
             return n, pages
 
     # ---- device writes -------------------------------------------------
@@ -416,7 +418,7 @@ class DevicePagePool:
         with self._lock:
             self.k_pages = self.k_pages.at[:, idx].set(k.reshape(shape))
             self.v_pages = self.v_pages.at[:, idx].set(v.reshape(shape))
-            self.stats["pages_written"] += n
+            self.counters["pages_written"] += n
 
     def make_writable(self, page: int) -> int:
         """Copy-on-write: return a page id safe to append into. A page
@@ -430,8 +432,44 @@ class DevicePagePool:
             self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, page])
             self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, page])
             self.release([page])
-            self.stats["cow_copies"] += 1
+            self.counters["cow_copies"] += 1
             return new
+
+    # ---- device↔host tier transfers (preemption spill/restore) ---------
+    def export_run(self, pages: list[int], n_tokens: int):
+        """Demote a live page run to host memory: gather its contiguous
+        (L, n_tokens, KV, Dh) KV into fresh host arrays, then RELEASE the
+        caller's reference to ``pages`` — ownership of the run transfers
+        into the returned ``(k, v)`` bytes (the device→host rung of the
+        HBM↔DRAM↔SSD ladder; ``import_run``/``stage_run`` bring them
+        back). The arrays are explicit copies: freed pages may be
+        reallocated and rewritten at any time, so no view of device
+        buffers may escape."""
+        k, v = self.read_seq(pages, n_tokens)
+        # read_seq's np.asarray can alias the device buffer on CPU jax —
+        # materialise before the pages go back on the free list
+        k, v = k.copy(), v.copy()
+        with self._lock:
+            self.release(pages)
+            self.counters["pages_exported"] += len(pages)
+        return k, v
+
+    def import_run(self, k: np.ndarray, v: np.ndarray,
+                   n_tokens: int) -> list[int]:
+        """Promote host KV back into device pages: alloc a fresh run and
+        scatter ``(L, n_tokens, KV, Dh)`` into it. The caller owns one
+        reference per returned page (the inverse of ``export_run``; the
+        registry is NOT touched — use ``stage_run`` to re-share full
+        blocks). Raises ``MemoryError`` holding nothing."""
+        pages = self.alloc(self.pages_for(n_tokens))
+        try:
+            self.write_run(pages, k[:, :n_tokens], v[:, :n_tokens])
+        except BaseException:
+            self.release(pages)
+            raise
+        with self._lock:
+            self.counters["pages_imported"] += len(pages)
+        return pages
 
     # ---- host-side reads (oracle/debug) --------------------------------
     def read_seq(self, pages: list[int], n_tokens: int):
@@ -443,6 +481,15 @@ class DevicePagePool:
         k = k.reshape(L, -1, *k.shape[3:])[:, :n_tokens]
         v = v.reshape(L, -1, *v.shape[3:])[:, :n_tokens]
         return np.asarray(k), np.asarray(v)
+
+    def stats(self) -> dict:
+        """Unified snapshot (the cross-component ``stats()`` protocol:
+        taken under the lock, plain dict, stable key names): lifetime
+        counters + the ``pressure()`` occupancy gauges."""
+        with self._lock:
+            out = dict(self.counters)
+            out.update(self.pressure())
+            return out
 
     def check_leaks(self) -> None:
         """Invariant: every non-free page is referenced and vice versa

@@ -42,6 +42,19 @@ def retain_and_return(pool, pages):
     return pages, count
 
 
+def export_transfers_ownership(pool, run, n_tokens):
+    # export_run releases the run inside the pool: the host copies it
+    # returns own the bytes from here on
+    pool.retain(run)
+    k, v = pool.export_run(run, n_tokens)
+    return k, v
+
+
+def alloc_then_export(pool, n_tokens):
+    run = pool.alloc(4)
+    return pool.export_run(run, n_tokens)
+
+
 def self_calls_are_the_primitives(self_pool):
     class Pool:
         def adopt(self, run):

@@ -30,3 +30,10 @@ def retained_then_branch(pool, pages, flags):
     pool.retain(pages)                                 # finding
     if flags:                                          # branch may skip
         return pages
+
+
+def export_on_one_branch_only(pool, n_tokens, cold):
+    run = pool.alloc(4)                                # finding
+    if cold:                                           # warm path leaks
+        return pool.export_run(run, n_tokens)
+    return None

@@ -151,10 +151,10 @@ def test_state_checkpoint_worker_ssm_reuse():
     t2 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 64)])
 
     f1, _ = w(t1)
-    computed_before = w.stats["computed_tokens"]
+    computed_before = w.stats()["computed_tokens"]
     f2, _ = w(t2)
-    assert w.stats["restored_tokens"] >= 1024          # deepest checkpoint hit
-    assert w.stats["computed_tokens"] - computed_before == len(t2) - 1024
+    assert w.stats()["restored_tokens"] >= 1024          # deepest checkpoint hit
+    assert w.stats()["computed_tokens"] - computed_before == len(t2) - 1024
 
     # oracle: cold prefill of t2
     from repro.models.transformer import prefill as _pf

@@ -177,4 +177,4 @@ def test_serving_loop_run_returns_snapshot():
     stats = loop.run()
     assert stats["completed"] == 1
     stats["completed"] = 999           # a snapshot: caller edits are safe
-    assert loop.stats["completed"] == 1
+    assert loop.stats()["completed"] == 1

@@ -159,7 +159,7 @@ def test_registry_adopt_shares_physical_pages():
     # registry still holds the run; eviction under pressure frees it
     pool.alloc(len(pool.free) + pool.pages_per_block)
     assert 1234 not in pool.runs
-    assert pool.stats["registry_evictions"] == 1
+    assert pool.stats()["registry_evictions"] == 1
 
 
 def test_registry_eviction_pins_live_runs():
@@ -198,7 +198,7 @@ def test_exclusive_page_skips_cow():
     pool = _tiny_pool()
     run = pool.alloc(1)
     assert pool.make_writable(run[0]) == run[0]
-    assert pool.stats["cow_copies"] == 0
+    assert pool.stats()["cow_copies"] == 0
     pool.release(run)
 
 
@@ -267,8 +267,8 @@ def test_paged_matches_dense_with_prefix_sharing(setup):
         for rid, tok, _ in dw_d.step():
             outs_d[rid].append(tok)
     assert outs == outs_d
-    assert dw.stats["zero_copy_joins"] == 3      # adoption, no dense copy
-    assert pp.stats["shared_adoptions"] >= 2     # reqs 2,3 shared 2 blocks
+    assert dw.stats()["zero_copy_joins"] == 3      # adoption, no dense copy
+    assert pp.stats()["shared_adoptions"] >= 2     # reqs 2,3 shared 2 blocks
     pp.check_leaks()
 
 
@@ -315,8 +315,8 @@ def test_multi_join_cow_bit_exact(setup):
         for rid, tok, _ in dw.step():
             outs[rid].append(tok)
     assert outs[0] == outs[1]
-    assert dw.stats["zero_copy_joins"] == 2
-    assert pp.stats["cow_copies"] >= 1
+    assert dw.stats()["zero_copy_joins"] == 2
+    assert pp.stats()["cow_copies"] >= 1
     pp.check_leaks()
 
     logits, caches = jax.jit(lambda p, t_: prefill(p, t_, cfg))(
@@ -468,7 +468,7 @@ def test_chunk_skipping_bit_exact_and_fewer_tokens(setup, tmp_path):
     # block, chunk-skipping the DRAM blocks embedded in the span
     pool.store._read_s_ema = 10.0
     pw._t_block_ema = 1e-6
-    computed0 = pw.stats["computed_tokens"]
+    computed0 = pw.stats()["computed_tokens"]
     r2 = pw(t)
     assert r2.first_token == first_cold
     logits, _ = jax.jit(lambda p, t_: prefill(p, t_, cfg))(
@@ -476,7 +476,7 @@ def test_chunk_skipping_bit_exact_and_fewer_tokens(setup, tmp_path):
     assert r2.first_token == int(jnp.argmax(logits[0]))
 
     assert r2.skipped_blocks >= 1       # DRAM blocks mid-span not recomputed
-    computed = pw.stats["computed_tokens"] - computed0
+    computed = pw.stats()["computed_tokens"] - computed0
     # wholesale head recompute (the pre-chunk-skipping schedule) computes
     # every head-span block, skipped ones included
     wholesale = len(t) - (r2.reused_blocks - r2.skipped_blocks) * 512

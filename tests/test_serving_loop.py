@@ -12,6 +12,11 @@ from repro.models.transformer import init_params
 from repro.serving.engine import (DecodeWorker, HostKVPool, PrefillWorker)
 from repro.serving.loop import ServingLoop
 from repro.serving.paged_cache import DevicePagePool
+from repro.serving.request import ServingRequest
+
+
+def _req(rid, toks, max_new, **kw):
+    return ServingRequest(req_id=rid, tokens=toks, max_new=max_new, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +46,7 @@ def _oracle(cfg, params, reqs, max_new):
     out = {}
     for rid, toks in reqs.items():
         res = pw(toks)
-        dw.join(rid, res, max_new=max_new)
+        dw.join(_req(rid, toks, max_new), res)
         seq = [res.first_token]
         while dw.n_active:
             for r, tok, fin in dw.step():
@@ -63,13 +68,15 @@ def test_join_full_batch_raises_runtime_error(setup):
     pw = PrefillWorker(params, cfg, pool, prefill_chunk=64)
     dw = DecodeWorker(params, cfg, max_batch=1, max_len=512)
     rng = np.random.default_rng(0)
-    r1 = pw(rng.integers(0, cfg.vocab_size, 80))
-    dw.join(0, r1, max_new=4)
+    t1 = rng.integers(0, cfg.vocab_size, 80)
+    r1 = pw(t1)
+    dw.join(_req(0, t1, 4), r1)
     assert not dw.has_free_slot and dw.free_slots == 0
-    r2 = pw(rng.integers(0, cfg.vocab_size, 80))
+    t2 = rng.integers(0, cfg.vocab_size, 80)
+    r2 = pw(t2)
 
     with pytest.raises(RuntimeError, match="decode batch full"):
-        dw.join(1, r2, max_new=4)
+        dw.join(_req(1, t2, 4), r2)
 
     # the failure mode the bug produced: inside a generator, StopIteration
     # silently ENDS iteration; RuntimeError propagates (PEP 479 makes the
@@ -77,7 +84,7 @@ def test_join_full_batch_raises_runtime_error(setup):
     # — the explicit raise is load-bearing for real drivers)
     def driver():
         yield "before"
-        dw.join(1, r2, max_new=4)
+        dw.join(_req(1, t2, 4), r2)
         yield "after"
 
     g = driver()
@@ -95,14 +102,15 @@ def test_join_overlong_rejects_identically_on_both_substrates(setup):
     pool = HostKVPool()
     pw = PrefillWorker(params, cfg, pool, prefill_chunk=64)
     rng = np.random.default_rng(1)
-    res = pw(rng.integers(0, cfg.vocab_size, 100))
+    toks = rng.integers(0, cfg.vocab_size, 100)
+    res = pw(toks)
 
     msgs = {}
     for substrate in ("paged", "dense"):
         dw = DecodeWorker(params, cfg, max_batch=2, max_len=128,
                           substrate=substrate)
         with pytest.raises(ValueError) as ei:
-            dw.join(0, res, max_new=64)      # 100 + 64 > 128
+            dw.join(_req(0, toks, 64), res)  # 100 + 64 > 128
         msgs[substrate] = str(ei.value)
         assert dw.n_active == 0              # nothing was admitted
     assert msgs["paged"] == msgs["dense"]
@@ -191,7 +199,7 @@ def test_loop_mixed_load_bit_exact_with_thread_fed_arrivals(setup):
 
     def feeder():
         for i, t in reqs.items():
-            while not loop.submit(i, t, max_new=5):
+            while not loop.submit(_req(i, t, 5)):
                 time.sleep(0.01)             # shed → retry (test wants all 6)
             time.sleep(0.005)
         loop.close_intake()
@@ -207,8 +215,7 @@ def test_loop_mixed_load_bit_exact_with_thread_fed_arrivals(setup):
         assert loop.outputs[i].done
         assert loop.outputs[i].tokens == oracle[i], f"req {i} diverged"
     pp.check_leaks()                         # clean shutdown, nothing pinned
-    tbt = loop.tbt_stats()
-    assert tbt["n"] > 0 and tbt["p99"] >= tbt["p50"]
+    assert stats["tbt_n"] > 0 and stats["tbt_p99_s"] >= stats["tbt_p50_s"]
 
 
 def test_loop_interleaves_prefill_chunks_between_decode_steps(setup):
@@ -222,16 +229,16 @@ def test_loop_interleaves_prefill_chunks_between_decode_steps(setup):
     short = rng.integers(0, cfg.vocab_size, 80)      # 2 chunks
     long = rng.integers(0, cfg.vocab_size, 448)      # 7 chunks
 
-    assert loop.submit(0, short, max_new=12)
+    assert loop.submit(_req(0, short, 12))
     # let the short request join and start decoding
-    while loop.stats["joined"] == 0:
+    while loop.stats()["joined"] == 0:
         loop.iterate()
-    steps_before = loop.stats["decode_steps"]
-    assert loop.submit(1, long, max_new=3)
+    steps_before = loop.stats()["decode_steps"]
+    assert loop.submit(_req(1, long, 3))
     # drive until the long prefill finishes its chunks
-    while loop.stats["joined"] < 2:
+    while loop.stats()["joined"] < 2:
         loop.iterate()
-    steps_during = loop.stats["decode_steps"] - steps_before
+    steps_during = loop.stats()["decode_steps"] - steps_before
     # 7 prefill chunks at 1 chunk/iteration → ≥ 6 decode iterations ran
     # while the long prefill was suspended mid-chunks
     assert steps_during >= 6
@@ -252,18 +259,18 @@ def test_loop_backpressure_sheds_and_recovers(setup):
     rng = np.random.default_rng(5)
     toks = [rng.integers(0, cfg.vocab_size, 100) for _ in range(6)]
 
-    accepted = [loop.submit(i, t, max_new=3) for i, t in enumerate(toks)]
+    accepted = [loop.submit(_req(i, t, 3)) for i, t in enumerate(toks)]
     assert accepted[:2] == [True, True]
     assert not all(accepted), "hard queue cap never triggered"
     n_acc = sum(accepted)
-    assert loop.stats["rejected"] == 6 - n_acc
-    chunks_before = loop.stats["prefill_chunks"]
+    assert loop.stats()["rejected"] == 6 - n_acc
+    chunks_before = loop.stats()["prefill_chunks"]
     assert chunks_before == 0                # rejected ⇒ nothing ran
 
     # drain, then the loop must admit again
     loop.close_intake()
     loop.run()
-    assert loop.stats["completed"] == n_acc
+    assert loop.stats()["completed"] == n_acc
     pp.check_leaks()
 
 
@@ -277,7 +284,7 @@ def test_loop_full_batch_defers_joins_until_slots_free(setup):
     rng = np.random.default_rng(6)
     reqs = {i: rng.integers(0, cfg.vocab_size, 100) for i in range(5)}
     for i, t in reqs.items():
-        assert loop.submit(i, t, max_new=4)
+        assert loop.submit(_req(i, t, 4))
     loop.close_intake()
     stats = loop.run()
     assert stats["completed"] == 5
@@ -302,7 +309,7 @@ def test_loop_tight_pool_defers_joins_instead_of_mid_decode_oom(setup):
     reqs = {i: rng.integers(0, cfg.vocab_size, 256 if i % 2 else 384)
             for i in range(6)}
     for i, t in reqs.items():
-        assert loop.submit(i, t, max_new=7 if i % 2 else 3)
+        assert loop.submit(_req(i, t, 7 if i % 2 else 3))
     loop.close_intake()
     stats = loop.run()                       # pre-fix: MemoryError mid-step
     assert stats["completed"] == 6
@@ -318,7 +325,7 @@ def test_loop_stop_releases_pending_work(setup):
     loop = ServingLoop(pws, dw, chunks_per_iter=1, max_queue=16)
     rng = np.random.default_rng(7)
     for i in range(4):
-        loop.submit(i, rng.integers(0, cfg.vocab_size, 200), max_new=8)
+        loop.submit(_req(i, rng.integers(0, cfg.vocab_size, 200), 8))
     for _ in range(3):                       # partial progress
         loop.iterate()
     loop.stop()
@@ -362,17 +369,29 @@ def test_backpressure_signal_policy_semantics():
     assert early.engine_load(sig3) == pytest.approx(0.95)
     assert not early.engine_admit(sig3)
 
+    # spilled victims are commitments only the predictive view counts: a
+    # slot freed by preemption is NOT free capacity — the victim claims
+    # it back at restore
+    sig4 = BackpressureSignal(queue_depth=0, queue_capacity=8,
+                              slots_used=2, slots_total=4, spilled=4)
+    assert early.engine_load(sig4) == pytest.approx(2 / 12)
+    assert pred.engine_load(sig4) == pytest.approx(6 / 12)
+    assert sig4.committed_frac(include_prefills=True,
+                               include_spilled=True) > \
+        sig4.committed_frac(include_prefills=True)
+
 
 def test_page_pool_pressure_distinguishes_pinned_from_evictable(setup):
     cfg, params = setup
     pws, dw, pp = _mk(cfg, params, max_batch=2, max_len=640, n_workers=1)
     rng = np.random.default_rng(8)
-    res = pws[0](rng.integers(0, cfg.vocab_size, 512))   # one full block
+    toks = rng.integers(0, cfg.vocab_size, 512)
+    res = pws[0](toks)                       # one full block
     p = pp.pressure()
     assert p["capacity"] == pp.n_pages - 1
     assert p["used"] == p["pinned"] + p["evictable"]
     assert p["pinned"] > 0                   # the staged (unjoined) run
-    dw.join(0, res, max_new=2)
+    dw.join(_req(0, toks, 2), res)
     while dw.n_active:
         dw.step()
     p2 = pp.pressure()

@@ -367,7 +367,7 @@ def test_corrupt_ssd_falls_back_to_recompute(setup, dram_reference,
     pres = pw(q2)
     # wrong tokens are impossible: the engine recomputed what it lost
     assert _decode_tokens(params, cfg, pres) == dram_reference
-    assert pool.store.read_failures > 0 or pw.stats["fallback_blocks"] > 0
+    assert pool.store.read_failures > 0 or pw.stats()["fallback_blocks"] > 0
     pool.close()
 
 

@@ -33,7 +33,9 @@ from tools.replint.core import (Finding, ModuleCtx, functions_in,
 RULE = "refcount-pair"
 
 ACQUIRE = {"alloc", "adopt_chain", "retain"}
-RELEASE = {"release", "free", "release_pages"}
+# export_run releases the run inside the pool (ownership transfer to the
+# returned host copies) — holding pages reach it just like a release()
+RELEASE = {"release", "free", "release_pages", "export_run"}
 
 _SAFE_BUILTINS = {"len", "int", "float", "str", "bool", "list", "dict",
                   "set", "tuple", "min", "max", "sum", "abs", "range",
