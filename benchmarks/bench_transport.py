@@ -1,0 +1,125 @@
+"""Wire-protocol microbench: codec throughput and FETCH_BLOCK bandwidth,
+socket vs in-process.
+
+Three measured rows (no jax on this path — pure transport):
+
+* ``codec``   — encode_frame + FrameReader decode of LAYER frames in a
+  tight loop: the CRC-framing overhead ceiling, in MB/s.
+* ``inproc``  — the same blocks read through the in-process peer surface
+  (direct ``read_layer`` calls): what PR-8's "peer fetch" cost.
+* ``socket``  — the same blocks streamed through a real ``BlockServer``/
+  ``SocketPeer`` pair over loopback, layer-major like the prefetcher.
+
+Asserts socket bytes are bit-exact vs the in-process reads (the
+transport's whole contract) and that the in-process path is faster (it
+skips the kernel); the absolute socket bandwidth row is what
+``Messenger.set_link_bw`` calibration feeds on, so it is reported, not
+gated — wall-clock numbers are machine-dependent.
+
+    PYTHONPATH=src python -m benchmarks.bench_transport [--fast|--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serving.transport import (BlockServer, FrameReader, SocketPeer,
+                                     encode_frame, pack_layer, unpack_layer)
+
+
+class _SyntheticBackend:
+    """Deterministic per-(key, layer) KV arrays, generated on demand."""
+
+    def __init__(self, n_layers: int, shape: tuple) -> None:
+        self.n_layers = n_layers
+        self.shape = shape
+
+    def read_layer(self, key: int, layer: int):
+        rng = np.random.default_rng(100_003 * key + layer)
+        k = rng.standard_normal(self.shape).astype(np.float32)
+        return k, k + 1.0
+
+
+def _bench_codec(backend, keys, repeats: int) -> dict:
+    frames = [encode_frame(3, pack_layer(key, layer,
+                                         *backend.read_layer(key, layer)))
+              for key in keys for layer in range(backend.n_layers)]
+    nbytes = sum(len(f) for f in frames)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        reader = FrameReader()
+        for f in frames:
+            ((_, payload),) = reader.feed(f)
+            unpack_layer(payload)
+    dt = time.perf_counter() - t0
+    return dict(path="codec", blocks=len(keys), layers=backend.n_layers,
+                mb=nbytes * repeats / 1e6, s=dt,
+                mb_per_s=nbytes * repeats / 1e6 / dt)
+
+
+def _bench_inproc(backend, keys) -> tuple[dict, int, list]:
+    out = []
+    nbytes = 0
+    t0 = time.perf_counter()
+    for key in keys:
+        for layer in range(backend.n_layers):
+            k, v = backend.read_layer(key, layer)
+            nbytes += k.nbytes + v.nbytes
+            out.append((k, v))
+    dt = time.perf_counter() - t0
+    row = dict(path="inproc", blocks=len(keys), layers=backend.n_layers,
+               mb=nbytes / 1e6, s=dt, mb_per_s=nbytes / 1e6 / dt)
+    return row, nbytes, out
+
+
+def _bench_socket(backend, keys) -> tuple[dict, list]:
+    server = BlockServer(backend)
+    peer = SocketPeer(server.addr, node=0, timeout=30.0)
+    out = []
+    try:
+        peer.read_layer(keys[0], 0)     # connect + warm outside the clock
+        t0 = time.perf_counter()
+        for key in keys:
+            for layer in range(backend.n_layers):
+                out.append(peer.read_layer(key, layer))
+        dt = time.perf_counter() - t0
+        nbytes = sum(k.nbytes + v.nbytes for k, v in out)
+        row = dict(path="socket", blocks=len(keys), layers=backend.n_layers,
+                   mb=nbytes / 1e6, s=dt, mb_per_s=nbytes / 1e6 / dt,
+                   bw_ema_mb_s=(peer.bw_ema or 0.0) / 1e6)
+    finally:
+        peer.close()
+        server.close()
+    return row, out
+
+
+def main(fast: bool = False) -> None:
+    n_layers = 4 if fast else 8
+    shape = (1, 256 if fast else 512, 64)
+    keys = list(range(4 if fast else 16))
+    backend = _SyntheticBackend(n_layers, shape)
+
+    rows = [_bench_codec(backend, keys, repeats=2 if fast else 5)]
+    inproc_row, _, inproc_kv = _bench_inproc(backend, keys)
+    socket_row, socket_kv = _bench_socket(backend, keys)
+    rows += [inproc_row, socket_row]
+    emit("transport_wire", rows)
+
+    # the contract: the wire delivers exactly the in-process bytes
+    assert len(inproc_kv) == len(socket_kv)
+    for (k1, v1), (k2, v2) in zip(inproc_kv, socket_kv):
+        assert np.array_equal(k1, k2) and np.array_equal(v1, v2), \
+            "socket fetch is not bit-exact vs in-process"
+    assert inproc_row["mb_per_s"] > socket_row["mb_per_s"], \
+        "in-process reads should beat loopback sockets"
+    print(f"[transport] socket {socket_row['mb_per_s']:.0f} MB/s vs "
+          f"inproc {inproc_row['mb_per_s']:.0f} MB/s -- bit-exact")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", "--quick", dest="fast", action="store_true")
+    main(**vars(ap.parse_args()))

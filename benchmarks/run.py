@@ -34,12 +34,13 @@ def main(argv=None) -> int:
                             bench_preemption,
                             bench_scheduling, bench_serving_loop,
                             bench_ssd_store, bench_stage_model,
-                            bench_tiered_cache)
+                            bench_tiered_cache, bench_transport)
     benches = {
         "cache_policy": bench_cache_policy.main,     # Table 1
         "tiered_cache": bench_tiered_cache.main,     # DRAM+SSD hierarchy
         "ssd_store": bench_ssd_store.main,           # file-backed tier (§5.2)
         "global_pool": bench_global_pool.main,       # cross-node peer handoff
+        "transport": bench_transport.main,           # wire protocol (PR 9)
         "paged_decode": bench_paged_decode.main,     # block-table substrate
         "serving_loop": bench_serving_loop.main,     # continuous batching
         "preemption": bench_preemption.main,         # victim spill vs defer

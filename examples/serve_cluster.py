@@ -13,12 +13,28 @@ With ``--global-pool`` the two pools share one ``GlobalBlockDirectory``
 store is fetchable by the other, the Conductor prices the peer-SSD arm,
 and the stores' measured read EMAs feed back into the arm prices.
 
+With ``--processes N`` the cluster is N REAL OS processes: one parent
+hosting the wire-protocol ``DirectoryServer``, N workers that each own a
+``HostKVPool`` + ``BlockServer`` and fetch peer blocks over CRC-framed
+sockets (``SocketPeer``). Each worker prefills its own document, then
+serves a query extending ANOTHER node's document — a cross-process
+socket fetch — and the parent checks every decoded token bit-exact
+against a single-process DRAM-only oracle. ``--chaos kill-owner``
+SIGKILLs the block owner mid-transfer; survivors must still match the
+oracle, with the degradation accounted in ``fallback_reasons``.
+
     PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
     PYTHONPATH=src python examples/serve_cluster.py --ssd-blocks 64 \
         --ssd-dir /tmp/kvssd --dram-blocks 8 --global-pool
+    PYTHONPATH=src python examples/serve_cluster.py --processes 3 \
+        --chaos kill-owner
 """
 import argparse
+import json
 import os
+import signal
+import subprocess
+import sys
 import time
 
 import jax
@@ -33,8 +49,242 @@ from repro.core.policies import list_policies
 from repro.core.trace import BLOCK_TOKENS, TraceSpec, generate_trace
 from repro.data.pipeline import realize_request_tokens
 from repro.models.transformer import init_params
-from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+from repro.serving.engine import (DecodeWorker, HostKVPool, PrefillWorker,
+                                  prefix_hash_ids)
 from repro.serving.request import ServingRequest
+
+
+def _cluster_workload(n: int, vocab: int):
+    """Deterministic docs + queries shared by parent, workers, and the
+    oracle: query i extends node (i+1)%n's document, so serving it from
+    node i forces a cross-process socket fetch."""
+    rng = np.random.default_rng(42)
+    docs = [rng.integers(0, vocab, size=2 * BLOCK_TOKENS, dtype=np.int32)
+            for _ in range(n)]
+    extras = [rng.integers(0, vocab, size=48, dtype=np.int32)
+              for _ in range(n)]
+    queries = [np.concatenate([docs[(i + 1) % n], extras[i]])
+               for i in range(n)]
+    return docs, queries
+
+
+def _decode_all(params, cfg, pw, dw, tokens, max_new: int) -> list:
+    pres = pw(tokens)
+    dw.join(ServingRequest(req_id=0, tokens=tokens, max_new=max_new), pres)
+    out = [pres.first_token]
+    while dw.n_active:
+        for _, tok, fin in dw.step():
+            out.append(tok)
+    return [int(t) for t in out]
+
+
+def _worker_main(args) -> int:
+    """One cluster node: HELLO the directory, serve blocks over a
+    ``BlockServer``, fetch peers over ``SocketPeer``s, answer one query."""
+    from repro.serving.directory_service import RemoteDirectory
+    from repro.serving.transport import BlockServer, InProcPeer, SocketPeer
+
+    n, i = args.processes, args.worker_node
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    docs, queries = _cluster_workload(n, cfg.vocab_size)
+
+    # tiny DRAM tier: the node's own doc demotes straight to its SSD
+    # store, so peers fetch it through the store's CRC'd slots
+    pool = HostKVPool(capacity_blocks=1, ssd_capacity_blocks=64,
+                      writeback_batch=1,
+                      ssd_dir=os.path.join(args.ssd_dir, f"p{i}"))
+    server = BlockServer(InProcPeer(pool), stall_s=args.serve_stall)
+    host, port = args.directory.rsplit(":", 1)
+    rdir = RemoteDirectory((host, int(port)), node_id=i,
+                           block_port=server.port)
+    pool.directory = rdir
+    pool.node_id = i
+    rdir.bind(i, pool.meta)
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
+                       ssd_mode=args.ssd_mode)
+    dw = DecodeWorker(params, cfg, max_batch=1, max_len=2048,
+                      substrate="dense")
+
+    pw(docs[i])                         # round 1: publish own doc
+    br = rdir.barrier("published", n, timeout=600)
+    if not br["met"]:
+        print(f"node {i}: cluster failed to assemble ({br})", flush=True)
+        return 2
+    peers = {}
+    for nid, (phost, pport) in sorted(rdir.nodes().items()):
+        if nid != i:
+            peers[nid] = SocketPeer((phost, pport), node=nid)
+            pool.add_peer(nid, peers[nid])
+    # parent joins this barrier too: it times the chaos kill off it
+    br = rdir.barrier("round2", n + 1, timeout=600)
+    if not br["met"]:
+        print(f"node {i}: round-2 barrier failed ({br})", flush=True)
+        return 2
+    toks = _decode_all(params, cfg, pw, dw, queries[i], args.max_new)
+
+    # modeled-vs-measured, wire edition: feed each peer's observed socket
+    # bandwidth back into the Messenger's egress links
+    msg = Messenger(list(range(n)), bw=100e9)
+    bw = {}
+    for nid, sp in peers.items():
+        if sp.bw_ema:
+            msg.set_link_bw(nid, sp.bw_ema)
+            bw[str(nid)] = int(sp.bw_ema)
+    print("RESULT " + json.dumps(dict(
+        node=i, tokens=toks, peer_blocks=pool.peer_blocks_fetched,
+        fallback=pool.fallback_reasons, bw=bw)), flush=True)
+    for sp in peers.values():
+        sp.close()
+    server.close()
+    rdir.close()
+    pool.close()
+    return 0
+
+
+def _parent_main(args) -> int:
+    """Launch N worker processes around an in-process DirectoryServer,
+    optionally kill -9 the block owner mid-transfer, and hold every
+    surviving answer bit-exact against a single-process oracle."""
+    import shutil
+    import tempfile
+
+    from repro.serving.directory_service import (DirectoryServer,
+                                                 RemoteDirectory)
+
+    n = args.processes
+    chaos = args.chaos == "kill-owner"
+    stall = args.serve_stall if args.serve_stall is not None else \
+        (0.2 if chaos else 0.0)
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    docs, queries = _cluster_workload(n, cfg.vocab_size)
+
+    # single-process DRAM-only oracle for every query
+    opool = HostKVPool(capacity_blocks=4096)
+    opw = PrefillWorker(params, cfg, opool, prefill_chunk=256)
+    odw = DecodeWorker(params, cfg, max_batch=1, max_len=2048,
+                       substrate="dense")
+    oracle = {i: _decode_all(params, cfg, opw, odw, queries[i], args.max_new)
+              for i in range(n)}
+    opool.close()
+
+    dserver = DirectoryServer()
+    base = args.ssd_dir or tempfile.mkdtemp(prefix="serve-cluster-")
+    made_tmp = args.ssd_dir is None
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    procs = []
+    print(f"cluster: directory @ 127.0.0.1:{dserver.port}, "
+          f"{n} worker processes"
+          + (f", chaos={args.chaos} (stall {stall}s/layer)" if chaos else ""),
+          flush=True)
+    for i in range(n):
+        procs.append(subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--processes", str(n), "--worker-node", str(i),
+             "--directory", f"127.0.0.1:{dserver.port}",
+             "--ssd-dir", base, "--ssd-mode", args.ssd_mode,
+             "--max-new", str(args.max_new), "--serve-stall", str(stall)],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+            env=env))
+    rd = RemoteDirectory(dserver.addr)
+    failures = 0
+    try:
+        br = rd.barrier("round2", n + 1, timeout=600)
+        if not br["met"]:
+            print(f"cluster never reached round 2: {br}", flush=True)
+            return 1
+        print(f"round 2 underway: nodes {sorted(dserver.endpoints())}",
+              flush=True)
+        if chaos:
+            time.sleep(args.chaos_delay)
+            print(f"chaos: SIGKILL node 0 (pid {procs[0].pid}) "
+                  f"mid-FETCH_BLOCK", flush=True)
+            os.kill(procs[0].pid, signal.SIGKILL)
+            # the dead node's directory conn is its lease: its claims
+            # must drop without any explicit withdraw
+            doc0 = prefix_hash_ids(docs[0])
+            deadline = time.time() + 10
+            while time.time() < deadline and \
+                    0 in dserver.directory.holders(doc0[0]):
+                time.sleep(0.05)
+            if 0 in dserver.directory.holders(doc0[0]):
+                print("FAIL: dead node 0 still owns blocks in the "
+                      "directory", flush=True)
+                failures += 1
+            else:
+                print("directory self-healed: node 0's claims dropped",
+                      flush=True)
+
+        results = {}
+        for i, p in enumerate(procs):
+            try:
+                out, _ = p.communicate(timeout=600)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                out, _ = p.communicate()
+            for line in out.splitlines():
+                if line.startswith("RESULT "):
+                    r = json.loads(line[len("RESULT "):])
+                    results[r["node"]] = r
+            if chaos and i == 0:
+                if p.returncode != -signal.SIGKILL:
+                    print(f"FAIL: node 0 exited {p.returncode}, "
+                          f"expected SIGKILL", flush=True)
+                    failures += 1
+            elif p.returncode != 0:
+                print(f"FAIL: node {i} exited {p.returncode}:\n{out}",
+                      flush=True)
+                failures += 1
+
+        survivors = range(1 if chaos else 0, n)
+        reasons: dict = {}
+        for i in survivors:
+            r = results.get(i)
+            if r is None:
+                print(f"FAIL: no RESULT from node {i}", flush=True)
+                failures += 1
+                continue
+            ok = r["tokens"] == oracle[i]
+            if not ok:
+                failures += 1
+            for k, v in r["fallback"].items():
+                reasons[k] = reasons.get(k, 0) + v
+            print(f"node {i}: {len(r['tokens'])} tokens "
+                  f"{'bit-exact' if ok else 'MISMATCH'} vs oracle — "
+                  f"peer_blocks={r['peer_blocks']} "
+                  f"fallback={r['fallback']} bw={r['bw']}", flush=True)
+        if chaos:
+            if not (reasons.get("peer_unreachable")
+                    or reasons.get("verify_failed")):
+                print("FAIL: no survivor accounted the dead owner in "
+                      f"fallback_reasons ({reasons})", flush=True)
+                failures += 1
+        else:
+            expect = 2 * len(list(survivors))   # every query = 2 peer blocks
+            got = sum(results[i]["peer_blocks"] for i in survivors
+                      if i in results)
+            if got != expect:
+                print(f"FAIL: {got} peer blocks fetched over the wire, "
+                      f"expected {expect}", flush=True)
+                failures += 1
+        print(("PASS" if not failures else f"FAIL ({failures})")
+              + f": {len([i for i in survivors if i in results])}/{n} "
+              f"nodes answered, degradations {reasons or '{}'}", flush=True)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+        rd.close()
+        dserver.close()
+        if made_tmp:
+            shutil.rmtree(base, ignore_errors=True)
+    return 1 if failures else 0
 
 
 def main():
@@ -79,7 +329,36 @@ def main():
     ap.add_argument("--tbt-budget", type=float, default=None,
                     help="loop TBT budget in seconds (default: "
                          "deterministic one-chunk-per-iteration interleave)")
+    ap.add_argument("--processes", type=int, default=0,
+                    help="run the cluster as N real OS processes over the "
+                         "wire protocol (directory service + CRC-framed "
+                         "block fetches), checked bit-exact against a "
+                         "single-process oracle")
+    ap.add_argument("--chaos", default="none",
+                    choices=("none", "kill-owner"),
+                    help="with --processes: SIGKILL the block owner "
+                         "mid-FETCH_BLOCK; survivors must stay bit-exact "
+                         "with the degradation in fallback_reasons")
+    ap.add_argument("--chaos-delay", type=float, default=0.08,
+                    help="seconds after the round-2 barrier to fire the "
+                         "chaos kill")
+    ap.add_argument("--serve-stall", type=float, default=None,
+                    help="per-LAYER serving stall in each worker's "
+                         "BlockServer (widens the mid-transfer window the "
+                         "chaos kill lands in; default 0, or 0.2 under "
+                         "--chaos kill-owner)")
+    ap.add_argument("--worker-node", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: spawned by parent
+    ap.add_argument("--directory", default=None,
+                    help=argparse.SUPPRESS)   # internal: host:port
     args = ap.parse_args()
+
+    if args.worker_node is not None:
+        if args.serve_stall is None:
+            args.serve_stall = 0.0
+        sys.exit(_worker_main(args))
+    if args.processes:
+        sys.exit(_parent_main(args))
 
     if args.global_pool and not args.ssd_blocks:
         ap.error("--global-pool needs an SSD tier (--ssd-blocks > 0)")

@@ -40,6 +40,59 @@ from typing import Iterable, Optional
 TIERS = ("dram", "ssd")
 
 
+def select_owner(cands):
+    """Pick the (node, tier) to fetch from, or None. DRAM owners are
+    preferred (a peer-DRAM read skips the SSD media time); ties break on
+    the smallest node id for determinism. Shared by the in-process
+    directory and the wire-protocol ``RemoteDirectory`` so both halves
+    of the cluster agree on owner choice."""
+    cands = list(cands)
+    if not cands:
+        return None
+    return min(cands, key=lambda nt: (nt[1] != "dram", nt[0]))
+
+
+def bind_pool(directory, node, pool) -> None:
+    """Publish a ``TieredCachePool``'s residency into ``directory``:
+    seed the current state, then chain the tier-event hooks (preserving
+    hooks a byte-holder installed first) so every future move is
+    mirrored. ``directory`` only needs ``register``/``unregister`` —
+    works for both the shared-object and remote-client directories."""
+    for key in pool.blocks:
+        directory.register(key, node, "dram")
+    for key in pool.ssd.blocks:
+        directory.register(key, node, "ssd")
+    prev_insert = pool.on_insert
+    prev_demote = pool.on_demote
+    prev_promote = pool.on_promote
+    prev_drop = pool.on_drop
+
+    def on_insert(key, tier):
+        if prev_insert is not None:
+            prev_insert(key, tier)
+        directory.register(key, node, tier)
+
+    def on_demote(key):
+        if prev_demote is not None:
+            prev_demote(key)
+        directory.register(key, node, "ssd")
+
+    def on_promote(key, count_read):
+        if prev_promote is not None:
+            prev_promote(key, count_read)
+        directory.register(key, node, "dram")
+
+    def on_drop(key):
+        if prev_drop is not None:
+            prev_drop(key)
+        directory.unregister(key, node)
+
+    pool.on_insert = on_insert
+    pool.on_demote = on_demote
+    pool.on_promote = on_promote
+    pool.on_drop = on_drop
+
+
 class GlobalBlockDirectory:
     """Block key -> {node: tier} ownership map for one serving cluster."""
 
@@ -100,9 +153,7 @@ class GlobalBlockDirectory:
         with self._lock:
             cands = [(n, t) for n, t in self._owners.get(key, {}).items()
                      if n not in exclude and (among is None or n in among)]
-        if not cands:
-            return None
-        return min(cands, key=lambda nt: (nt[1] != "dram", nt[0]))
+        return select_owner(cands)
 
     def best_ssd_extension(self, hash_ids: list, start: int = 0,
                            exclude: Iterable = ()) -> tuple:
@@ -151,37 +202,4 @@ class GlobalBlockDirectory:
         """Publish a ``TieredCachePool``'s residency: seed the current
         state, then chain the tier-event hooks (preserving hooks a
         byte-holder installed first) so every future move is mirrored."""
-        with self._lock:
-            for key in pool.blocks:
-                self.register(key, node, "dram")
-            for key in pool.ssd.blocks:
-                self.register(key, node, "ssd")
-        prev_insert = pool.on_insert
-        prev_demote = pool.on_demote
-        prev_promote = pool.on_promote
-        prev_drop = pool.on_drop
-
-        def on_insert(key, tier):
-            if prev_insert is not None:
-                prev_insert(key, tier)
-            self.register(key, node, tier)
-
-        def on_demote(key):
-            if prev_demote is not None:
-                prev_demote(key)
-            self.register(key, node, "ssd")
-
-        def on_promote(key, count_read):
-            if prev_promote is not None:
-                prev_promote(key, count_read)
-            self.register(key, node, "dram")
-
-        def on_drop(key):
-            if prev_drop is not None:
-                prev_drop(key)
-            self.unregister(key, node)
-
-        pool.on_insert = on_insert
-        pool.on_demote = on_demote
-        pool.on_promote = on_promote
-        pool.on_drop = on_drop
+        bind_pool(self, node, pool)

@@ -99,6 +99,19 @@ class Messenger:
         else:
             link.bw = read_bw
 
+    def set_link_bw(self, node, bw: float) -> None:
+        """Recalibrate a node's EGRESS link to a MEASURED bandwidth — the
+        wire-protocol counterpart of ``set_ssd_bw``. A multi-process
+        cluster feeds ``SocketPeer.bw_ema`` (payload bytes/s actually
+        observed on FETCH_BLOCK reads off that node) back here, so the
+        peer-fetch arms price the socket the cluster really has, not the
+        construction-time constant."""
+        link = self.links.get(node)
+        if link is None:
+            self.add_node(node, bw)
+        else:
+            link.bw = bw
+
     # ---- cross-node SSD fetch (global pool: peer SSD read + egress hop) ----
     def estimate_peer_ssd(self, node, nbytes: float, now: float) -> float:
         """Predicted duration of fetching bytes OFF a peer's SSD: the

@@ -31,6 +31,7 @@ from repro.models.transformer import (Caches, KVCache, decode_step,
                                       decode_step_paged, init_caches,
                                       prefill)
 from repro.serving.request import ServingRequest
+from repro.serving.transport import InProcPeer, PeerError, fallback_reason
 
 
 def prefix_hash_ids(tokens: np.ndarray, block: int = BLOCK_TOKENS) -> list[int]:
@@ -136,57 +137,60 @@ class FetchPlan:
 
 
 class PeerSource:
-    """Read-side adapter over a remote ``HostKVPool`` — the in-process
-    stand-in for the Messenger's cross-node block channel.
+    """Read-side adapter over a peer transport — the Messenger's
+    cross-node block channel, transport-agnostic.
 
-    ``read_layer`` serves a peer's block from its DRAM bytes or its
-    checksummed store (store reads CRC-verify per layer, so a torn or
-    corrupt remote slot returns ``None`` exactly like a local one).
-    Failures record a reason per key (``peer_unreachable`` — the node
-    died; ``stale_directory`` — the peer no longer holds the block;
-    ``verify_failed`` — bytes present but integrity-rejected) so the
-    fetching pool can log WHY it fell back to recompute and self-heal the
-    directory.
+    The peer object is either an ``InProcPeer`` (sibling ``HostKVPool``
+    in this process) or a ``SocketPeer`` (wire protocol); both raise the
+    SAME taxonomy (``PeerUnreachable``/``StaleDirectory``/``TornFrame``
+    from ``repro.serving.transport``), so this adapter — and every
+    ``fallback_reasons`` branch downstream — cannot tell the transports
+    apart. ``read_layer`` maps a taxonomy error to a per-key reason
+    (``peer_unreachable`` — the node died; ``stale_directory`` — the
+    peer no longer holds the block; ``verify_failed`` — bytes present
+    but integrity-rejected) and returns ``None``, exactly like a failed
+    local store read, so the fetching pool can log WHY it fell back to
+    recompute and self-heal the directory.
     """
 
-    def __init__(self, node, pool) -> None:
+    def __init__(self, node, peer) -> None:
         self.node = node
-        self.pool = pool
+        self.peer = peer
         self.reasons: dict[int, str] = {}
 
     @property
     def n_layers(self) -> int:
-        if self.pool is None or not self.pool.alive:
+        if self.peer is None:
             return 0
-        store = self.pool.store
-        if store is not None and store.n_layers:
-            return store.n_layers
-        for kv in self.pool.data.values():
-            return kv[0].shape[0]
-        return 0
+        try:
+            return self.peer.n_layers
+        except PeerError:
+            return 0
 
     def note_empty(self, key: int) -> None:
         """Classify a fetch that never started: a dead peer vs an alive
         peer with nothing to serve (the directory entry was stale)."""
-        self.reasons.setdefault(
-            key, "peer_unreachable" if self.pool is None
-            or not self.pool.alive else "stale_directory")
+        if key in self.reasons:
+            return
+        if self.peer is None:
+            self.reasons[key] = "peer_unreachable"
+            return
+        try:
+            self.peer.n_layers
+        except PeerError as e:
+            self.reasons[key] = fallback_reason(e)
+        else:
+            self.reasons[key] = "stale_directory"
 
     def read_layer(self, key: int, layer: int):
-        if self.pool is None or not self.pool.alive:
+        if self.peer is None:
             self.reasons[key] = "peer_unreachable"
             return None
-        kv = self.pool.data.get(key)
-        if kv is not None:
-            return np.asarray(kv[0][layer]), np.asarray(kv[1][layer])
-        store = self.pool.store
-        if store is None or key not in store:
-            self.reasons[key] = "stale_directory"
+        try:
+            return self.peer.read_layer(key, layer)
+        except PeerError as e:
+            self.reasons[key] = fallback_reason(e)
             return None
-        pair = store.read_layer(key, layer)
-        if pair is None:
-            self.reasons[key] = "verify_failed"
-        return pair
 
 
 class HostKVPool:
@@ -286,14 +290,23 @@ class HostKVPool:
             directory.bind(node_id, self.meta)
 
     # ---- global pool membership ----------------------------------------
-    def add_peer(self, node_id, pool: "HostKVPool") -> None:
-        """Make a remote pool fetchable (in-process Messenger stand-in)."""
-        self.peers[node_id] = pool
+    def add_peer(self, node_id, peer) -> None:
+        """Make a remote node fetchable. Accepts either a peer transport
+        (``InProcPeer``/``SocketPeer`` — anything with ``n_layers`` +
+        ``read_layer`` raising the shared taxonomy) or, for backward
+        compatibility, a raw ``HostKVPool``, which is wrapped in an
+        ``InProcPeer`` so BOTH transports fail identically: a killed
+        in-process pool and a kill -9'd remote process each surface as
+        ``PeerUnreachable`` → ``fallback_reasons["peer_unreachable"]``."""
+        if not hasattr(peer, "read_layer"):
+            peer = InProcPeer(peer)
+        self.peers[node_id] = peer
 
     def kill(self) -> None:
         """Failure injection: model this node dying — peers' reads against
-        it fail with ``peer_unreachable`` from now on. Local state is left
-        intact so tests can assert nothing was served from a dead node."""
+        it raise ``PeerUnreachable`` from now on (the same error a dead
+        socket raises). Local state is left intact so tests can assert
+        nothing was served from a dead node."""
         self.alive = False
 
     def _note_fallback(self, reason: str) -> None:

@@ -42,6 +42,57 @@ def _no_thread_leaks(request):
         f"every worker (or mark the test leaks_threads)"
 
 
+def _open_fds() -> dict:
+    """(fd -> readlink target) of every interesting open fd. psutil-free:
+    /proc/self/fd is the ground truth on Linux. Kernel-/runtime-internal
+    fds (epoll, eventfd, jax plugins, devices) are ignored — sockets,
+    pipes, and regular files are what tests leak."""
+    out = {}
+    try:
+        fds = os.listdir("/proc/self/fd")
+    except OSError:                      # non-procfs platform: detector off
+        return out
+    for fd in fds:
+        try:
+            target = os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:
+            continue                     # raced with a close
+        if target.startswith(("anon_inode:", "/dev/", "/proc/", "/sys/",
+                              "/memfd:")):
+            continue
+        out[int(fd)] = target
+    return out
+
+
+@pytest.fixture(autouse=True)
+def _no_fd_leaks(request):
+    """Every test must close the sockets/files/pipes it opens: an fd
+    open after the test that wasn't open before it fails the test (same
+    contract as ``_no_thread_leaks``, one layer down — a leaked
+    ``BlockServer`` socket survives even after its thread is joined).
+    Compared as (fd, target) pairs so an fd number reused for a
+    different file still counts. Opt out with
+    ``@pytest.mark.leaks_fds``."""
+    if request.node.get_closest_marker("leaks_fds"):
+        yield
+        return
+    before = _open_fds()
+    yield
+
+    def leaked():
+        return {fd: t for fd, t in _open_fds().items()
+                if before.get(fd) != t}
+
+    # grace period: TCP teardown and GC-driven closes may trail test end
+    deadline = time.monotonic() + 2.0
+    while leaked() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    rest = leaked()
+    assert not rest, \
+        f"test leaked fds: {rest} -- close every socket/file/pipe " \
+        f"(or mark the test leaks_fds)"
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

@@ -1,0 +1,98 @@
+"""CLEAN fixture: every socket acquire closes or transfers on all
+paths. Parsed by replint only — never imported."""
+import socket
+import threading
+
+
+def probe_with_finally(addr):
+    s = socket.create_connection(addr, timeout=1.0)
+    try:
+        s.sendall(b"ping")
+        return s.recv(16)
+    finally:
+        s.close()
+
+
+def with_statement_owns(addr):
+    # context-manager acquisition is never flagged: __exit__ closes
+    with socket.create_connection(addr) as s:
+        s.sendall(b"ping")
+        return s.recv(16)
+
+
+def bind_guard_then_park(self, host, port):
+    # the BlockServer.__init__ shape: catch-all handler closes + re-raises,
+    # then ownership parks in the instance
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    try:
+        sock.bind((host, port))
+        sock.listen(32)
+    except BaseException:
+        sock.close()
+        raise
+    self._sock = sock
+    return self
+
+
+def accept_loop_hands_off(listener, adopt):
+    # the accept-loop shape: the conn is immediately handed to an owner
+    while True:
+        try:
+            conn, _ = listener.accept()
+        except OSError:
+            return
+        alive = adopt(conn)
+        if not alive:
+            return
+
+
+def linear_park_in_registry(listener, conns, cid):
+    conn, _ = listener.accept()
+    conns[cid] = conn
+
+
+def wrap_transfers_ownership(addr, timeout):
+    sock = socket.create_connection(addr, timeout=timeout)
+    return FramedConn(sock, timeout)
+
+
+def spawn_thread_owner(listener):
+    conn, _ = listener.accept()
+    t = threading.Thread(target=_serve_one, args=(conn,), daemon=True)
+    t.start()
+    return t
+
+
+def pair_returned_to_caller():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def handlers_all_close_with_catchall(addr):
+    try:
+        s = socket.create_connection(addr)
+        s.sendall(b"x")
+        return s.recv(4)
+    except OSError:
+        s.close()
+        return None
+    except BaseException:
+        s.close()
+        raise
+
+
+def own_accept_primitive_is_exempt(self):
+    # a class's accept() wrapper calling itself: covered by its tests
+    conn = self.accept()
+    conn.start()
+    return None
+
+
+class FramedConn:
+    def __init__(self, sock, timeout):
+        self.sock = sock
+        self.timeout = timeout
+
+
+def _serve_one(conn):
+    conn.close()

@@ -1,0 +1,44 @@
+"""FLAG fixture: socket acquires that can leak the fd. Parsed by
+replint only — never imported."""
+import socket
+
+
+def send_may_raise_before_close(addr):
+    # the classic shape: sendall() raising ConnectionReset leaks the fd
+    s = socket.create_connection(addr)                 # finding
+    s.sendall(b"ping")
+    s.close()
+
+
+def dropped_accept(listener):
+    listener.accept()                                  # finding: discarded
+
+
+def handler_missing_catchall(addr):
+    try:
+        s = socket.create_connection(addr)             # finding
+        s.sendall(b"x")
+        return s
+    except OSError:
+        s.close()
+        return None
+    # no catch-all: a timeout raised as socket.timeout subclassing
+    # OSError is fine, but anything else leaks the fd
+
+
+def branch_skips_close(cold):
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)  # finding
+    if cold:                                           # warm path leaks
+        s.close()
+
+
+def pair_used_before_any_close(payload):
+    a, b = socket.socketpair()                         # finding
+    a.sendall(payload)                                 # may raise: both
+    return a, b                                        # ends leak
+
+
+def receiver_position_is_not_a_transfer(listener):
+    conn, _ = listener.accept()                        # finding
+    conn.settimeout(5.0)                               # call ON the conn
+    conn.close()                                       # can raise first

@@ -1,0 +1,406 @@
+"""Chaos harness for the multi-process cluster: every failure the wire
+can suffer — dead owner (kill -9 mid-FETCH_BLOCK), torn frame at a byte
+boundary, stale directory entry, partitioned directory service — must
+end bit-exact vs a DRAM-only oracle with the right ``fallback_reasons``
+entry and nothing leaked (threads, sockets, fds — the conftest
+detectors run on every test here).
+
+Fast lane: in-process ``BlockServer``/``DirectoryServer`` over real
+ephemeral TCP sockets (CI-speed). ``@slow`` lane: real OS processes,
+including the jax-free block-node main killed mid-transfer and the full
+``serve_cluster --processes 3 --chaos kill-owner`` acceptance run.
+"""
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.directory import GlobalBlockDirectory
+from repro.core.trace import BLOCK_TOKENS
+from repro.serving.engine import prefix_hash_ids
+from repro.serving.request import ServingRequest
+from repro.serving.transport import BlockServer, InProcPeer, SocketPeer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.transformer import init_params
+    cfg = get_config("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    doc = rng.integers(0, cfg.vocab_size, 2 * BLOCK_TOKENS)
+    q1 = np.concatenate([doc, rng.integers(0, cfg.vocab_size, 48)])
+    q2 = np.concatenate([doc, rng.integers(0, cfg.vocab_size, 48)])
+    return cfg, params, q1, q2
+
+
+def _decode_tokens(params, cfg, pres, tokens, n=3):
+    from repro.serving.engine import DecodeWorker
+    dw = DecodeWorker(params, cfg, max_batch=1,
+                      max_len=pres.prompt_len + n + 4)
+    dw.join(ServingRequest(req_id=0, tokens=tokens, max_new=n), pres)
+    out = [pres.first_token]
+    while dw.n_active:
+        out.extend(tok for _rid, tok, _f in dw.step())
+    return out
+
+
+@pytest.fixture(scope="module")
+def dram_reference(setup):
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, q1, q2 = setup
+    pool = HostKVPool()
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128)
+    pw(q1)
+    return _decode_tokens(params, cfg, pw(q2), q2)
+
+
+def _socket_nodes(setup, tmp_path, *, stall_s=0.0, mangle=None):
+    """A/B pair where B reaches A ONLY over the wire: A's pool sits
+    behind a ``BlockServer`` and B holds a ``SocketPeer`` to it (shared
+    in-process directory; the directory's own wire path has its own
+    tests). A's doc is cold-prefilled and demoted to its store."""
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, q1, _ = setup
+    d = GlobalBlockDirectory()
+    pa = HostKVPool(capacity_blocks=1, ssd_capacity_blocks=64,
+                    ssd_dir=str(tmp_path / "a"), writeback_batch=1,
+                    directory=d, node_id=0)
+    pb = HostKVPool(capacity_blocks=None, ssd_capacity_blocks=64,
+                    ssd_dir=str(tmp_path / "b"), directory=d, node_id=1)
+    server = BlockServer(InProcPeer(pa), stall_s=stall_s, mangle=mangle)
+    peer = SocketPeer(server.addr, node=0)
+    pb.add_peer(0, peer)
+    pw_a = PrefillWorker(params, cfg, pa, prefill_chunk=128)
+    pw_b = PrefillWorker(params, cfg, pb, prefill_chunk=128,
+                         ssd_mode="overlap")
+    pw_a(q1)
+    pa.store.flush()
+    return d, pa, pb, pw_b, server, peer
+
+
+def _teardown(pa, pb, server, peer):
+    peer.close()
+    server.close()
+    pa.close()
+    pb.close()
+
+
+# ---------------------------------------------------------------------------
+# fast lane: real TCP, in-process endpoints
+# ---------------------------------------------------------------------------
+
+def test_socket_fetch_bit_exact(setup, dram_reference, tmp_path):
+    """The happy path over the wire IS the in-process path: peer blocks
+    stream through the AsyncPrefetcher off a socket, bit-exact."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, pw_b, server, peer = _socket_nodes(setup, tmp_path)
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 2 and pres.reused_blocks == 2
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert not pb.fallback_reasons and pb.peer_fetch_failures == 0
+    assert peer.bw_ema and peer.bw_ema > 0
+    assert server.stats()["frames_served"] >= 2 * cfg.n_layers
+    _teardown(pa, pb, server, peer)
+
+
+def test_kill9_identical_reasons_in_proc_vs_socket(setup, dram_reference,
+                                                   tmp_path):
+    """Satellite-4 regression: a killed node must look the SAME through
+    both transports. Before the shared taxonomy, ``kill()`` was a flag
+    only the in-process read path checked — a socket peer whose process
+    died surfaced differently. Now ``InProcPeer`` raises the same
+    ``PeerUnreachable`` a dead socket does, so the prefetcher records
+    identical ``fallback_reasons`` for both."""
+    from repro.serving.engine import HostKVPool, PrefillWorker, connect_pools
+    cfg, params, q1, q2 = setup
+
+    # transport 1: in-process peer, killed via the legacy kill() switch
+    d1 = GlobalBlockDirectory()
+    pa1 = HostKVPool(capacity_blocks=1, ssd_capacity_blocks=64,
+                     ssd_dir=str(tmp_path / "in_a"), writeback_batch=1,
+                     directory=d1, node_id=0)
+    pb1 = HostKVPool(capacity_blocks=None, ssd_capacity_blocks=64,
+                     ssd_dir=str(tmp_path / "in_b"), directory=d1, node_id=1)
+    connect_pools([pa1, pb1])
+    pw_a1 = PrefillWorker(params, cfg, pa1, prefill_chunk=128)
+    pw_b1 = PrefillWorker(params, cfg, pb1, prefill_chunk=128,
+                          ssd_mode="overlap")
+    pw_a1(q1)
+    pa1.store.flush()
+    pa1.kill()
+    pres1 = pw_b1(q2)
+
+    # transport 2: socket peer whose server process is gone
+    d2, pa2, pb2, pw_b2, server, peer = _socket_nodes(
+        setup, tmp_path / "sock")
+    server.close()                      # the kill -9 stand-in
+    pres2 = pw_b2(q2)
+
+    assert pb1.fallback_reasons == pb2.fallback_reasons \
+        == {"peer_unreachable": 1}
+    assert pres1.peer_blocks == pres2.peer_blocks == 0
+    ref = dram_reference
+    assert _decode_tokens(params, cfg, pres1, q2) == ref
+    assert _decode_tokens(params, cfg, pres2, q2) == ref
+    pa1.close()
+    pb1.close()
+    _teardown(pa2, pb2, server, peer)
+
+
+def test_server_death_mid_block_bit_exact(setup, dram_reference, tmp_path):
+    """The server dies BETWEEN layer frames of one block (kill -9
+    mid-FETCH_BLOCK, fast-lane edition): the client sees the stream die,
+    degrades to recompute, stays bit-exact."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, pw_b, server, peer = _socket_nodes(setup, tmp_path,
+                                                  stall_s=0.05)
+    killer = threading.Timer(0.12, server.close)
+    killer.name = "repro-chaos-killer"
+    killer.start()
+    try:
+        pres = pw_b(q2)
+    finally:
+        killer.cancel()
+        killer.join()
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert set(pb.fallback_reasons) <= {"peer_unreachable", "verify_failed"}
+    assert pb.fallback_reasons, "the death mid-block went unaccounted"
+    _teardown(pa, pb, server, peer)
+
+
+def test_torn_frame_at_byte_boundary(setup, dram_reference, tmp_path):
+    """Every LAYER frame is truncated at a byte boundary: the reader
+    sees a partial frame + EOF → TornFrame → ``verify_failed``, never
+    wrong bytes — and the stale claim self-heals out of the directory."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, pw_b, server, peer = _socket_nodes(
+        setup, tmp_path, mangle=lambda f: f[:max(1, len(f) // 3)])
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 0
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert pb.fallback_reasons == {"verify_failed": 1}
+    # self-heal: the claim that served torn bytes was withdrawn
+    h0 = prefix_hash_ids(q2)[0]
+    assert 0 not in d.holders(h0)
+    _teardown(pa, pb, server, peer)
+
+
+def test_stale_directory_entry_over_wire(setup, dram_reference, tmp_path):
+    """The directory claims node 0 holds the blocks but its store no
+    longer does (lagging advisory entry): the peer answers
+    ``StaleDirectory``, the claim heals out, the query recomputes."""
+    cfg, params, _, q2 = setup
+    d, pa, pb, pw_b, server, peer = _socket_nodes(setup, tmp_path)
+    for h in prefix_hash_ids(q2):
+        pa.store.delete(h)              # bytes gone, directory not told
+        pa.data.pop(h, None)
+    pa.store.flush()
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 0
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert pb.fallback_reasons == {"stale_directory": 1}
+    assert 0 not in d.holders(prefix_hash_ids(q2)[0])
+    _teardown(pa, pb, server, peer)
+
+
+def test_remote_directory_end_to_end(setup, dram_reference, tmp_path):
+    """Full wire wiring, single process: both pools publish to a
+    ``DirectoryServer`` through ``RemoteDirectory`` clients and fetch
+    through ``SocketPeer``s — the exact topology of one serve_cluster
+    worker — and stay bit-exact."""
+    from repro.serving.directory_service import (DirectoryServer,
+                                                 RemoteDirectory)
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, q1, q2 = setup
+    ds = DirectoryServer()
+    pools, servers, rdirs, peers = [], [], [], []
+    for i in range(2):
+        pool = HostKVPool(capacity_blocks=1 if i == 0 else None,
+                          ssd_capacity_blocks=64, writeback_batch=1,
+                          ssd_dir=str(tmp_path / f"p{i}"))
+        server = BlockServer(InProcPeer(pool))
+        rdir = RemoteDirectory(ds.addr, node_id=i, block_port=server.port)
+        pool.directory = rdir
+        pool.node_id = i
+        rdir.bind(i, pool.meta)
+        pools.append(pool)
+        servers.append(server)
+        rdirs.append(rdir)
+    for i, pool in enumerate(pools):
+        for nid, (host, port) in rdirs[i].nodes().items():
+            if nid != i:
+                sp = SocketPeer((host, port), node=nid)
+                peers.append(sp)
+                pool.add_peer(nid, sp)
+    pw_a = PrefillWorker(params, cfg, pools[0], prefill_chunk=128)
+    pw_b = PrefillWorker(params, cfg, pools[1], prefill_chunk=128,
+                         ssd_mode="overlap")
+    pw_a(q1)
+    pools[0].store.flush()
+    time.sleep(0)                       # publishes are synchronous RPCs
+    pres = pw_b(q2)
+    assert pres.peer_blocks == 2
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert not pools[1].fallback_reasons
+    st = rdirs[1].stats()
+    assert st["keys"] >= 2 and st["nodes"] == 2
+    for sp in peers:
+        sp.close()
+    for s in servers:
+        s.close()
+    for r in rdirs:
+        r.close()
+    for p in pools:
+        p.close()
+    ds.close()
+
+
+def test_directory_partition_degrades_to_recompute(setup, dram_reference,
+                                                   tmp_path):
+    """The directory service is unreachable: publishes drop (counted),
+    lookups answer 'nobody', the peer arm never forms — requests still
+    complete from recompute with no exception anywhere."""
+    from repro.serving.directory_service import (DirectoryServer,
+                                                 RemoteDirectory)
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, _, q2 = setup
+    dead = DirectoryServer()
+    dead_addr = dead.addr
+    dead.close()                        # nothing listens here any more
+    rdir = RemoteDirectory(dead_addr)
+    pool = HostKVPool(capacity_blocks=None, ssd_capacity_blocks=64,
+                      ssd_dir=str(tmp_path / "b"))
+    pool.directory = rdir
+    pool.node_id = 1
+    rdir.bind(1, pool.meta)
+    pool.add_peer(0, SocketPeer(("127.0.0.1", 1), node=0))
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=128,
+                       ssd_mode="overlap")
+    pres = pw(q2)
+    assert pres.peer_blocks == 0 and pres.reused_blocks == 0
+    assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+    assert not pool.fallback_reasons    # partition ≠ failed fetch
+    st = rdir.stats()
+    assert st.get("partitioned") and st["client_errors"] > 0
+    pool.peers[0].close()
+    rdir.close()
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# @slow lane: real OS processes
+# ---------------------------------------------------------------------------
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _read_port(proc) -> int:
+    line = proc.stdout.readline()
+    assert line.startswith("PORT "), f"unexpected banner: {line!r}"
+    return int(line.split()[1])
+
+
+@pytest.mark.slow
+def test_kill9_owner_process_mid_fetch(setup, dram_reference, tmp_path):
+    """The real thing: a separate OS process (the jax-free block-node
+    main) owns the blocks; it is SIGKILL'd mid-FETCH_BLOCK while this
+    process fetches through it. The fetch degrades to recompute,
+    bit-exact, the dead node's directory claims drop via its connection
+    lease, and nothing leaks."""
+    from repro.serving.directory_service import (DirectoryServer,
+                                                 RemoteDirectory)
+    from repro.serving.engine import HostKVPool, PrefillWorker
+    cfg, params, q1, q2 = setup
+
+    # populate a store on disk, then hand it to the owner process
+    seed_pool = HostKVPool(capacity_blocks=1, ssd_capacity_blocks=64,
+                           writeback_batch=1,
+                           ssd_dir=str(tmp_path / "owner"))
+    seed_pw = PrefillWorker(params, cfg, seed_pool, prefill_chunk=128)
+    seed_pw(q1)
+    seed_pool.store.flush()
+    seed_pool.close()
+
+    ds = DirectoryServer()
+    owner = subprocess.Popen(
+        [sys.executable, "-m", "repro.serving.transport",
+         "--store", str(tmp_path / "owner"), "--node-id", "0",
+         "--directory", f"127.0.0.1:{ds.port}", "--stall", "0.3"],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True,
+        env=_env())
+    try:
+        port = _read_port(owner)
+        pool = HostKVPool(capacity_blocks=None, ssd_capacity_blocks=64,
+                          ssd_dir=str(tmp_path / "b"))
+        rdir = RemoteDirectory(ds.addr, node_id=1, block_port=0)
+        pool.directory = rdir
+        pool.node_id = 1
+        rdir.bind(1, pool.meta)
+        pool.add_peer(0, SocketPeer(("127.0.0.1", port), node=0))
+        pw = PrefillWorker(params, cfg, pool, prefill_chunk=128,
+                           ssd_mode="overlap")
+
+        killer = threading.Timer(
+            0.15, os.kill, args=(owner.pid, signal.SIGKILL))
+        killer.name = "repro-chaos-killer"
+        killer.start()
+        try:
+            pres = pw(q2)               # owner dies mid-stream (0.3s/layer)
+        finally:
+            killer.cancel()
+            killer.join()
+        owner.wait(timeout=30)
+        assert owner.returncode == -signal.SIGKILL
+
+        assert _decode_tokens(params, cfg, pres, q2) == dram_reference
+        assert pool.fallback_reasons, "unaccounted degradation"
+        assert set(pool.fallback_reasons) <= {"peer_unreachable",
+                                              "verify_failed"}
+        # lease-based self-heal: the dead node's claims drop without any
+        # explicit withdraw
+        h0 = prefix_hash_ids(q2)[0]
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline and 0 in ds.directory.holders(h0):
+            time.sleep(0.05)
+        assert 0 not in ds.directory.holders(h0)
+        pool.peers[0].close()
+        rdir.close()
+        pool.close()
+    finally:
+        if owner.poll() is None:
+            owner.kill()
+            owner.wait()
+        owner.stdout.close()
+        ds.close()
+
+
+@pytest.mark.slow
+def test_serve_cluster_three_process_chaos(tmp_path):
+    """Acceptance criterion: a 3-process serve_cluster run whose block
+    owner is kill -9'd mid-transfer completes every surviving request
+    bit-exact vs the single-process oracle, with the degradation in
+    fallback_reasons. (The example's parent process asserts all of it
+    and exits nonzero otherwise.)"""
+    res = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "serve_cluster.py"),
+         "--processes", "3", "--chaos", "kill-owner", "--max-new", "4",
+         "--ssd-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=_env())
+    assert res.returncode == 0, \
+        f"chaos run failed:\n{res.stdout}\n{res.stderr}"
+    assert "PASS" in res.stdout and "bit-exact" in res.stdout

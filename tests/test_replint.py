@@ -23,6 +23,7 @@ RULE_FIXTURES = [
     ("host-alias", "host_alias"),
     ("stop-iteration", "stop_iteration"),
     ("refcount-pair", "refcount"),
+    ("socket-pair", "socket_pair"),
     ("policy-purity", "purity"),
 ]
 

@@ -1,0 +1,244 @@
+"""Wire-codec property tests: the CRC framing must deliver exactly the
+bytes that were sent or raise a TYPED error — silent corruption is the
+one outcome that must be impossible, at any fragmentation, truncation,
+or bit-flip the transport can suffer."""
+import random
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.serving.transport import (_FRAME_HDR, BlockServer, FrameConn,
+                                     FrameReader, PeerError, PeerUnreachable,
+                                     SocketPeer, StaleDirectory, TornFrame,
+                                     encode_frame, fallback_reason,
+                                     pack_layer, unpack_layer)
+
+
+def _payload(rng: random.Random, n: int) -> bytes:
+    return bytes(rng.randrange(256) for _ in range(n))
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + partial-read reassembly
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 3))
+def test_roundtrip_any_fragmentation(seed, n_frames_extra):
+    """A frame stream fed to FrameReader in arbitrary chunk sizes decodes
+    to exactly the frames encoded, in order, regardless of how recv()
+    fragmented the bytes."""
+    rng = random.Random(seed)
+    frames = [(rng.randrange(256), _payload(rng, rng.randrange(0, 200)))
+              for _ in range(1 + n_frames_extra)]
+    wire = b"".join(encode_frame(t, p) for t, p in frames)
+    reader = FrameReader()
+    got = []
+    i = 0
+    while i < len(wire):
+        step = rng.randrange(1, 17)
+        got += reader.feed(wire[i:i + step])
+        i += step
+    assert got == frames
+    assert reader.pending == 0
+    reader.eof()                        # clean close: no partial buffered
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_truncation_never_yields_a_frame(seed):
+    """Cutting the stream at ANY byte boundary inside a frame yields no
+    frame for it, and eof() raises TornFrame — a mid-frame death can
+    never look like a clean close."""
+    rng = random.Random(seed)
+    payload = _payload(rng, rng.randrange(1, 150))
+    wire = encode_frame(3, payload)
+    cut = rng.randrange(1, len(wire))   # strictly inside the frame
+    reader = FrameReader()
+    assert reader.feed(wire[:cut]) == []
+    assert reader.pending == cut
+    with pytest.raises(TornFrame):
+        reader.eof()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_bitflip_typed_error_never_silent_corruption(seed):
+    """Flipping any ONE bit anywhere in a frame — magic, type, length,
+    CRC field, or payload — never delivers a frame: either feed() raises
+    TornFrame immediately, or the flip changed the length field so the
+    parser waits for bytes that never come, and eof() raises TornFrame.
+    The CRC covers the header prefix too, so even a mis-typed but
+    payload-intact frame counts as corruption."""
+    rng = random.Random(seed)
+    payload = _payload(rng, rng.randrange(1, 120))
+    wire = bytearray(encode_frame(7, payload))
+    pos = rng.randrange(len(wire))
+    wire[pos] ^= 1 << rng.randrange(8)
+    reader = FrameReader()
+    try:
+        frames = reader.feed(bytes(wire))
+    except TornFrame:
+        return                          # typed rejection: the contract
+    assert frames == [], "silent corruption: a flipped frame decoded!"
+    assert reader.pending            # parser is waiting, stream is dead
+    with pytest.raises(TornFrame):
+        reader.eof()
+
+
+def test_oversized_length_is_torn():
+    hdr = _FRAME_HDR.pack(b"MKW1", 1, 1 << 30, 0)
+    with pytest.raises(TornFrame):
+        FrameReader().feed(hdr)
+
+
+def test_bad_magic_is_torn():
+    with pytest.raises(TornFrame):
+        FrameReader().feed(b"XXXX" + b"\0" * 16)
+
+
+# ---------------------------------------------------------------------------
+# layer payload codec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_layer_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    shape = (1, int(rng.integers(1, 5)), int(rng.integers(1, 17)))
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    meta, k2, v2 = unpack_layer(pack_layer(seed, 3, k, v))
+    assert meta["key"] == seed and meta["layer"] == 3
+    assert np.array_equal(k, k2) and np.array_equal(v, v2)
+
+
+def test_layer_meta_mismatch_is_torn():
+    k = np.zeros((1, 2, 4), np.float32)
+    payload = bytearray(pack_layer(5, 0, k, k))
+    # shrink the body by one byte: meta klen now disagrees
+    with pytest.raises(TornFrame):
+        unpack_layer(bytes(payload[:-1]))
+    # garbage meta prefix
+    with pytest.raises(TornFrame):
+        unpack_layer(struct.pack("<I", 4) + b"nope")
+
+
+# ---------------------------------------------------------------------------
+# FrameConn over a real socketpair
+# ---------------------------------------------------------------------------
+
+def test_frameconn_roundtrip_and_taxonomy():
+    a, b = socket.socketpair()
+    ca, cb = FrameConn(a, timeout=5.0), FrameConn(b, timeout=5.0)
+    ca.send(9, b"ping")
+    assert cb.recv() == (9, b"ping")
+    # close-mid-frame: a partial header then death must raise TornFrame
+    b.sendall(encode_frame(2, b"x" * 50)[:10])
+    cb.close()
+    with pytest.raises(TornFrame):
+        ca.recv()
+    ca.close()
+
+
+def test_frameconn_clean_close_is_unreachable():
+    a, b = socket.socketpair()
+    ca, cb = FrameConn(a, timeout=5.0), FrameConn(b, timeout=5.0)
+    cb.close()
+    with pytest.raises(PeerUnreachable):
+        ca.recv()
+    ca.close()
+
+
+def test_fallback_reason_mapping():
+    assert fallback_reason(PeerUnreachable("x")) == "peer_unreachable"
+    assert fallback_reason(StaleDirectory("x")) == "stale_directory"
+    assert fallback_reason(TornFrame("x")) == "verify_failed"
+    assert fallback_reason(PeerError("x")) == "peer_fetch_failed"
+
+
+# ---------------------------------------------------------------------------
+# SocketPeer vs a mangling server: wrong bytes are impossible
+# ---------------------------------------------------------------------------
+
+class _ArrayBackend:
+    n_layers = 2
+
+    def read_layer(self, key, layer):
+        rng = np.random.default_rng(1000 * key + layer)
+        a = rng.standard_normal((1, 2, 8)).astype(np.float32)
+        return a, a + 1
+
+
+def test_socket_peer_survives_mangled_frames():
+    """A server that corrupts or truncates LAYER frames produces typed
+    errors client-side; reconnecting afterwards serves correct bytes."""
+    state = dict(mode=None)
+
+    def mangle(frame: bytes):
+        if state["mode"] == "flip":
+            f = bytearray(frame)
+            f[-1] ^= 0xFF
+            return bytes(f)
+        if state["mode"] == "truncate":
+            return frame[:len(frame) // 2]
+        return frame
+
+    srv = BlockServer(_ArrayBackend(), mangle=mangle)
+    peer = SocketPeer(srv.addr, node=0, timeout=5.0)
+    try:
+        k, v = peer.read_layer(1, 0)            # clean baseline
+        ref = np.random.default_rng(1000).standard_normal(
+            (1, 2, 8)).astype(np.float32)
+        assert np.array_equal(k, ref)
+        state["mode"] = "flip"
+        with pytest.raises(TornFrame):
+            peer.read_layer(1, 0)
+        state["mode"] = "truncate"              # torn at a byte boundary:
+        with pytest.raises(TornFrame):          # partial frame + EOF
+            peer.read_layer(1, 1)
+        state["mode"] = None                    # recovery on reconnect
+        k2, _ = peer.read_layer(1, 0)
+        assert np.array_equal(k2, ref)
+    finally:
+        peer.close()
+        srv.close()
+
+
+def test_socket_peer_concurrent_readers_one_server():
+    """N client threads fetching disjoint layers through one BlockServer
+    each observe exactly their own bytes (per-conn serving, no crosstalk)."""
+    srv = BlockServer(_ArrayBackend())
+    errs: list = []
+
+    def fetch(key):
+        p = SocketPeer(srv.addr, node=0, timeout=10.0)
+        try:
+            for layer in range(2):
+                k, _ = p.read_layer(key, layer)
+                ref = np.random.default_rng(
+                    1000 * key + layer).standard_normal(
+                    (1, 2, 8)).astype(np.float32)
+                if not np.array_equal(k, ref):
+                    errs.append((key, layer))
+        except PeerError as e:
+            errs.append((key, repr(e)))
+        finally:
+            p.close()
+
+    ts = [threading.Thread(target=fetch, args=(i,), name=f"repro-cl-{i}")
+          for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    srv.close()
+    assert not errs, errs

@@ -154,12 +154,13 @@ def _rules():
     # imported lazily so ``from tools.replint.core import ...`` never
     # cycles with the checker modules
     from tools.replint import (guarded_by, host_alias, purity, refcount,
-                               stop_iteration)
+                               socket_pair, stop_iteration)
     return [
         (guarded_by.RULE, guarded_by.check),
         (host_alias.RULE, host_alias.check),
         (stop_iteration.RULE, stop_iteration.check),
         (refcount.RULE, refcount.check),
+        (socket_pair.RULE, socket_pair.check),
         (purity.RULE, purity.check),
     ]
 

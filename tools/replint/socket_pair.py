@@ -1,0 +1,240 @@
+"""socket-pair: every socket acquired must reach close() on all paths.
+
+The wire-protocol sibling of ``refcount-pair``: a statement that
+acquires an OS socket —
+
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    conn = socket.create_connection(addr)
+    a, b = socket.socketpair()
+    conn, peer = listener.accept()
+
+— must, on EVERY exit path including exceptions, either close it
+(``close``/``detach``) or transfer ownership.  A leaked socket is a
+leaked fd: the chaos harness's conftest detector catches it dynamically,
+this rule catches the shape statically.  Accepted transfers:
+
+  * return the socket;
+  * park it in an object/structure whose lifecycle owns it
+    (``self._conns[cid] = conn``);
+  * pass it as an ARGUMENT to a call — handing the conn to a
+    ``FrameConn``, a serve thread, or an adopt method makes the callee
+    the owner (the receiver position does not transfer: ``conn.recv()``
+    still leaves you holding it);
+  * a ``with`` acquisition (never flagged: the context manager closes);
+  * a ``try`` whose ``finally`` closes, or whose handlers ALL close and
+    include a catch-all.
+
+Like refcount-pair, a single linear path from the acquire to a
+close/transfer must have no statement in between that can raise or
+branch away.  Acquires via ``self.X()`` calls are exempt (a class's own
+``accept``-like primitive, covered by its own tests).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.core import (Finding, ModuleCtx, dotted, functions_in,
+                                names_in, own_nodes)
+# the CFG walk and try-protection analysis are shape-generic; reuse the
+# refcount-pair machinery rather than fork it
+from tools.replint.refcount import (_SAFE_BUILTINS, _SAFE_METHODS, _Blocks,
+                                    _is_catchall)
+
+RULE = "socket-pair"
+
+# module-level constructors (matched as dotted names) and the accept verb
+_MODULE_ACQUIRES = {"socket.socket", "socket.create_connection",
+                    "socket.socketpair"}
+_BARE_ACQUIRES = {"create_connection", "socketpair"}
+ACQUIRE_VERB = "accept"
+RELEASE = {"close", "detach"}
+
+
+def _acquire_call(stmt) -> ast.Call | None:
+    """The socket-acquiring Call in an Assign/AnnAssign/Expr statement,
+    if any.  ``with socket.create_connection(...) as s:`` is not an
+    Assign/Expr and is never flagged — the context manager closes."""
+    value = getattr(stmt, "value", None)
+    if not isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.Expr)) \
+            or value is None:
+        return None
+    for node in ast.walk(value):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _BARE_ACQUIRES:
+            return node
+        if not isinstance(f, ast.Attribute):
+            continue
+        if dotted(f) in _MODULE_ACQUIRES:
+            return node
+        if f.attr == ACQUIRE_VERB:
+            recv = f.value
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                continue                # a class's own accept primitive
+            return node
+    return None
+
+
+def _held_names(stmt) -> set[str]:
+    if isinstance(stmt, ast.Assign):
+        out = set()
+        for t in stmt.targets:
+            out |= names_in(t)
+        return out
+    if isinstance(stmt, ast.AnnAssign):
+        return names_in(stmt.target)
+    return set()                        # bare Expr: the fd is discarded
+
+
+def _is_release_call(node) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in RELEASE)
+
+
+def _contains_release(stmts) -> bool:
+    for s in stmts:
+        for node in ast.walk(s):
+            if _is_release_call(node):
+                return True
+    return False
+
+
+def _try_protects(tr: ast.Try) -> bool:
+    if _contains_release(tr.finalbody):
+        return True
+    return bool(tr.handlers) \
+        and all(_contains_release(h.body) for h in tr.handlers) \
+        and any(_is_catchall(h) for h in tr.handlers)
+
+
+def _call_arg_transfer(node, held: set[str]) -> bool:
+    """A held socket passed as an ARGUMENT (not the receiver) hands
+    ownership to the callee: FrameConn(sock), Thread(args=(conn,)),
+    self._adopt(conn)."""
+    if not isinstance(node, ast.Call):
+        return False
+    for a in list(node.args) + [kw.value for kw in node.keywords]:
+        if names_in(a) & held:
+            return True
+    return False
+
+
+def _stmt_satisfies(stmt, held: set[str]) -> bool:
+    """Does this statement close or transfer the held socket?"""
+    if isinstance(stmt, ast.Return) and stmt.value is not None \
+            and names_in(stmt.value) & held:
+        return True
+    value = getattr(stmt, "value", None)
+    if isinstance(stmt, (ast.Expr, ast.Assign)) and value is not None:
+        for node in ast.walk(value):
+            if _is_release_call(node) and names_in(node) & held:
+                return True
+            if _call_arg_transfer(node, held):
+                return True
+    if isinstance(stmt, ast.Assign) and names_in(stmt.value) & held:
+        # parked in a structure the owner closes (conn registry)
+        if any(isinstance(t, (ast.Attribute, ast.Subscript))
+               for t in stmt.targets):
+            return True
+    if isinstance(stmt, ast.Try) and _try_protects(stmt):
+        return True
+    return False
+
+
+def _stmt_aliases(stmt, held: set[str]) -> set[str]:
+    if isinstance(stmt, ast.Assign) and names_in(stmt.value) & held:
+        return {t.id for t in stmt.targets if isinstance(t, ast.Name)}
+    return set()
+
+
+def _stmt_risky(stmt) -> str | None:
+    """Reason this statement can raise or branch away, else None."""
+    if isinstance(stmt, (ast.If, ast.For, ast.While, ast.With,
+                         ast.AsyncWith, ast.AsyncFor, ast.Try,
+                         ast.Match)):
+        return "control flow"
+    if isinstance(stmt, ast.Raise):
+        return "raise"
+    if isinstance(stmt, ast.Assert):
+        return "assert"
+    if isinstance(stmt, (ast.Break, ast.Continue)):
+        return "loop exit"
+    for node in ast.walk(stmt):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _SAFE_BUILTINS:
+            continue
+        if isinstance(f, ast.Attribute) and f.attr in _SAFE_METHODS:
+            continue
+        if _is_release_call(node):
+            continue
+        name = f.attr if isinstance(f, ast.Attribute) else \
+            getattr(f, "id", "call")
+        return f"call to {name}()"
+    return None
+
+
+def _satisfies_anywhere(stmt, held: set[str]) -> bool:
+    if _stmt_satisfies(stmt, held):
+        return True
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.stmt) and node is not stmt \
+                and _stmt_satisfies(node, held):
+            return True
+    return False
+
+
+def check(ctx: ModuleCtx) -> list[Finding]:
+    findings: list[Finding] = []
+    for func in functions_in(ctx.tree):
+        blocks = None
+        for stmt in [n for n in own_nodes(func) if isinstance(n, ast.stmt)]:
+            call = _acquire_call(stmt)
+            if call is None:
+                continue
+            if blocks is None:
+                blocks = _Blocks(func)
+            f = call.func
+            verb = f.attr if isinstance(f, ast.Attribute) else f.id
+            what = f"socket acquired via .{verb}()"
+            held = _held_names(stmt)
+            if not held:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} is discarded: the fd is never bound, so it "
+                    f"can never be closed"))
+                continue
+            exception_safe = any(_try_protects(tr) for tr in
+                                 blocks.enclosing_trys(stmt, func))
+            satisfied = False
+            risky_reason = None
+            risky_line = None
+            for nxt in blocks.path_after(stmt, func):
+                if _satisfies_anywhere(nxt, held) if exception_safe \
+                        else _stmt_satisfies(nxt, held):
+                    satisfied = True
+                    break
+                held |= _stmt_aliases(nxt, held)
+                if not exception_safe and risky_reason is None:
+                    r = _stmt_risky(nxt)
+                    if r is not None:
+                        risky_reason, risky_line = r, nxt.lineno
+            if satisfied and risky_reason is None:
+                continue
+            if risky_reason is not None:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} can leak: {risky_reason} at line "
+                    f"{risky_line} may raise or branch before the fd is "
+                    f"closed or ownership is transferred -- wrap in "
+                    f"try/finally (or handlers that all close and "
+                    f"include a catch-all)"))
+            else:
+                findings.append(Finding(
+                    ctx.path, stmt.lineno, RULE,
+                    f"{what} never reaches close() or an ownership "
+                    f"transfer on the fall-through path"))
+    return findings
