@@ -176,7 +176,7 @@ def _run_mode(mode, params, cfg, cold, revisit, warm, *, read_bw,
     counters = dict(peer_blocks=pool_b.peer_blocks_fetched,
                     peer_failures=pool_b.peer_fetch_failures,
                     reused_blocks=pw_b.stats()["reused_blocks"],
-                    ssd_loaded=pw_b.stats.get("ssd_loaded_blocks", 0))
+                    ssd_loaded=pw_b.stats().get("ssd_loaded_blocks", 0))
     for p in {id(pool_a): pool_a, id(pool_b): pool_b}.values():
         p.close()
     shutil.rmtree(tmp, ignore_errors=True)

@@ -20,6 +20,16 @@ dense (L, B, max_len) arena at EQUAL batch:
 Every token emitted by the paged substrate must be bit-exact against the
 dense oracle.
 
+Two more lanes ride along:
+
+* width buckets — a depth-skewed batch steps as per-width sub-batches
+  (``width_buckets=2``) instead of padding every slot to the deepest
+  slot's pow2 width; tokens must stay bit-exact (wall-clock table).
+* mesh capacity — on 4 virtual CPU devices (subprocess), the (data,
+  model)-sharded pool must serve ≥ 1.9x the KV tokens per device-byte
+  when either axis doubles (deterministic, CI-gated), with every mesh's
+  streams identical and per-step time within the host-overhead bound.
+
     PYTHONPATH=src python -m benchmarks.bench_paged_decode [--quick]
 """
 from __future__ import annotations
@@ -159,6 +169,145 @@ def _capacity(params, cfg, budget_pages, *, shared_blocks, cap, max_new=2):
                 logical_pages=logical, physical_pages=pp.used_pages)
 
 
+def _buckets(params, cfg, *, max_new=6):
+    """Per-slot width buckets vs the single global pow2 width on a
+    depth-skewed batch: one 10-page slot forces the global width to 16,
+    so the shallow slots attend 8x the pages they own. Buckets split the
+    step into per-width sub-batches; tokens must stay bit-exact."""
+    from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+    from repro.serving.paged_cache import DevicePagePool
+    from repro.serving.request import ServingRequest
+
+    rng = np.random.default_rng(4)
+    prompts = {0: rng.integers(0, cfg.vocab_size, 600),    # 10 pages
+               1: rng.integers(0, cfg.vocab_size, 600),
+               2: rng.integers(0, cfg.vocab_size, 70),     # 2 pages
+               3: rng.integers(0, cfg.vocab_size, 40)}     # 1 page
+
+    rows, streams = [], {}
+    for wb in (1, 2):
+        pp = DevicePagePool(cfg, n_pages=1 + 5 * 16, page_tokens=PAGE_TOKENS)
+        pool = HostKVPool()
+        pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
+                           page_pool=pp)
+        dw = DecodeWorker(params, cfg, max_batch=4, max_len=1024,
+                          substrate="paged", page_pool=pp, width_buckets=wb)
+        outs = {}
+        for rid, toks in prompts.items():
+            r = pw(toks)
+            dw.join(ServingRequest(req_id=rid, tokens=toks,
+                                   max_new=max_new), r)
+            outs[rid] = [r.first_token]
+        steps, t_step = 0, float("inf")
+        while dw.n_active:
+            steps += 1
+            t0 = time.perf_counter()
+            out = dw.step()
+            t_step = min(t_step, time.perf_counter() - t0)
+            for rid, tok, _ in out:
+                outs[rid].append(tok)
+        streams[wb] = outs
+        rows.append(dict(width_buckets=wb, steps=steps,
+                         bucket_substeps=dw.stats()["bucket_substeps"],
+                         step_ms_min=1e3 * t_step))
+        pp.check_leaks()
+    assert streams[2] == streams[1], \
+        "width-bucketed step diverged from the single-width oracle"
+    assert rows[1]["bucket_substeps"] >= 2 * rows[1]["steps"], rows
+    return rows
+
+
+_MESH_SUB = r"""
+import dataclasses, json, time
+import jax
+import numpy as np
+from repro.configs.base import get_config
+from repro.launch.mesh import make_decode_mesh
+from repro.models.transformer import init_params
+from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
+from repro.serving.paged_cache import DevicePagePool
+from repro.serving.request import ServingRequest
+
+assert jax.device_count() == 4, jax.devices()
+cfg = dataclasses.replace(get_config("smollm-360m").reduced(),
+                          n_heads=16, n_kv_heads=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(2)
+prompts = [rng.integers(0, cfg.vocab_size, 200) for _ in range(4)]
+BANK_PAGES = 65                     # fixed PER-BANK budget incl. null page
+
+rows = []
+for d, m in [(1, 1), (2, 1), (1, 2), (2, 2)]:
+    mesh = make_decode_mesh(d, m)
+    pp = DevicePagePool(cfg, n_pages=BANK_PAGES, mesh=mesh, page_tokens=64)
+    pool = HostKVPool()
+    pw = PrefillWorker(params, cfg, pool, prefill_chunk=256, page_pool=pp)
+    dw = DecodeWorker(params, cfg, max_batch=4, max_len=1024,
+                      substrate="paged", page_pool=pp)
+    outs = {}
+    for rid, toks in enumerate(prompts):
+        r = pw(toks)
+        dw.join(ServingRequest(req_id=rid, tokens=toks, max_new=5), r)
+        outs[rid] = [r.first_token]
+    t_step = float("inf")
+    while dw.n_active:
+        t0 = time.perf_counter()
+        out = dw.step()
+        t_step = min(t_step, time.perf_counter() - t0)
+        for rid, tok, _ in out:
+            outs[rid].append(tok)
+    pp.check_leaks()
+    # per-device KV bytes: one addressable shard of each slab
+    shard_b = (pp.k_pages.addressable_shards[0].data.nbytes
+               + pp.v_pages.addressable_shards[0].data.nbytes)
+    cap = pp.pressure()["capacity"]
+    rows.append(dict(mesh=f"{d}x{m}", banks=d, model_shards=m,
+                     bank_pages=BANK_PAGES, capacity_pages=cap,
+                     capacity_tokens=cap * 64,
+                     per_device_kv_kib=shard_b // 1024,
+                     step_ms_min=1e3 * t_step,
+                     tokens=outs))
+print("ROWS_JSON:" + json.dumps(rows))
+"""
+
+
+def _mesh_table():
+    """Device-mesh capacity scaling on 4 virtual CPU devices (subprocess:
+    the parent's jax is already initialised single-device). Deterministic
+    columns are CI-gated; step wall-clock is reported separately."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    res = subprocess.run([sys.executable, "-c", _MESH_SUB], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"mesh subprocess failed:\nSTDOUT:{res.stdout}\n"
+                           f"STDERR:{res.stderr}")
+    line = [l for l in res.stdout.splitlines()
+            if l.startswith("ROWS_JSON:")][0]
+    rows = json.loads(line[len("ROWS_JSON:"):])
+
+    # shard invariance rides along: every mesh emitted the same streams
+    base = rows[0].pop("tokens")
+    for r in rows[1:]:
+        assert r.pop("tokens") == base, f"mesh {r['mesh']} diverged"
+
+    # capacity per device-byte: logical KV tokens the mesh serves per KiB
+    # of any one device's slab share — data banks add pages, model
+    # stripes thin each device's share of every page
+    t0 = rows[0]["capacity_tokens"] / rows[0]["per_device_kv_kib"]
+    for r in rows:
+        r["capacity_per_device_x"] = round(
+            (r["capacity_tokens"] / r["per_device_kv_kib"]) / t0, 2)
+    step_rows = [dict(mesh=r["mesh"], step_ms_min=r.pop("step_ms_min"))
+                 for r in rows]
+    return rows, step_rows
+
+
 def main(fast: bool = False) -> int:
     import jax
 
@@ -228,6 +377,30 @@ def main(fast: bool = False) -> int:
             f"shared-prefix capacity win < 2x: {r}")
         if r["paged_fit"] > 1:        # sharing collapses physical residency
             assert r["physical_pages"] < r["logical_pages"], r
+
+    # ---- per-slot width buckets on a depth-skewed batch ----
+    bucket_rows = _buckets(params, cfg)
+    emit("paged_decode_buckets", bucket_rows)
+    b1, b2 = bucket_rows
+    print(f"buckets: 1-width step {b1['step_ms_min']:.2f} ms vs 2-width "
+          f"{b2['step_ms_min']:.2f} ms ({b2['bucket_substeps']} substeps, "
+          f"tokens bit-exact)")
+
+    # ---- (data, model) mesh capacity scaling (deterministic, CI-gated) ----
+    mesh_rows, step_rows = _mesh_table()
+    emit("paged_decode_mesh", mesh_rows)
+    emit("paged_decode_mesh_step", step_rows)
+    by = {r["mesh"]: r for r in mesh_rows}
+    # doubling either axis must serve >= 1.9x the KV tokens per byte any
+    # one device holds (exactly 2x minus per-bank null-page overhead)
+    assert by["2x1"]["capacity_per_device_x"] >= 1.9, by["2x1"]
+    assert by["1x2"]["capacity_per_device_x"] >= 1.9, by["1x2"]
+    assert by["2x2"]["capacity_per_device_x"] >= 3.8, by["2x2"]
+    s0 = step_rows[0]["step_ms_min"]
+    for r in step_rows[1:]:
+        assert r["step_ms_min"] <= 3.0 * s0 + 10.0, (
+            f"mesh {r['mesh']} per-step time blew past the host-overhead "
+            f"bound: {r['step_ms_min']:.2f} ms vs 1x1 {s0:.2f} ms")
     return 0
 
 

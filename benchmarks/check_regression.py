@@ -61,6 +61,13 @@ GATED_TABLES: dict[str, tuple[tuple[str, ...], float, float]] = {
         ("dense_fit", "paged_fit", "fit_ratio", "logical_pages",
          "physical_pages"),
         0.0, 0.0),
+    # mesh capacity scaling is exact page/byte accounting (fixed per-bank
+    # budget, slab shard sizes); the step-time companion table
+    # (paged_decode_mesh_step) is wall-clock and asserted in-process
+    "paged_decode_mesh": (
+        ("capacity_pages", "capacity_tokens", "per_device_kv_kib",
+         "capacity_per_device_x"),
+        0.0, 0.0),
     # serving-loop scheduling counts are exact (deterministic interleave:
     # no TBT budget, submits interleaved with iterations on one thread);
     # the serving_loop_goodput table is wall-clock and asserts its own

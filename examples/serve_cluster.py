@@ -318,6 +318,12 @@ def main():
                          "prefill→decode (zero-copy join, prefix-sharing "
                          "slots), or the dense per-slot arena (the "
                          "bit-exactness oracle)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the paged decode engine over a (data, "
+                         "model) device mesh (e.g. 2x2): slots + page "
+                         "banks over data, KV-head stripes over model. "
+                         "Needs D*M jax devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--device-pages", type=int, default=0,
                     help="device page-pool size (0 = sized from the decode "
                          "workers' slot budget)")
@@ -364,6 +370,29 @@ def main():
         ap.error("--global-pool needs an SSD tier (--ssd-blocks > 0)")
 
     cfg = get_config("smollm-360m").reduced()
+    mesh = None
+    mesh_d = 1
+    if args.mesh:
+        import dataclasses
+
+        from repro.launch.mesh import make_decode_mesh, parse_mesh_arg
+        from repro.models.transformer import paged_shard_reason
+        if args.decode_substrate != "paged":
+            ap.error("--mesh shards the PAGED decode substrate")
+        mesh_d, mesh_m = parse_mesh_arg(args.mesh)
+        if mesh_m > 1 and paged_shard_reason(cfg, mesh_m, mesh_d):
+            kv = max(4, mesh_m)
+            if 16 % kv or kv % mesh_m:
+                ap.error(f"--mesh model axis {mesh_m} has no grouped-GQA "
+                         f"head layout")
+            print(f"--mesh {args.mesh}: adjusting the reduced arch to "
+                  f"grouped GQA (n_heads=16, n_kv_heads={kv}) so KV heads "
+                  f"stripe over the model axis")
+            cfg = dataclasses.replace(cfg, n_heads=16, n_kv_heads=kv)
+        reason = paged_shard_reason(cfg, mesh_m, mesh_d)
+        if reason:
+            ap.error(f"--mesh {args.mesh}: {reason}")
+        mesh = make_decode_mesh(mesh_d, mesh_m)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     # ---- build the disaggregated cluster ----
@@ -392,9 +421,15 @@ def main():
     if args.decode_substrate == "paged" and paged_supported(cfg):
         from repro.serving.paged_cache import DevicePagePool
         per_seq = (max_len + page_tokens - 1) // page_tokens
-        n_pages = args.device_pages or 1 + (n_d * max_batch + n_p) * per_seq
+        # mesh: n_pages is the PER-BANK budget (capacity scales ×data)
+        n_pages = args.device_pages or \
+            1 + ((n_d * max_batch) // mesh_d + n_p) * per_seq
         page_pool = DevicePagePool(cfg, n_pages=n_pages,
-                                   page_tokens=page_tokens)
+                                   page_tokens=page_tokens, mesh=mesh)
+        if mesh is not None:
+            print(f"decode mesh {args.mesh}: {page_pool.n_banks} page "
+                  f"banks × {page_pool.bank_pages} pages, KV heads / "
+                  f"{mesh_m} model shards")
     pws = [PrefillWorker(params, cfg, pools[i], prefill_chunk=256,
                          ssd_mode=args.ssd_mode, page_pool=page_pool)
            for i in range(n_p)]

@@ -11,6 +11,14 @@ together (GQA packing keeps the MXU matmul at (group × D) · (D × page)).
 Online softmax over the page loop; tokens past ``seq_lens[b]`` masked.
 VMEM per step: one (page, D) K tile + V tile + (group, D) accumulators —
 a few hundred KiB at page = 64, D = 128.
+
+Sharding: the kernel itself is mesh-oblivious. Under the (data, model)
+shard_map entries (``ops.paged_decode_attention_sharded``, the engine's
+``decode_step_paged_sharded``) each shard invokes this kernel unchanged
+on its LOCAL slices — a KV/m head stripe of the page slab and a B/d row
+slice of the batch. Attention is head-local and row-local, so the grid
+simply shrinks along those axes; no cross-device traffic happens inside
+the kernel.
 """
 from __future__ import annotations
 

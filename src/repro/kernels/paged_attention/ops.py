@@ -30,6 +30,40 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
                    interpret=interpret)
 
 
+def paged_decode_attention_sharded(q, k_pages, v_pages, block_table,
+                                   seq_lens, *, mesh, window: int = 0,
+                                   use_pallas: bool = False,
+                                   interpret: bool | None = None):
+    """Mesh entry: one layer's paged decode attention shard_mapped over a
+    (data, model) mesh — batch rows over 'data', KV-head stripes (and the
+    grouped query heads that attend them) over 'model'. The inner loop is
+    collective-free (attention is head-local); outputs reassemble to the
+    global (B, H, D) by construction of the out_specs, so the result is
+    bitwise ``paged_decode_attention`` on the unsharded arrays. Grouped
+    GQA only. At this kernel-level entry the page store is replicated
+    across the data axis (one shared bank, global page ids); the engine's
+    ``DevicePagePool(mesh=…)`` additionally banks pages per data shard
+    and hands the step bank-local tables."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import compat_shard_map
+    m = int(mesh.shape.get("model", 1))
+    H, KV = q.shape[1], k_pages.shape[2]
+    assert H % KV == 0 and KV % m == 0, \
+        f"sharded paged attention is grouped-GQA only (H={H}, KV={KV}, m={m})"
+
+    def local(q, kp, vp, tbl, lens):
+        return paged_decode_attention(q, kp, vp, tbl, lens, window=window,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
+
+    f = compat_shard_map(
+        local, mesh=mesh,
+        in_specs=(P("data", "model", None), P(None, None, "model", None),
+                  P(None, None, "model", None), P("data", None), P("data")),
+        out_specs=P("data", "model", None), check_vma=False)
+    return f(q, k_pages, v_pages, block_table, seq_lens)
+
+
 def paged_decode_attention_layers(qs, k_pages, v_pages, block_table,
                                   seq_lens, *, qh2kv=None, window: int = 0,
                                   use_pallas: bool = False,

@@ -83,6 +83,38 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
     return out.reshape(B, 1, H, D)[:, 0]
 
 
+def paged_attention_split_ref(q, k_pages, v_pages, block_table, seq_lens,
+                              *, n_model: int = 1, n_data: int = 1,
+                              window: int = 0):
+    """Mesh-free oracle of the SHARDED decomposition: split the KV heads
+    into ``n_model`` contiguous stripes and the batch rows into ``n_data``
+    banks, run ``paged_attention_ref`` on every (bank, stripe) piece
+    independently, and recombine by concatenation — exactly what the
+    shard_map entry does per device, minus the mesh. Bitwise equality
+    with the plain oracle is the shard-invariance property the device
+    suite re-checks on real virtual-device meshes; this version runs in
+    the default single-device test lane. Grouped GQA only (the sharded
+    path's boundary): H % KV == 0 and KV % n_model == 0."""
+    B, H, D = q.shape
+    KV = k_pages.shape[2]
+    assert H % KV == 0 and KV % n_model == 0 and B % n_data == 0, \
+        (H, KV, n_model, B, n_data)
+    kv_loc, g = KV // n_model, H // KV
+    rows = B // n_data
+    outs = []
+    for b in range(n_data):
+        r = slice(b * rows, (b + 1) * rows)
+        shards = []
+        for mi in range(n_model):
+            h = slice(mi * kv_loc, (mi + 1) * kv_loc)
+            qh = slice(mi * kv_loc * g, (mi + 1) * kv_loc * g)
+            shards.append(paged_attention_ref(
+                q[r, qh], k_pages[:, :, h], v_pages[:, :, h],
+                block_table[r], seq_lens[r], window=window))
+        outs.append(jnp.concatenate(shards, axis=1))
+    return jnp.concatenate(outs, axis=0)
+
+
 def paged_attention_layers_ref(qs, k_pages, v_pages, block_table, seq_lens,
                                *, qh2kv=None, window: int = 0):
     """Batched-over-layers oracle: qs (L, B, H, D) against the stacked

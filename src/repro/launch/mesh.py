@@ -51,6 +51,39 @@ def make_test_mesh(data: int = 2, model: int = 2):
     return compat_make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh_arg(spec: str) -> tuple[int, int]:
+    """``--mesh DxM`` → (data, model). Accepts '2x2', '4x1', '1x2'."""
+    try:
+        d, m = spec.lower().split("x")
+        d, m = int(d), int(m)
+    except ValueError:
+        raise ValueError(
+            f"--mesh wants DATAxMODEL (e.g. 2x2), got {spec!r}") from None
+    if d < 1 or m < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
+def make_decode_mesh(data: int, model: int):
+    """(data, model) mesh for the sharded paged decode engine. Unlike
+    ``compat_make_mesh`` this takes the FIRST data*model devices rather
+    than requiring an exact device-count match, so ``--mesh 2x2`` works
+    on any host with >= 4 (virtual) devices."""
+    import numpy as np
+    need = data * model
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {data}x{model} needs {need} devices but jax sees "
+            f"{len(devs)} — on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before the first jax import")
+    if len(devs) == need:
+        return compat_make_mesh((data, model), ("data", "model"))
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(data, model), ("data", "model"))
+
+
 def make_stage_mesh(stages: int):
     """CPP pipeline mesh (§5.1): one axis of prefill-group stages."""
     return compat_make_mesh((stages,), ("stage",))

@@ -69,6 +69,20 @@ def main(argv=None) -> int:
                          "GlobalBlockDirectory and local misses resolve to "
                          "cross-node fetches — the Figure-3 global pool "
                          "across launcher runs")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the paged decode engine over a "
+                         "(data, model) device mesh, e.g. 2x2: decode "
+                         "slots and page-pool banks split over the data "
+                         "axis, KV-head stripes over the model axis. "
+                         "Needs data*model jax devices (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N) and, for model>1, a grouped-GQA head "
+                         "layout (the arch's heads are adjusted with a "
+                         "printed note if required)")
+    ap.add_argument("--width-buckets", type=int, default=1,
+                    help="per-step block-table width buckets (>1 runs "
+                         "shallow slots on narrower tables instead of "
+                         "padding to the deepest; single-device only)")
     ap.add_argument("--decode-substrate", default="paged",
                     choices=("paged", "dense"),
                     help="decode KV substrate: block-table pages with "
@@ -88,6 +102,33 @@ def main(argv=None) -> int:
     from repro.serving.engine import DecodeWorker, HostKVPool, PrefillWorker
 
     cfg = get_config(args.arch).reduced()
+    mesh = None
+    mesh_d = 1
+    if args.mesh:
+        import dataclasses
+
+        from repro.launch.mesh import make_decode_mesh, parse_mesh_arg
+        from repro.models.transformer import paged_shard_reason
+        if args.decode_substrate != "paged":
+            ap.error("--mesh shards the PAGED decode engine; drop "
+                     "--decode-substrate dense")
+        mesh_d, mesh_m = parse_mesh_arg(args.mesh)
+        if mesh_m > 1 and paged_shard_reason(cfg, mesh_m, mesh_d):
+            kv = max(4, mesh_m)
+            if 16 % kv or kv % mesh_m:
+                ap.error(f"--mesh model axis {mesh_m} has no grouped-GQA "
+                         f"head layout")
+            print(f"--mesh {args.mesh}: adjusting the reduced arch to "
+                  f"grouped GQA (n_heads=16, n_kv_heads={kv}) so KV heads "
+                  f"stripe over the model axis")
+            cfg = dataclasses.replace(cfg, n_heads=16, n_kv_heads=kv)
+        reason = paged_shard_reason(cfg, mesh_m, mesh_d)
+        if reason:
+            ap.error(f"--mesh {args.mesh}: {reason}")
+        if args.max_batch % mesh_d:
+            ap.error(f"--max-batch {args.max_batch} must divide over the "
+                     f"mesh data axis ({mesh_d})")
+        mesh = make_decode_mesh(mesh_d, mesh_m)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     directory = peer_pool = None
     if args.peer_ssd_dir:
@@ -111,7 +152,8 @@ def main(argv=None) -> int:
         from repro.serving.paged_cache import DevicePagePool
         per_seq = max_len // 64
         page_pool = DevicePagePool(
-            cfg, n_pages=1 + (args.max_batch + 1) * per_seq, page_tokens=64)
+            cfg, n_pages=1 + (args.max_batch // mesh_d + 1) * per_seq,
+            page_tokens=64, mesh=mesh)
     pw = PrefillWorker(params, cfg, pool, prefill_chunk=256,
                        ssd_mode=args.ssd_mode, page_pool=page_pool)
 
@@ -128,7 +170,8 @@ def main(argv=None) -> int:
         r.hash_ids = r.hash_ids[:max(r.input_length // 512, 1)]
 
     dw = DecodeWorker(params, cfg, max_batch=args.max_batch, max_len=max_len,
-                      substrate=args.decode_substrate, page_pool=page_pool)
+                      substrate=args.decode_substrate, page_pool=page_pool,
+                      width_buckets=args.width_buckets)
     payloads = [(r.req_id, realize_request_tokens(r, cfg.vocab_size),
                  min(args.max_new, max(r.output_length, 2)),
                  r.hash_ids[0] if r.hash_ids else None) for r in reqs]
@@ -200,6 +243,11 @@ def main(argv=None) -> int:
     if page_pool is not None:
         ps = page_pool.stats()
         ds = dw.stats()
+        if mesh is not None:
+            print(f"mesh {args.mesh}: {page_pool.n_banks} page banks × "
+                  f"{page_pool.bank_pages} pages (capacity "
+                  f"{ps['capacity']} logical pages), "
+                  f"{dw.slots_per_bank} slots per data shard")
         print(f"paged substrate: {page_pool.used_pages}/{page_pool.n_pages} "
               f"pages held, {ps['pages_written']} written, "
               f"{ps['shared_adoptions']} shared-prefix adoptions, "

@@ -351,10 +351,21 @@ def attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     return y, (k_cache, v_cache)
 
 
+@dataclass(frozen=True)
+class PagedShard:
+    """shard_map context for the sharded paged decode step: the mesh axis
+    that stripes KV heads and its size. ``n_model == 1`` degrades every
+    sharded code path to the single-device one (no axis_index, no
+    collective), so one implementation serves both."""
+    model_axis: str = "model"
+    n_model: int = 1
+
+
 def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
                           k_pages, v_pages, block_table, seq_lens,
                           use_pallas: bool = False,
-                          window_override: Optional[int] = None):
+                          window_override: Optional[int] = None,
+                          shard: Optional[PagedShard] = None):
     """Decode attention sub-block over one layer's PAGED KV store (§3
     step 4 on the block-table substrate): norm → qkv → rope at each
     slot's depth → scatter the new token's K/V into the slot's current
@@ -369,6 +380,15 @@ def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     The engine guarantees host-side that every active slot's write-target
     page is exclusively owned (copy-on-write happens before the step), so
     the scatter never mutates a page another slot can read.
+
+    ``shard`` (inside ``compat_shard_map`` only): KV heads are striped
+    over ``shard.model_axis`` — this shard's page slabs hold KV/m heads.
+    The projections compute the FULL head set (replicated math, so every
+    per-head value is bitwise the single-device one), this shard's head
+    slice is written/attended locally (attention is head-local: no
+    collective in the inner loop), and the post-attention combine is one
+    head-concatenating ``all_gather`` feeding the output projection —
+    an exact recombination, never a partial-sum reduce.
     """
     from repro.kernels.paged_attention.ops import paged_decode_attention
     B, S, _ = x.shape
@@ -377,6 +397,10 @@ def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     window = cfg.sliding_window if window_override is None else window_override
     grouped = GROUPED_ATTN and Hp == cfg.n_heads and Hp % KV == 0
     qh2kv = None if grouped else qh2kv_map(cfg.n_heads, KV, Hp)
+    n_model = shard.n_model if shard is not None else 1
+    if n_model > 1:
+        assert grouped and KV % n_model == 0, \
+            "model-parallel KV heads require grouped GQA with KV % m == 0"
 
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     q = (h @ p["wq"]).reshape(B, S, Hp, Dh)
@@ -397,6 +421,16 @@ def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
+    if n_model > 1:
+        # this shard's contiguous KV-head stripe (and the query group that
+        # attends it — grouped GQA keeps query heads head-local too)
+        kv_loc = KV // n_model
+        g = Hp // KV
+        mi = jax.lax.axis_index(shard.model_axis)
+        q = jax.lax.dynamic_slice_in_dim(q, mi * kv_loc * g, kv_loc * g, 2)
+        k = jax.lax.dynamic_slice_in_dim(k, mi * kv_loc, kv_loc, 2)
+        v = jax.lax.dynamic_slice_in_dim(v, mi * kv_loc, kv_loc, 2)
+
     # scatter the new K/V row into each slot's tail page (inactive slots
     # target the null page 0 — always masked, never read)
     pt = k_pages.shape[1]
@@ -409,6 +443,10 @@ def paged_attention_block(x, p, cfg: ModelConfig, dist: Dist, *,
     o = paged_decode_attention(q[:, 0], k_pages, v_pages, block_table,
                                pos + 1, qh2kv=qh2kv, window=window,
                                use_pallas=use_pallas)
+    if n_model > 1:
+        # exact head-concatenating combine: each head's value comes from
+        # exactly one shard, so the recombined o is bitwise the oracle's
+        o = jax.lax.all_gather(o, shard.model_axis, axis=1, tiled=True)
     y = o.reshape(B, S, Hp * Dh) @ p["wo"]
     return y, (k_pages, v_pages)
 

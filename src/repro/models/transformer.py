@@ -567,7 +567,8 @@ def decode_step(params, tokens, caches: Caches, cfg: ModelConfig,
 
 def decode_step_paged(params, tokens, k_pages, v_pages, block_table,
                       seq_lens, cfg: ModelConfig, dist: Dist = NO_DIST, *,
-                      use_pallas: bool = False, window_override=None):
+                      use_pallas: bool = False, window_override=None,
+                      shard=None):
     """One continuous-batching decode iteration over the PAGED substrate.
 
     tokens: (B, 1); k_pages/v_pages: (L, P, page, KV, Dh) — the shared
@@ -595,7 +596,8 @@ def decode_step_paged(params, tokens, k_pages, v_pages, block_table,
         y, (kp, vp) = paged_attention_block(
             x, p_a, cfg, dist, k_pages=kp, v_pages=vp,
             block_table=block_table, seq_lens=seq_lens,
-            use_pallas=use_pallas, window_override=window_override)
+            use_pallas=use_pallas, window_override=window_override,
+            shard=shard)
         x = x + y
         y, a = _ffn(x, p_fl, p_fl, cfg, dist, use_moe)
         x = x + y
@@ -607,3 +609,81 @@ def decode_step_paged(params, tokens, k_pages, v_pages, block_table,
     h = rms_norm(x, params["final_ln"], cfg.norm_eps)
     logits = _logits_at(params, h, cfg)
     return logits, kps, vps
+
+
+def paged_shard_reason(cfg: ModelConfig, model_shards: int,
+                       data_shards: int = 1) -> str:
+    """Why the sharded paged decode step can NOT cover ``cfg`` on a
+    (data, model) mesh — empty string when it can. KV heads stripe over
+    the model axis only for grouped GQA (contiguous query-head groups per
+    KV head; the padded ``qh2kv`` remap scatters query heads across KV
+    heads, so a head stripe is not self-contained — the same boundary as
+    the Pallas kernel's ``_kernel_ok``)."""
+    from repro.models.layers import GROUPED_ATTN
+    if not paged_supported_cfg(cfg):
+        return "paged decode covers uniform attention stacks only"
+    if cfg.moe is not None and cfg.moe.every == 1:
+        return ("MoE layers route through their own shard_map dispatch; "
+                "the sharded paged step covers dense-MLP stacks")
+    if model_shards > 1:
+        Hp, KV = cfg.padded_heads, cfg.n_kv_heads
+        if not (GROUPED_ATTN and Hp == cfg.n_heads and Hp % KV == 0):
+            return (f"model-parallel KV heads need grouped GQA "
+                    f"(padded_heads == n_heads, divisible groups); "
+                    f"{cfg.name} pads {cfg.n_heads}→{Hp} query heads "
+                    f"over {KV} KV heads")
+        if KV % model_shards != 0:
+            return (f"n_kv_heads={KV} not divisible by model axis "
+                    f"{model_shards}")
+    del data_shards   # any data axis works: slots shard row-wise
+    return ""
+
+
+def paged_supported_cfg(cfg: ModelConfig) -> bool:
+    return cfg.attention_layers == cfg.n_layers and not cfg.encoder_layers
+
+
+def decode_step_paged_sharded(params, tokens, k_pages, v_pages, block_table,
+                              seq_lens, cfg: ModelConfig, mesh, *,
+                              use_pallas: bool = False,
+                              window_override=None):
+    """``decode_step_paged`` under ``compat_shard_map`` on a (data, model)
+    mesh: decode slots data-parallel (tokens / block table / seq_lens
+    shard by row; every per-slot op is row-independent, so each data
+    shard's math is bitwise the full-batch math), KV heads model-parallel
+    (each model shard holds (L, P, page, KV/m, Dh) page-slab stripes; the
+    inner attention loop is all_gather/psum-free because attention is
+    head-local, and the only model-axis collective is the exact
+    head-concatenating combine ahead of the output projection inside
+    ``paged_attention_block``).
+
+    The block table arrives with BANK-LOCAL page ids (each data shard's
+    rows index its own page-slab bank directly — ``DevicePagePool``
+    converts global→local host-side), so the per-shard body is literally
+    the single-device step. Weights are replicated; logits come back
+    row-sharded and reassemble to the global (B, 1, V).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import compat_shard_map
+    from repro.models.layers import PagedShard
+    m = int(mesh.shape.get("model", 1))
+    d = int(mesh.shape.get("data", 1))
+    reason = paged_shard_reason(cfg, m, d)
+    if reason:
+        raise ValueError(f"cannot shard paged decode over {d}x{m}: {reason}")
+    shard = PagedShard("model", m)
+    pages_spec = P(None, "data", None, "model", None)
+
+    def local_step(p, t, kp, vp, tbl, lens):
+        return decode_step_paged(p, t, kp, vp, tbl, lens, cfg,
+                                 use_pallas=use_pallas,
+                                 window_override=window_override,
+                                 shard=shard)
+
+    f = compat_shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P("data", None), pages_spec, pages_spec,
+                  P("data", None), P("data")),
+        out_specs=(P("data", None, None), pages_spec, pages_spec),
+        check_vma=False)
+    return f(params, tokens, k_pages, v_pages, block_table, seq_lens)

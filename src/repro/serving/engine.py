@@ -28,8 +28,9 @@ from repro.core.cache import CachePool
 from repro.core.trace import BLOCK_TOKENS
 from repro.models.layers import DTYPE
 from repro.models.transformer import (Caches, KVCache, decode_step,
-                                      decode_step_paged, init_caches,
-                                      prefill)
+                                      decode_step_paged,
+                                      decode_step_paged_sharded, init_caches,
+                                      paged_shard_reason, prefill)
 from repro.serving.request import ServingRequest
 from repro.serving.transport import InProcPeer, PeerError, fallback_reason
 
@@ -649,25 +650,30 @@ def paged_supported(cfg: ModelConfig) -> bool:
 
 
 def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
-              v_full: np.ndarray, S: int) -> Optional[list[int]]:
+              v_full: np.ndarray, S: int,
+              bank: Optional[int] = None) -> Optional[list[int]]:
     """Stage a request's KV into a ``DevicePagePool`` page run (§3 step 2:
     fresh pages written layer-stacked; step 1: registered prefix runs
     ADOPTED — the physical pages are shared with every slot on the same
     hash chain, no bytes move). Full 512-token blocks register under
     their chain hash for later requests; the partial tail gets private
-    pages. The caller owns one reference per returned page. Returns None
-    (nothing held) if the pool can't fit the run even after evicting
-    registry-only runs."""
+    pages. On a banked (mesh-sharded) pool the whole run lives in ONE
+    data-shard bank — ``bank=None`` picks the bank with the deepest
+    registered prefix. The caller owns one reference per returned page.
+    Returns None (nothing held) if the pool can't fit the run even after
+    evicting registry-only runs."""
     if pool is None:
         return None
+    if bank is None:
+        bank = pool.best_stage_bank(hash_ids)
     B = BLOCK_TOKENS
     n_full = len(hash_ids)
     held: list[int] = []
     try:
-        adopted, pages = pool.adopt_chain(hash_ids)
+        adopted, pages = pool.adopt_chain(hash_ids, bank=bank)
         held = list(pages)
         for i in range(adopted, n_full):
-            run = pool.alloc(pool.pages_per_block)
+            run = pool.alloc(pool.pages_per_block, bank=bank)
             held += run
             pool.write_run(run, k_full[:, i * B:(i + 1) * B],
                            v_full[:, i * B:(i + 1) * B])
@@ -675,7 +681,7 @@ def stage_run(pool, hash_ids: list[int], k_full: np.ndarray,
             pages += run
         tail = S - n_full * B
         if tail > 0:
-            run = pool.alloc(pool.pages_for(tail))
+            run = pool.alloc(pool.pages_for(tail), bank=bank)
             held += run
             pool.write_run(run, k_full[:, n_full * B:S],
                            v_full[:, n_full * B:S])
@@ -1125,6 +1131,38 @@ class PreemptedRun:
     v: np.ndarray
 
 
+def _pow2_ceil(n: int) -> int:
+    w = 1
+    while w < n:
+        w *= 2
+    return w
+
+
+def plan_width_buckets(needs: list[int], max_pages: int,
+                       max_buckets: int = 1) -> list[int]:
+    """Block-table widths (descending) for one decode step over slots
+    needing ``needs`` pages each. Every width is a power of two capped at
+    ``max_pages`` (so the jitted step sees at most log2(max_pages) table
+    shapes per bucket count); with ``max_buckets=1`` the single width is
+    exactly the historical global padding (deepest slot, pow2). More
+    buckets keep the top distinct widths and merge shallower slots into
+    the smallest kept — a shallow slot in a deep batch then attends a
+    short table instead of padding to the deepest slot's width."""
+    widths = sorted({min(_pow2_ceil(n), max_pages) for n in needs},
+                    reverse=True)
+    return widths[:max(max_buckets, 1)] or [1]
+
+
+def bucket_width(need: int, plan: list[int], max_pages: int) -> int:
+    """Smallest plan width covering ``need`` pages (plan from
+    ``plan_width_buckets``; its head always covers the deepest slot)."""
+    n2 = min(_pow2_ceil(need), max_pages)
+    for w in reversed(plan):
+        if w >= n2:
+            return w
+    return plan[0]
+
+
 class DecodeWorker:
     """§3 step 4: continuous batching with per-slot cache depths.
 
@@ -1149,7 +1187,8 @@ class DecodeWorker:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int,
                  max_len: int, substrate: str = "paged",
                  page_pool=None, page_tokens: int = 64,
-                 use_pallas: bool = False) -> None:
+                 use_pallas: bool = False, mesh=None,
+                 width_buckets: int = 1) -> None:
         if substrate == "paged" and not paged_supported(cfg):
             substrate = "dense"     # non-uniform stacks keep the arena
         assert substrate in ("paged", "dense"), substrate
@@ -1158,32 +1197,67 @@ class DecodeWorker:
         self.max_batch = max_batch
         self.max_len = max_len
         self.substrate = substrate
+        self.width_buckets = max(int(width_buckets), 1)
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.counters = dict(zero_copy_joins=0, staged_joins=0, steps=0,
-                             preemptions=0, resumed_joins=0)
+                             preemptions=0, resumed_joins=0,
+                             bucket_substeps=0)
         if substrate == "paged":
             from repro.serving.paged_cache import DevicePagePool
+            if page_pool is not None:
+                if mesh is not None and mesh is not page_pool.mesh:
+                    raise ValueError(
+                        "mesh= disagrees with page_pool.mesh — the pool's "
+                        "banking fixes the decode mesh; pass one of them")
+                mesh = page_pool.mesh
+            d = 1 if mesh is None else int(mesh.shape.get("data", 1))
+            if max_batch % d:
+                raise ValueError(
+                    f"max_batch={max_batch} must divide over the mesh's "
+                    f"data axis ({d}) — slots partition into per-shard "
+                    f"row groups")
+            if mesh is not None:
+                m = int(mesh.shape.get("model", 1))
+                reason = paged_shard_reason(cfg, m, d)
+                if reason:
+                    raise ValueError(
+                        f"cannot shard paged decode over {d}x{m}: {reason}")
             if page_pool is None:
-                # standalone sizing: every slot at full depth + one extra
-                # sequence of staging headroom (registry runs are evictable
-                # on top, so this bound holds under sharing too)
+                # standalone sizing (per bank): every slot of the bank at
+                # full depth + one extra sequence of staging headroom
+                # (registry runs are evictable on top, so this bound
+                # holds under sharing too)
                 per_seq = (max_len + page_tokens - 1) // page_tokens
                 page_pool = DevicePagePool(
-                    cfg, n_pages=1 + (max_batch + 1) * per_seq,
-                    page_tokens=page_tokens)
+                    cfg, n_pages=1 + (max_batch // d + 1) * per_seq,
+                    page_tokens=page_tokens, mesh=mesh)
             self.page_pool = page_pool
+            self.mesh = mesh
+            self.slots_per_bank = max_batch // page_pool.n_banks
+            if self.width_buckets > 1 and mesh is not None:
+                raise ValueError(
+                    "width_buckets>1 sub-batches the step, which breaks "
+                    "the mesh's even data-axis row split — pick one")
             pt = page_pool.page_tokens
             self.max_pages = (max_len + pt - 1) // pt
             self.block_table = np.zeros((max_batch, self.max_pages), np.int32)
             self.seq_lens = np.zeros(max_batch, np.int32)
             self.n_pages_slot = np.zeros(max_batch, np.int32)
             self.caches = None
-            self._step_paged = jax.jit(
-                lambda p, t, kp, vp, tbl, lens: decode_step_paged(
-                    p, t, kp, vp, tbl, lens, cfg, use_pallas=use_pallas))
+            if mesh is None:
+                self._step_paged = jax.jit(
+                    lambda p, t, kp, vp, tbl, lens: decode_step_paged(
+                        p, t, kp, vp, tbl, lens, cfg, use_pallas=use_pallas))
+            else:
+                self._step_paged = jax.jit(
+                    lambda p, t, kp, vp, tbl, lens:
+                    decode_step_paged_sharded(
+                        p, t, kp, vp, tbl, lens, cfg, mesh,
+                        use_pallas=use_pallas))
         else:
             self.page_pool = None
+            self.mesh = None
             self.caches = init_caches(cfg, max_batch, max_len)
             self.caches = self.caches._replace(
                 length=jnp.zeros((max_batch,), jnp.int32))
@@ -1220,13 +1294,42 @@ class DecodeWorker:
         return need
 
     # ---- paged-substrate plumbing --------------------------------------
-    def _adopt_pages(self, pres: PrefillResult) -> list[int]:
+    def _slot_bank(self, slot: int) -> int:
+        """Data-shard bank of a batch slot: slots partition into
+        contiguous per-bank row groups so the mesh step's ``P('data')``
+        row split lands each group on the shard holding its pages."""
+        return slot // self.slots_per_bank
+
+    def _pick_slot(self, pref_bank: Optional[int]) -> int:
+        """Free slot for a join: the staged run's own bank when it has
+        room (zero-copy adoption needs slot bank == page bank), else the
+        bank with the most free slots (load-balances the data shards).
+        Single-bank pools degrade to ``slots.index(None)``."""
+        free_by_bank: dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            if s is None:
+                free_by_bank.setdefault(self._slot_bank(i), i)
+        if pref_bank is not None and pref_bank in free_by_bank:
+            return free_by_bank[pref_bank]
+        counts = {b: sum(1 for i, s in enumerate(self.slots)
+                         if s is None and self._slot_bank(i) == b)
+                  for b in free_by_bank}
+        bank = max(counts, key=lambda b: (counts[b], -b))
+        return free_by_bank[bank]
+
+    def _adopt_pages(self, pres: PrefillResult, bank: int = 0) -> list[int]:
         """Take a reference on the request's page run: zero-copy when the
-        prefill staged into OUR pool (first join consumes the staging
-        reference; later joins of the same result share the run —
-        n-best/beam fan-out), else stage a copy from the dense KV."""
+        prefill staged into OUR pool's target bank (first join consumes
+        the staging reference; later joins of the same result share the
+        run — n-best/beam fan-out), else stage a copy from the dense KV.
+        A run staged into a DIFFERENT bank re-stages into ``bank`` (the
+        slot's data shard can only attend its own bank) and this join
+        consumes the staging reference — the copy is the handoff."""
         pp = self.page_pool
-        if pres.pages is not None and pres.page_pool is pp:
+        same_bank = (pres.pages is not None and pres.page_pool is pp
+                     and (not pres.pages
+                          or pp.bank_of(pres.pages[0]) == bank))
+        if same_bank:
             pages = list(pres.pages)
             if pres._pages_adopted:
                 # late share (n-best): the staging reference is gone, so the
@@ -1245,9 +1348,11 @@ class DecodeWorker:
             return pages
         hash_ids = pres.hash_ids if pres.hash_ids is not None else []
         pages = stage_run(pp, hash_ids, pres.kv_k, pres.kv_v,
-                          pres.prompt_len)
+                          pres.prompt_len, bank=bank)
         if pages is None:
             raise MemoryError("device page pool cannot hold the request")
+        if pres.page_pool is pp:
+            pres.release_pages()    # cross-bank copy consumes the staging ref
         self.counters["staged_joins"] += 1
         return pages
 
@@ -1289,7 +1394,13 @@ class DecodeWorker:
             raise RuntimeError(
                 f"decode batch full: all {self.max_batch} slots occupied — "
                 f"check has_free_slot before join")
-        slot = self.slots.index(None)
+        if self.substrate == "paged" and self.page_pool.n_banks > 1:
+            pref = None
+            if pres.pages and pres.page_pool is self.page_pool:
+                pref = self.page_pool.bank_of(pres.pages[0])
+            slot = self._pick_slot(pref)
+        else:
+            slot = self.slots.index(None)
         L = pres.prompt_len
         n_emit = 0
         if resume_emitted is not None:
@@ -1314,7 +1425,7 @@ class DecodeWorker:
                 f"({self.max_len}) — the slot would outgrow its KV capacity "
                 f"mid-decode")
         if self.substrate == "paged":
-            pages = self._adopt_pages(pres)
+            pages = self._adopt_pages(pres, bank=self._slot_bank(slot))
             assert len(pages) <= self.max_pages, \
                 f"prompt needs {len(pages)} pages > max_len's {self.max_pages}"
             self.block_table[slot, :len(pages)] = pages
@@ -1396,7 +1507,7 @@ class DecodeWorker:
                     f"slot {i} outgrew its block table (len "
                     f"{int(self.seq_lens[i])} of max_len {self.max_len})")
             if pidx == int(self.n_pages_slot[i]):
-                (pg,) = pp.alloc(1)
+                (pg,) = pp.alloc(1, bank=self._slot_bank(i))
                 self.block_table[i, pidx] = pg
                 self.n_pages_slot[i] += 1
             else:
@@ -1405,6 +1516,77 @@ class DecodeWorker:
                 if new != pid:
                     self.block_table[i, pidx] = new
 
+    def _step_full(self, active: list[int]) -> jax.Array:
+        """Single-width full-batch step (the historical path; also the
+        only mesh path — the sharded step takes the whole batch so its
+        ``P('data')`` row split stays even). Returns per-slot next
+        tokens (B,) int32."""
+        pp = self.page_pool
+        pt = pp.page_tokens
+        # live page span: deepest active slot, padded to a power of two
+        # so the jitted step sees at most log2(max_pages) shapes
+        need = max(int(self.seq_lens[i]) // pt + 1 for i in active)
+        width = min(_pow2_ceil(need), self.max_pages)
+        if self.mesh is None:
+            # .copy(): jax CPU zero-copies 2-D numpy buffers, and the host
+            # tables mutate (growth/COW/length bumps) while the async step
+            # still reads them — hand jit a frozen snapshot
+            tbl = jnp.asarray(self.block_table[:, :width].copy())
+        else:
+            # the sharded step wants BANK-LOCAL page ids: each data shard
+            # indexes its own slab stripe (the % makes a fresh array, so
+            # no host buffer aliases into the async step)
+            tbl = jnp.asarray(self.block_table[:, :width] % pp.bank_pages)
+        lens = jnp.asarray(self.seq_lens.copy())
+        logits, kp, vp = self._step_paged(
+            self.params, self.tokens, pp.k_pages, pp.v_pages, tbl, lens)
+        pp.k_pages, pp.v_pages = kp, vp
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    def _step_bucketed(self, active: list[int]) -> jax.Array:
+        """Width-bucketed step: group active slots by the pow2 table
+        width they need (``plan_width_buckets``) and run one jitted
+        sub-batch per bucket, so a shallow slot in a deep batch attends a
+        short table instead of padding to the deepest slot's width.
+        Bit-exact with ``_step_full`` — every row's computation is
+        row-local, and sub-batch rows pad to a power of two with null
+        rows (len 0, table 0), which behave exactly like the full-batch
+        path's inactive slots. Buckets run sequentially, threading the
+        page slabs through (their KV writes touch disjoint pages).
+        Returns per-slot next tokens (B,) int32 (0 for inactive slots —
+        same as don't-care argmax noise in the full path)."""
+        pp = self.page_pool
+        pt = pp.page_tokens
+        needs = {i: int(self.seq_lens[i]) // pt + 1 for i in active}
+        plan = plan_width_buckets(list(needs.values()), self.max_pages,
+                                  self.width_buckets)
+        kp, vp = pp.k_pages, pp.v_pages
+        toks_host = np.asarray(self.tokens)
+        nxt = np.zeros(self.max_batch, np.int32)
+        for w in plan:
+            rows = [i for i in active
+                    if bucket_width(needs[i], plan, self.max_pages) == w]
+            if not rows:
+                continue
+            nr = _pow2_ceil(len(rows))
+            # fancy-indexed gathers below are fresh arrays (never views of
+            # the mutating host tables), safe to hand the async step
+            toks = np.zeros((nr, 1), np.int32)
+            toks[:len(rows)] = toks_host[rows]
+            tbl = np.zeros((nr, w), np.int32)
+            tbl[:len(rows)] = self.block_table[rows][:, :w]
+            lens = np.zeros(nr, np.int32)
+            lens[:len(rows)] = self.seq_lens[rows]
+            logits, kp, vp = self._step_paged(
+                self.params, jnp.asarray(toks), kp, vp,
+                jnp.asarray(tbl), jnp.asarray(lens))
+            sub = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for j, i in enumerate(rows):
+                nxt[i] = int(sub[j])
+            self.counters["bucket_substeps"] += 1
+        pp.k_pages, pp.v_pages = kp, vp
+        return jnp.asarray(nxt)
+
     def step(self) -> list[tuple[int, int, bool]]:
         """One continuous-batching iteration.
         Returns [(req_id, token, finished)] for active slots."""
@@ -1412,31 +1594,18 @@ class DecodeWorker:
             return []
         self.counters["steps"] += 1
         if self.substrate == "paged":
-            pp = self.page_pool
-            pt = pp.page_tokens
             active = [i for i, s in enumerate(self.slots) if s is not None]
             self._prepare_writes(active)
-            # live page span: deepest active slot, padded to a power of two
-            # so the jitted step sees at most log2(max_pages) shapes
-            need = max(int(self.seq_lens[i]) // pt + 1 for i in active)
-            width = 1
-            while width < need:
-                width *= 2
-            width = min(width, self.max_pages)
-            # .copy(): jax CPU zero-copies 2-D numpy buffers, and the host
-            # tables mutate (growth/COW/length bumps) while the async step
-            # still reads them — hand jit a frozen snapshot
-            tbl = jnp.asarray(self.block_table[:, :width].copy())
-            lens = jnp.asarray(self.seq_lens.copy())
-            logits, kp, vp = self._step_paged(
-                self.params, self.tokens, pp.k_pages, pp.v_pages, tbl, lens)
-            pp.k_pages, pp.v_pages = kp, vp
+            if self.width_buckets > 1:
+                nxt = self._step_bucketed(active)
+            else:
+                nxt = self._step_full(active)
             for i in active:
                 self.seq_lens[i] += 1
         else:
             logits, self.caches = self._step(self.params, self.tokens,
                                              self.caches)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         out = []
         for i, s in enumerate(self.slots):

@@ -225,10 +225,23 @@ class DevicePagePool:
       appends into it; full prefix pages are never written during decode,
       so in practice COW only triggers at a shared partial tail page
       (e.g. one ``PrefillResult`` joined into several slots).
+    * MESH SHARDING (``mesh=(data, model)``): the page slabs become ONE
+      global array laid out under ``P(None, 'data', None, 'model', None)``
+      — the page axis splits into per-data-shard BANKS of ``n_pages``
+      pages each (so capacity scales ×data) and the KV-head axis stripes
+      over the model axis (so per-device slab bytes shrink ÷model). Every
+      host-side structure here stays LOGICAL and global: page ids are
+      global (``bank_of`` recovers the bank, local id = global %
+      ``bank_pages``, and global ids ≡ 0 mod ``bank_pages`` are each
+      bank's reserved null page), refcounts/generations are one global
+      array, and the registry/free lists are per bank because a data
+      shard's rows can only attend pages resident on that shard. With
+      ``mesh=None`` everything degrades to the original single-bank pool
+      (``self.free``/``self.runs``/``self._lru`` ARE bank 0's objects).
     """
 
     def __init__(self, cfg: ModelConfig, *, n_pages: int,
-                 page_tokens: int = 64) -> None:
+                 page_tokens: int = 64, mesh=None) -> None:
         if BLOCK_TOKENS % page_tokens:
             raise ValueError(
                 f"page_tokens={page_tokens} must divide the pool block "
@@ -236,25 +249,71 @@ class DevicePagePool:
         La, KV, Dh = cfg.attention_layers, cfg.n_kv_heads, cfg.head_dim
         self.cfg = cfg
         self.page_tokens = page_tokens
-        self.k_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
-        self.v_pages = jnp.zeros((La, n_pages, page_tokens, KV, Dh), DTYPE)
+        self.mesh = mesh
+        d = 1
+        if mesh is not None:
+            d = int(mesh.shape.get("data", 1))
+            m = int(mesh.shape.get("model", 1))
+            if KV % m:
+                raise ValueError(
+                    f"{KV} kv heads do not stripe over model={m} shards")
+        self.n_banks = d
+        self.bank_pages = n_pages       # per-bank budget incl. its null page
+        total = d * n_pages
+        shape = (La, total, page_tokens, KV, Dh)
+        if mesh is None:
+            self._sharding = None
+            self.k_pages = jnp.zeros(shape, DTYPE)
+            self.v_pages = jnp.zeros(shape, DTYPE)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._sharding = NamedSharding(
+                mesh, PartitionSpec(None, "data", None, "model", None))
+            self.k_pages = jax.device_put(jnp.zeros(shape, DTYPE),
+                                          self._sharding)
+            self.v_pages = jax.device_put(jnp.zeros(shape, DTYPE),
+                                          self._sharding)
         # reentrant: alloc -> eviction -> unregister -> release re-enters
         self._lock = threading.RLock()
-        self.free: list[int] = list(range(n_pages - 1, 0, -1))  #: guarded_by self._lock
-        self.refs = np.zeros(n_pages, np.int32)  #: guarded_by self._lock
-        self.gens = np.zeros(n_pages, np.int64)  #: guarded_by self._lock
-        self.runs: dict[int, list[int]] = {}     #: guarded_by self._lock
-        self._lru: list[int] = []                #: guarded_by self._lock
+        # one free list / registry / LRU per bank; bank 0's objects are
+        # also exposed under the historical names so single-bank callers
+        # (and every pre-mesh test) see the original pool unchanged
+        self._bank_free: list[list[int]] = [           #: guarded_by self._lock
+            list(range((b + 1) * n_pages - 1, b * n_pages, -1))
+            for b in range(d)]
+        self.free: list[int] = self._bank_free[0]  #: guarded_by self._lock
+        self.refs = np.zeros(total, np.int32)  #: guarded_by self._lock
+        self.gens = np.zeros(total, np.int64)  #: guarded_by self._lock
+        self._bank_runs: list[dict[int, list[int]]] = [  #: guarded_by self._lock
+            {} for _ in range(d)]
+        self._bank_lru: list[list[int]] = [    #: guarded_by self._lock
+            [] for _ in range(d)]
+        self.runs: dict[int, list[int]] = self._bank_runs[0]  #: guarded_by self._lock
+        self._lru: list[int] = self._bank_lru[0]   #: guarded_by self._lock
         #: guarded_by self._lock
         self.counters = dict(pages_written=0, shared_adoptions=0,
                              cow_copies=0, registry_evictions=0,
                              alloc_failures=0, pages_exported=0,
                              pages_imported=0)
 
+    def _pin(self, x: jax.Array) -> jax.Array:
+        """Keep a slab on its mesh sharding after an eager ``.at[]``
+        update (eager updates preserve input shardings today; this guards
+        the invariant rather than trusting it)."""
+        if self._sharding is not None and x.sharding != self._sharding:
+            x = jax.device_put(x, self._sharding)
+        return x
+
     # ---- geometry ------------------------------------------------------
     @property
     def n_pages(self) -> int:
+        """GLOBAL page count across every bank (``n_banks·bank_pages``
+        — the historical meaning for an unmeshed single-bank pool)."""
         return self.k_pages.shape[1]
+
+    def bank_of(self, page: int) -> int:
+        """Data-shard bank a global page id lives on."""
+        return page // self.bank_pages
 
     @property
     def pages_per_block(self) -> int:
@@ -270,59 +329,83 @@ class DevicePagePool:
 
     @property
     def free_pages(self) -> int:
+        """Mesh-wide LOGICAL free pages (sum over banks)."""
         with self._lock:
-            return len(self.free)
+            return sum(len(f) for f in self._bank_free)
 
     @property
     def occupancy(self) -> float:
-        """Fraction of usable pages (page 0 excluded) currently held."""
-        cap = self.n_pages - 1
+        """Fraction of usable pages (null pages excluded) currently held."""
+        cap = self.n_pages - self.n_banks
         return self.used_pages / cap if cap else 1.0
 
     def pressure(self) -> dict:
-        """Occupancy snapshot for admission backpressure. ``pinned`` pages
-        (held by a live slot or staged result, not reclaimable) are the
-        signal that matters: registry-only runs evict on demand, so high
-        occupancy with low ``pinned_frac`` is a warm cache, not pressure."""
+        """Occupancy snapshot for admission backpressure — mesh-wide and
+        LOGICAL: one page counted once no matter how its bytes stripe over
+        the model axis, capacity summed over the data banks. ``pinned``
+        pages (held by a live slot or staged result, not reclaimable) are
+        the signal that matters: registry-only runs evict on demand, so
+        high occupancy with low ``pinned_frac`` is a warm cache, not
+        pressure."""
         with self._lock:
-            cap = self.n_pages - 1
-            evictable = sum(len(self.runs[h])
-                            for h in self._evictable_locked())
+            cap = self.n_pages - self.n_banks
+            evictable = sum(
+                len(self._bank_runs[b][h])
+                for b in range(self.n_banks)
+                for h in self._evictable_locked(b))
             used = int((self.refs > 0).sum())
             pinned = used - evictable
             return dict(
-                capacity=cap, free=len(self.free), used=used,
-                evictable=evictable, pinned=pinned,
+                capacity=cap, free=sum(len(f) for f in self._bank_free),
+                used=used, evictable=evictable, pinned=pinned,
                 occupancy=used / cap if cap else 1.0,
                 pinned_frac=pinned / cap if cap else 1.0)
 
     # ---- refcounted allocation ----------------------------------------
-    def _evictable_locked(self) -> list[int]:
-        """Registered block hashes held ONLY by the registry, LRU first.
-        Caller holds ``self._lock``."""
-        return [h for h in self._lru
-                if all(self.refs[p] == 1 for p in self.runs[h])]
+    def _evictable_locked(self, bank: int = 0) -> list[int]:
+        """One bank's registered block hashes held ONLY by the registry,
+        LRU first. Caller holds ``self._lock``."""
+        return [h for h in self._bank_lru[bank]
+                if all(self.refs[p] == 1 for p in self._bank_runs[bank][h])]
 
-    def alloc(self, n: int) -> list[int]:
-        """Take ``n`` fresh pages (refcount 1 each), evicting registry-only
-        runs LRU when the free list runs short. Raises ``MemoryError``
-        (taking nothing) if pressure can't be relieved."""
+    def alloc(self, n: int, bank: int = 0) -> list[int]:
+        """Take ``n`` fresh pages from one bank (refcount 1 each),
+        evicting that bank's registry-only runs LRU when its free list
+        runs short. Raises ``MemoryError`` (taking nothing) if pressure
+        can't be relieved. Returned ids are GLOBAL."""
         with self._lock:
-            if len(self.free) < n:
-                for h in self._evictable_locked():
-                    self.unregister(h)
-                    if len(self.free) >= n:
+            free = self._bank_free[bank]
+            if len(free) < n:
+                for h in self._evictable_locked(bank):
+                    self.unregister(h, bank=bank)
+                    if len(free) >= n:
                         break
-            if len(self.free) < n:
+            if len(free) < n:
                 self.counters["alloc_failures"] += 1
                 raise MemoryError(
                     f"device page pool OOM: want {n} pages, "
-                    f"free {len(self.free)} of {self.n_pages - 1}")
-            pages = [self.free.pop() for _ in range(n)]
+                    f"free {len(free)} of {self.bank_pages - 1} "
+                    f"in bank {bank}")
+            pages = [free.pop() for _ in range(n)]
             for p in pages:
                 self.refs[p] = 1
                 self.gens[p] += 1
             return pages
+
+    def best_stage_bank(self, hash_ids: list[int]) -> int:
+        """Bank a fresh staging run should target: deepest registered
+        prefix of this chain wins (maximises zero-copy adoption), free
+        pages break ties (spreads load across the data shards)."""
+        if self.n_banks == 1:
+            return 0
+        with self._lock:
+            best, best_key = 0, None
+            for b in range(self.n_banks):
+                key = (self.lookup_chain(hash_ids, bank=b),
+                       len(self._bank_free[b]), -b)
+                if best_key is None or key > best_key:
+                    best, best_key = b, key
+            return best
 
     def gens_of(self, pages: list[int]) -> list[int]:
         """Allocation generations of a page run — a holder snapshots them
@@ -347,52 +430,67 @@ class DevicePagePool:
                     raise RuntimeError(f"double free of page {p}")
                 self.refs[p] -= 1
                 if self.refs[p] == 0:
-                    self.free.append(p)
+                    self._bank_free[self.bank_of(p)].append(p)
 
     # ---- block-hash registry (cross-slot prefix sharing) ---------------
     def register_block(self, hash_id: int, pages: list[int]) -> None:
         """Publish a full block's page run for later chains to adopt.
-        The registry holds one reference of its own."""
+        The registry holds one reference of its own. The run's bank is
+        implied by its pages (a data shard's rows can only attend pages
+        resident on that shard, so sharing never crosses banks — the same
+        prefix may register independently per bank)."""
         assert len(pages) == self.pages_per_block
+        bank = self.bank_of(pages[0])
+        assert all(self.bank_of(p) == bank for p in pages), \
+            f"page run straddles banks: {pages}"
         with self._lock:
-            if hash_id in self.runs:        # racing identical prefills
+            if hash_id in self._bank_runs[bank]:  # racing identical prefills
                 return
             self.retain(pages)
-            self.runs[hash_id] = list(pages)
-            self._lru.append(hash_id)
+            self._bank_runs[bank][hash_id] = list(pages)
+            self._bank_lru[bank].append(hash_id)
 
-    def unregister(self, hash_id: int) -> None:
+    def unregister(self, hash_id: int, bank: Optional[int] = None) -> None:
+        """Evict a registered run — from one bank, or (``bank=None``)
+        from every bank holding an independent copy of it."""
+        banks = range(self.n_banks) if bank is None else (bank,)
         with self._lock:
-            pages = self.runs.pop(hash_id, None)
-            if pages is None:
-                return
-            self._lru.remove(hash_id)
-            self.release(pages)
-            self.counters["registry_evictions"] += 1
+            for b in banks:
+                pages = self._bank_runs[b].pop(hash_id, None)
+                if pages is None:
+                    continue
+                self._bank_lru[b].remove(hash_id)
+                self.release(pages)
+                self.counters["registry_evictions"] += 1
 
-    def lookup_chain(self, hash_ids: list[int]) -> int:
-        """Deepest consecutive registered prefix (no side effects)."""
+    def lookup_chain(self, hash_ids: list[int], bank: int = 0) -> int:
+        """Deepest consecutive registered prefix in one bank (no side
+        effects)."""
         with self._lock:
+            runs = self._bank_runs[bank]
             n = 0
             for h in hash_ids:
-                if h not in self.runs:
+                if h not in runs:
                     break
                 n += 1
             return n
 
-    def adopt_chain(self, hash_ids: list[int]) -> tuple[int, list[int]]:
-        """Retain + return the page runs of the chain's registered prefix:
-        (n_blocks_adopted, flat page ids). The caller owns one reference
-        per page; physical pages are SHARED with every other adopter."""
+    def adopt_chain(self, hash_ids: list[int],
+                    bank: int = 0) -> tuple[int, list[int]]:
+        """Retain + return the page runs of the chain's registered prefix
+        in one bank: (n_blocks_adopted, flat page ids). The caller owns
+        one reference per page; physical pages are SHARED with every
+        other adopter of that bank."""
         with self._lock:
-            n = self.lookup_chain(hash_ids)
+            n = self.lookup_chain(hash_ids, bank=bank)
+            runs, lru = self._bank_runs[bank], self._bank_lru[bank]
             pages: list[int] = []
             for h in hash_ids[:n]:
-                run = self.runs[h]
+                run = runs[h]
                 self.retain(run)
                 pages.extend(run)
-                self._lru.remove(h)         # touch recency
-                self._lru.append(h)
+                lru.remove(h)               # touch recency
+                lru.append(h)
             if n:
                 self.counters["shared_adoptions"] += n
             return n, pages
@@ -416,21 +514,26 @@ class DevicePagePool:
         idx = jnp.asarray(pages, jnp.int32)
         shape = (L, n, pt) + k.shape[2:]
         with self._lock:
-            self.k_pages = self.k_pages.at[:, idx].set(k.reshape(shape))
-            self.v_pages = self.v_pages.at[:, idx].set(v.reshape(shape))
+            self.k_pages = self._pin(
+                self.k_pages.at[:, idx].set(k.reshape(shape)))
+            self.v_pages = self._pin(
+                self.v_pages.at[:, idx].set(v.reshape(shape)))
             self.counters["pages_written"] += n
 
     def make_writable(self, page: int) -> int:
         """Copy-on-write: return a page id safe to append into. A page
         with a single owner is returned as-is; a shared page is copied to
-        a fresh page (the caller must drop its reference to the old id
-        and point its table at the new one)."""
+        a fresh page IN THE SAME BANK (a slot's pages must stay on its
+        data shard; the caller must drop its reference to the old id and
+        point its table at the new one)."""
         with self._lock:
             if self.refs[page] == 1:
                 return page
-            (new,) = self.alloc(1)
-            self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, page])
-            self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, page])
+            (new,) = self.alloc(1, bank=self.bank_of(page))
+            self.k_pages = self._pin(
+                self.k_pages.at[:, new].set(self.k_pages[:, page]))
+            self.v_pages = self._pin(
+                self.v_pages.at[:, new].set(self.v_pages[:, page]))
             self.release([page])
             self.counters["cow_copies"] += 1
             return new
@@ -455,13 +558,14 @@ class DevicePagePool:
         return k, v
 
     def import_run(self, k: np.ndarray, v: np.ndarray,
-                   n_tokens: int) -> list[int]:
-        """Promote host KV back into device pages: alloc a fresh run and
-        scatter ``(L, n_tokens, KV, Dh)`` into it. The caller owns one
-        reference per returned page (the inverse of ``export_run``; the
-        registry is NOT touched — use ``stage_run`` to re-share full
-        blocks). Raises ``MemoryError`` holding nothing."""
-        pages = self.alloc(self.pages_for(n_tokens))
+                   n_tokens: int, bank: int = 0) -> list[int]:
+        """Promote host KV back into device pages: alloc a fresh run in
+        one bank and scatter ``(L, n_tokens, KV, Dh)`` into it. The
+        caller owns one reference per returned page (the inverse of
+        ``export_run``; the registry is NOT touched — use ``stage_run``
+        to re-share full blocks). Raises ``MemoryError`` holding
+        nothing."""
+        pages = self.alloc(self.pages_for(n_tokens), bank=bank)
         try:
             self.write_run(pages, k[:, :n_tokens], v[:, :n_tokens])
         except BaseException:
@@ -492,16 +596,25 @@ class DevicePagePool:
             return out
 
     def check_leaks(self) -> None:
-        """Invariant: every non-free page is referenced and vice versa
-        (property tests call this after each op)."""
+        """Invariant: every non-free page is referenced and vice versa,
+        per bank; each bank's null page is never allocated (property
+        tests call this after each op)."""
         with self._lock:
-            free = set(self.free)
-            assert 0 not in free
-            for p in range(1, self.n_pages):
-                if p in free:
+            n_free = 0
+            free: set[int] = set()
+            for b, bank_free in enumerate(self._bank_free):
+                n_free += len(bank_free)
+                free |= set(bank_free)
+                assert all(self.bank_of(p) == b for p in bank_free), \
+                    f"bank {b} free list holds foreign pages"
+            for p in range(self.n_pages):
+                if p % self.bank_pages == 0:    # a bank's null page
+                    assert p not in free and self.refs[p] == 0, \
+                        f"null page {p} entered circulation"
+                elif p in free:
                     assert self.refs[p] == 0, \
                         f"freed page {p} still referenced"
                 else:
                     assert self.refs[p] > 0, \
                         f"page {p} leaked (no ref, not free)"
-            assert len(free) == len(self.free), "free list duplicates"
+            assert len(free) == n_free, "free list duplicates"

@@ -21,3 +21,13 @@ class DecodeWorker:
     def host_only(self, width):
         # host-side reads of the live table never reach the jit: fine
         return int(self.block_table[:, :width].sum())
+
+    def step_star(self, width):
+        # splatting copies is as safe as passing them positionally
+        args = (self.block_table[:, :width].copy(), self.seq_lens.copy())
+        return self._step(*args)
+
+    def step_fresh(self, width):
+        # an arithmetic result is a fresh array, not a view of the table
+        local = self.block_table[:, :width] % 7
+        return self._step(local, self.seq_lens.copy())

@@ -22,3 +22,9 @@ class DecodeWorker:
 
     def step_direct(self):
         return self._step(self.block_table, self.seq_lens)  # 2 findings
+
+    def step_star(self, width):
+        # *args splat must not launder taint: the tuple still holds live
+        # views of the numpy table
+        args = (self.block_table[:, :width], self.seq_lens)
+        return self._step(*args)                       # 1 finding

@@ -100,6 +100,8 @@ class _FuncScan:
             return e.attr in self.np_attrs, f"self.{e.attr}"
         if isinstance(e, ast.Subscript):
             return self.taint(e.value)
+        if isinstance(e, ast.Starred):
+            return self.taint(e.value)
         if isinstance(e, (ast.Tuple, ast.List)):
             for el in e.elts:
                 t, root = self.taint(el)
